@@ -1,0 +1,124 @@
+"""Paper Table 9: LPRS (target-latency chunking) vs static token budget
+under high-concurrency (0.1 s) and regular (1.0 s) arrivals."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.bench_predictor import collect_profile
+from benchmarks.common import (
+    BASE, calibrate_round_ms, fmt_table, save_json, scaled,
+)
+from repro.core.lprs import LPRSConfig
+from repro.core.predictor import LatencyPredictor, PredictorConfig, bucket_and_downsample
+from repro.core.scheduler import SchedulerConfig
+from repro.engine.costmodel import CostModel
+from repro.engine.simulator import run_policy
+from repro.engine.workload import uniform_arrivals
+
+MAX_SEQS = 64
+BUDGET = 1024
+
+
+def pcts(xs, keys=(50, 80, 90, 99)):
+    arr = np.asarray([x for x in xs if x is not None], np.float64)
+    return {p: float(np.percentile(arr, p)) for p in keys}
+
+
+def train_predictor(k: float, quick: bool) -> LatencyPredictor:
+    X, y = collect_profile(k, 4000 if quick else 12_000, seed=7)
+    keep, w = bucket_and_downsample(X[:, 12])
+    pred = LatencyPredictor(
+        PredictorConfig(epochs=50 if quick else 150, dropout=0.0)
+    )
+    pred.fit(X[keep], y[keep], sample_weights=w)
+    return pred
+
+
+def run_one(policy_label, interval, k, predictor, target_ms, n=1000, seed=3,
+            want_rounds=False):
+    # paper regime: prefill-heavy prompts (multi-round at budget 1024),
+    # short generations; high-concurrency = busy but stable (~80% util)
+    import math
+
+    def sampler(rng):
+        return int(np.clip(round(rng.lognormal(math.log(420.0), 0.8)),
+                           16, 3968))
+
+    reqs = uniform_arrivals(n, interval, prompt_sampler=sampler,
+                            max_seq_len=4096, max_new_tokens=32, seed=seed)
+    lprs = None
+    if policy_label == "lprs":
+        lprs = LPRSConfig(target_latency_ms=target_ms, search_delta=128,
+                          lambda_under=1.0, lambda_over=3.0)
+    res = run_policy(
+        reqs,
+        SchedulerConfig(policy="fcfs", token_budget=BUDGET, max_seqs=MAX_SEQS,
+                        lprs=lprs),
+        cost_model=CostModel(scaled(BASE, k)),
+        predictor=predictor if lprs else None,
+        collect_samples=want_rounds,
+    )
+    pf = pcts([r.prefill_e2e() * 1e3 for r in reqs])
+    full = pcts([r.e2e_latency() * 1e3 for r in reqs])
+    rounds = None
+    if want_rounds and res.samples:
+        feats, lats = res.samples
+        rounds = lats[feats[:, 0] > 0]      # rounds that carry prefill work
+    return pf, full, rounds
+
+
+def main(quick: bool = False):
+    # §4.4 regime: the engine's full-budget round costs ~105 ms (paper's T*)
+    k = calibrate_round_ms(105.0, BUDGET)
+    pred = train_predictor(k, quick)
+    target_ms = 105.0
+
+    n = 300 if quick else 1000
+    out = {}
+    for label, interval in (("high 0.1s", 0.1), ("regular 1.0s", 1.0)):
+        rows = []
+        ctl_rows = []
+        for policy in ("lprs", "budget"):
+            pf, full, rounds = run_one(policy, interval, k, pred, target_ms,
+                                       n=n, want_rounds=True)
+            out[f"{label}/{policy}"] = {"prefill": pf, "full": full}
+            rows.append([
+                policy.upper(),
+                *(f"{pf[p]:.1f}" for p in (50, 80, 90, 99)),
+                *(f"{full[p]:.1f}" for p in (50, 80, 90, 99)),
+            ])
+            if rounds is not None:
+                over = float(np.mean(rounds > 1.2 * target_ms))
+                dev = float(np.mean(np.abs(rounds - target_ms)))
+                ctl_rows.append([
+                    policy.upper(), f"{np.percentile(rounds, 50):.1f}",
+                    f"{np.percentile(rounds, 99):.1f}", f"{dev:.1f}",
+                    f"{over:.1%}",
+                ])
+        print(fmt_table(
+            f"Table 9 — LPRS (T*={target_ms:.0f} ms) vs token budget "
+            f"({BUDGET}) | {label} arrivals — latency ms",
+            ["Policy", "pf P50", "pf P80", "pf P90", "pf P99",
+             "req P50", "req P80", "req P90", "req P99"], rows,
+        ))
+        print(fmt_table(
+            f"Round-time controllability (LPRS's direct objective) | {label}",
+            ["Policy", "round P50", "round P99", "mean |dev from T*|",
+             ">1.2 T*"], ctl_rows,
+        ))
+    hi_l = out["high 0.1s/lprs"]["full"][99]
+    hi_b = out["high 0.1s/budget"]["full"][99]
+    print(f"  high concurrency P99 request: LPRS {hi_l:.1f} vs budget "
+          f"{hi_b:.1f} ms ({100 * (hi_l - hi_b) / hi_b:+.1f}%) "
+          f"— paper: 952.56 vs 986.93 (-3.5%).")
+    print("  NOTE (EXPERIMENTS.md §Repro): in a linear-deterministic cost "
+          "simulator max-fill is throughput-optimal, so LPRS's E2E tail win "
+          "does not transfer; its round-time control target does (above).")
+    save_json("bench_lprs.json", {
+        k2: {kk: vv for kk, vv in v.items()} for k2, v in out.items()
+    })
+    return out
+
+
+if __name__ == "__main__":
+    main()

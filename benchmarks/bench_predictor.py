@@ -1,0 +1,108 @@
+"""Paper Table 8: latency-predictor accuracy.
+
+The profiling dataset is collected exactly as §3.2.1 describes — running the
+token-budget scheduler over diverse arrival rates / length mixes /
+concurrency levels and recording (16-dim features, per-round latency) — with
+the calibrated cost model standing in for the instrumented GPU (its noise
+term models real measurement jitter)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import BASE, calibrate_multiplier, fmt_table, save_json, scaled
+from repro.core.predictor import (
+    LatencyPredictor, PredictorConfig, bucket_and_downsample,
+)
+from repro.core.scheduler import SchedulerConfig
+from repro.engine.costmodel import CostModel
+from repro.engine.simulator import run_policy
+from repro.engine.workload import WorkloadSpec, sharegpt_like, uniform_arrivals
+
+TARGET_SAMPLES = 36_868      # paper's profiling-set size
+
+
+def collect_profile(k: float, target: int = TARGET_SAMPLES, seed: int = 0,
+                    budget: int = 1024, max_seqs: int = 64):
+    """§3.2.1 step 3: run the token-budget scheduler under diverse arrival
+    rates, prompt-length mixtures and concurrency levels — at the DEPLOYED
+    budget config (the paper profiles the engine it will serve with, not a
+    grid of engines), then clean the raw samples."""
+    feats, lats = [], []
+    cm = scaled(BASE, k)
+    cfgs = []
+    s = seed
+    for interval in (0.02, 0.05, 0.1, 0.3):
+        for max_ctx in (256, 512, 1024):
+            for max_new in (64, 256):
+                cfgs.append((interval, max_ctx, max_new, s))
+                s += 1
+    i = 0
+    while sum(len(l) for l in lats) < target:
+        interval, max_ctx, max_new, s = cfgs[i % len(cfgs)]
+        i += 1
+        reqs = sharegpt_like(WorkloadSpec(
+            n_requests=300, inter_arrival_s=interval, max_context=max_ctx,
+            max_new_tokens=max_new, seed=s + 1000 * i,
+        ))
+        res = run_policy(
+            reqs,
+            SchedulerConfig(policy="fcfs", token_budget=budget,
+                            max_seqs=max_seqs),
+            cost_model=CostModel(cm),
+            collect_samples=True,
+        )
+        if res.samples is not None:
+            feats.append(res.samples[0])
+            lats.append(res.samples[1])
+    X = np.concatenate(feats)[:target]
+    y = np.concatenate(lats)[:target]
+    return X, y
+
+
+def main(quick: bool = False):
+    k = calibrate_multiplier()
+    target = 6000 if quick else TARGET_SAMPLES
+    X, y = collect_profile(k, target)
+    print(f"  profiling dataset: {len(y)} rounds "
+          f"(paper: {TARGET_SAMPLES}), latency p50 {np.median(y):.1f} ms")
+
+    # 8:1:1 split (paper)
+    n = len(y)
+    idx = np.random.default_rng(0).permutation(n)
+    tr, va, te = np.split(idx, [int(0.8 * n), int(0.9 * n)])
+
+    keep, w = bucket_and_downsample(X[tr][:, 12])
+    rows = []
+    out = {}
+    for label, cfg in (
+        ("paper-exact (Table 7)", PredictorConfig(epochs=60 if quick else 300)),
+        ("tuned (dropout 0)", PredictorConfig(epochs=60 if quick else 300,
+                                              dropout=0.0)),
+    ):
+        pred = LatencyPredictor(cfg)
+        pred.fit(X[tr][keep], y[tr][keep], sample_weights=w)
+        m = pred.evaluate(X[te], y[te])
+        out[label] = m
+        rows.append([
+            label,
+            f"{m['mae_ms']:.2f}", f"{m['rmse_ms']:.2f}", f"{m['mape_pct']:.2f}%",
+            f"{m['p50_ms']:.2f}", f"{m['p99_ms']:.2f}",
+            f"{m['within_5ms_pct']:.1f}%", f"{m['within_10ms_pct']:.1f}%",
+        ])
+    print(fmt_table(
+        f"Table 8 — predictor accuracy on the held-out test set (n={len(te)})",
+        ["Variant", "MAE", "RMSE", "MAPE", "P50", "P99", "<=5ms", "<=10ms"],
+        rows,
+    ))
+    med = float(np.median(y))
+    m = out["tuned (dropout 0)"]
+    print(f"  paper: MAE 1.13 ms on ~100 ms rounds (1.1% of scale); "
+          f"ours: MAE {m['mae_ms']:.1f} ms on {med:.0f} ms rounds "
+          f"({100 * m['mae_ms'] / med:.1f}% of scale), MAPE {m['mape_pct']:.2f}% "
+          f"(paper 1.26%)")
+    save_json("bench_predictor.json", {"metrics": out, "n_samples": int(n)})
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""Shared benchmark utilities: cost-model calibration to the paper's load
+regime, table formatting, result persistence.
+
+Calibration: the paper runs Qwen3-8B on one RTX 4090 with 200 ShareGPT
+requests at 0.1 s inter-arrival (max ctx/gen 512) and measures FCFS mean E2E
+~118.7 s at chunk=256 — a heavily overloaded regime (queueing dominates).
+We reproduce the REGIME, not the GPU: a single global speed multiplier on the
+analytic cost model is bisected so FCFS/chunk-256 mean E2E lands at the
+paper's operating point.  All policies then run under the identical
+calibrated engine, so RELATIVE improvements (the paper's claims) are
+apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.scheduler import SchedulerConfig
+from repro.engine.costmodel import CostModel, CostModelConfig
+from repro.engine.simulator import run_policy
+from repro.engine.workload import WorkloadSpec, sharegpt_like
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+
+# base per-token costs (shape of the latency function); the calibrated
+# multiplier scales all dynamic terms together
+BASE = CostModelConfig(
+    c0_ms=2.0, c_prefill_ms=0.045, c_attn_ms=4e-6, c_decode_ms=0.10,
+    c_ctx_ms=3.5e-5, c_seq_ms=0.08, noise_std=0.02,
+)
+
+PAPER_TARGET_E2E_S = 118.72      # Table 4, FCFS chunk=256 mean E2E
+_CAL_CACHE: Dict[str, float] = {}
+
+
+def scaled(cfg: CostModelConfig, k: float) -> CostModelConfig:
+    # fixed per-round overhead grows sub-linearly (kernel launch / host code
+    # does not slow down with model size as much as the math does)
+    return dataclasses.replace(
+        cfg,
+        c0_ms=cfg.c0_ms * k ** 0.5,
+        c_prefill_ms=cfg.c_prefill_ms * k,
+        c_attn_ms=cfg.c_attn_ms * k,
+        c_decode_ms=cfg.c_decode_ms * k,
+        c_ctx_ms=cfg.c_ctx_ms * k,
+        c_seq_ms=cfg.c_seq_ms * k,
+        c_mix_ms=cfg.c_mix_ms * k,
+    )
+
+
+def paper_workload(n: int = 200, seed: int = 0) -> List:
+    return sharegpt_like(WorkloadSpec(
+        n_requests=n, inter_arrival_s=0.1, max_context=512,
+        max_new_tokens=512, seed=seed,
+    ))
+
+
+def calibrate_multiplier(
+    *, target_s: float = PAPER_TARGET_E2E_S, chunk: int = 256,
+    max_seqs: int = 48, n: int = 200, seed: int = 0, iters: int = 12,
+) -> float:
+    """Bisect the speed multiplier so FCFS mean E2E == target."""
+    key = f"{target_s}:{chunk}:{max_seqs}:{n}:{seed}"
+    if key in _CAL_CACHE:
+        return _CAL_CACHE[key]
+    lo, hi = 0.05, 500.0
+
+    def e2e(k: float) -> float:
+        res = run_policy(
+            paper_workload(n, seed),
+            SchedulerConfig(policy="fcfs", token_budget=chunk, max_seqs=max_seqs),
+            cost_model=CostModel(scaled(BASE, k)),
+        )
+        return res.report.e2e["mean"]
+
+    for _ in range(iters):
+        mid = (lo * hi) ** 0.5
+        if e2e(mid) < target_s:
+            lo = mid
+        else:
+            hi = mid
+    k = (lo * hi) ** 0.5
+    _CAL_CACHE[key] = k
+    return k
+
+
+def calibrate_round_ms(target_round_ms: float = 105.0, budget: int = 1024) -> float:
+    """Structural calibration for the LPRS/APC experiments (§4.4-4.5): pick
+    the speed multiplier so one FULL prefill round (budget tokens, fresh
+    context) costs the paper's ~105 ms — their engine's natural efficiency
+    point — instead of the Table-4 overload regime.  Closed form from the
+    linear cost model: c0*sqrt(k) + (c_prefill*B + c_seq)*k = target."""
+    a = BASE.c_prefill_ms * budget + BASE.c_seq_ms
+    b = BASE.c0_ms
+    c = -target_round_ms
+    # a*k + b*sqrt(k) + c = 0 -> quadratic in sqrt(k)
+    s = (-b + (b * b - 4 * a * c) ** 0.5) / (2 * a)
+    return s * s
+
+
+def fmt_table(title: str, header: List[str], rows: List[List], widths=None) -> str:
+    widths = widths or [max(len(str(r[i])) for r in rows + [header]) + 2
+                        for i in range(len(header))]
+    out = [f"\n### {title}"]
+    out.append("".join(str(h).ljust(w) for h, w in zip(header, widths)))
+    out.append("-" * sum(widths))
+    for r in rows:
+        out.append("".join(str(c).ljust(w) for c, w in zip(r, widths)))
+    return "\n".join(out)
+
+
+def save_json(name: str, obj) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name)
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+    return path
+
+
+def pct_change(new: float, old: float) -> str:
+    return f"{100.0 * (new - old) / old:+.2f}%"

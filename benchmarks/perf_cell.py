@@ -1,0 +1,63 @@
+"""Per-cell perf probe for the hillclimb loop:
+
+  PYTHONPATH=src python -m benchmarks.perf_cell --arch mixtral-8x7b \
+      --shape train_4k [--bytes] [--flops] [--coll]
+
+Lowers one cell on the single-pod mesh and prints the roofline terms plus a
+trip-count-scaled opcode breakdown of the dominant resource.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+
+from repro.launch import hlo_cost
+from repro.launch.dryrun import fmt_row, lower_cell
+from repro.launch.mesh import make_production_mesh
+
+
+def probe(arch: str, shape: str, *, show=("bytes",), top: int = 14,
+          **lower_kw):
+    mesh = make_production_mesh()
+    res, compiled = lower_cell(arch, shape, mesh, verbose=False,
+                               return_compiled=True, **lower_kw)
+    print(fmt_row(res))
+    if not res.ok:
+        return res
+    text = compiled.as_text()
+    if "bytes" in show:
+        print("  -- HBM bytes breakdown (per device) --")
+        for k, v in hlo_cost.bytes_breakdown(text, top):
+            print(f"  {v / 2**30:10.2f} GiB  {k}")
+    if "flops" in show:
+        print("  -- FLOPs breakdown (per device) --")
+        for k, v in hlo_cost.flop_breakdown(text, top):
+            print(f"  {v / 1e9:10.2f} GF   {k}")
+    if "coll" in show:
+        print("  -- collectives (per device) --")
+        for k, v in res.coll_breakdown.items():
+            if v and k != "n_ops":
+                print(f"  {v / 2**30 / 256:10.2f} GiB  {k}")
+            elif k == "n_ops":
+                print(f"  {v:10d}      {k}")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--bytes", action="store_true")
+    ap.add_argument("--flops", action="store_true")
+    ap.add_argument("--coll", action="store_true")
+    args = ap.parse_args()
+    show = [s for s in ("bytes", "flops", "coll")
+            if getattr(args, s)] or ["bytes"]
+    probe(args.arch, args.shape, show=show)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Roofline report (deliverable g): reads the dry-run JSON records and
+renders the per-(arch x shape x mesh) table with the three terms, dominant
+bottleneck, useful-FLOPs ratio, and the "what would move the dominant term"
+note.  Re-run the dry-run to refresh:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --quiet \
+      --json benchmarks/results/dryrun_singlepod.json
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List
+
+from benchmarks.common import RESULTS_DIR, fmt_table
+
+NOTES = {
+    ("memory", "train"): "flash-block fusion + wider microbatch amortizes "
+                         "weight streaming; remat policy tuning",
+    ("memory", "prefill"): "larger flash KV blocks; fuse norm/rope chains "
+                           "(Pallas kernel on TPU)",
+    ("memory", "decode"): "KV cache dtype (int8/fp8) or multi-token decode "
+                          "amortizes weight+cache streaming",
+    ("collective", "train"): "sequence-parallel reduce-scatter/all-gather "
+                             "decomposition of the TP all-reduces; overlap "
+                             "with FFN compute",
+    ("collective", "prefill"): "same TP-AR decomposition; 2D-sharded weight "
+                               "gather overlap across layers",
+    ("collective", "decode"): "shrink per-layer gathers by head-local "
+                              "layouts; batch multiple decode steps",
+    ("compute", "train"): "already MXU-bound: raise useful-FLOPs ratio "
+                          "(reduce remat recompute, MoE dispatch overhead)",
+    ("compute", "prefill"): "reduce masked-tile waste in causal flash loop",
+    ("compute", "decode"): "compute-bound decode indicates dispatch "
+                           "overhead, not math - fuse gather/unembed",
+}
+
+
+def shape_kind(shape: str) -> str:
+    return {"train_4k": "train", "prefill_32k": "prefill"}.get(shape, "decode")
+
+
+def load(path: str) -> List[Dict]:
+    with open(path) as f:
+        return json.load(f)
+
+
+def render(records: List[Dict], title: str) -> None:
+    rows = []
+    for r in sorted(records, key=lambda x: (x["arch"], x["shape"])):
+        if not r["ok"]:
+            rows.append([r["arch"], r["shape"], "FAIL", "", "", "", "", "", ""])
+            continue
+        rows.append([
+            r["arch"], r["shape"],
+            f"{r['compute_term_s'] * 1e3:,.1f}",
+            f"{r['memory_term_s'] * 1e3:,.1f}",
+            f"{r['collective_term_s'] * 1e3:,.1f}",
+            r["dominant"],
+            f"{r['useful_flops_ratio']:.3f}",
+            f"{r['roofline_fraction']:.4f}",
+            f"{r['peak_memory_mb'] / 1024:,.1f}",
+        ])
+    print(fmt_table(
+        title,
+        ["arch", "shape", "comp ms", "mem ms", "coll ms", "dominant",
+         "useful", "roofline", "GB/dev"],
+        rows,
+    ))
+
+
+def main(quick: bool = False):
+    for name, label in (
+        ("dryrun_singlepod.json", "Roofline — single-pod 16x16 (256 chips)"),
+        ("dryrun_multipod.json", "Dry-run — multi-pod 2x16x16 (512 chips)"),
+    ):
+        path = os.path.join(RESULTS_DIR, name)
+        if not os.path.exists(path):
+            print(f"  [roofline] missing {path}; run the dry-run first")
+            continue
+        recs = load(path)
+        render(recs, label)
+        n_ok = sum(1 for r in recs if r["ok"])
+        print(f"  {n_ok}/{len(recs)} cells OK")
+        if "single" in name:
+            for kind in ("train", "prefill", "decode"):
+                sub = [r for r in recs if r["ok"] and shape_kind(r["shape"]) == kind]
+                if not sub:
+                    continue
+                doms = {}
+                for r in sub:
+                    doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+                print(f"  {kind}: dominant terms {doms}")
+            print("\n  Iteration levers by (dominant term, phase):")
+            for (dom, kind), note in NOTES.items():
+                print(f"   - {dom}/{kind}: {note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Run every benchmark: ``PYTHONPATH=src python -m benchmarks.run [--quick]``.
+
+One module per paper table/figure (DESIGN.md §9):
+  bench_aging        Table 4 + Fig 4 + §4.3.1 decomposition + starvation stress
+  bench_sensitivity  Figs 5/6
+  bench_multireplica Table 5 + fault-tolerance scenarios
+  bench_predictor    Table 8
+  bench_lprs         Table 9
+  bench_apc          Table 10
+  bench_overhead     §3.1.4 O(k log n) claim
+  roofline           §Roofline report from the dry-run records
+"""
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    bench_aging, bench_apc, bench_lprs, bench_multireplica, bench_overhead,
+    bench_predictor, bench_sensitivity, roofline,
+)
+
+MODULES = [
+    ("Aging (Table 4, Fig 4)", bench_aging),
+    ("Sensitivity (Figs 5/6)", bench_sensitivity),
+    ("Multi-replica (Table 5)", bench_multireplica),
+    ("Predictor (Table 8)", bench_predictor),
+    ("LPRS (Table 9)", bench_lprs),
+    ("APC (Table 10)", bench_apc),
+    ("Scheduler overhead", bench_overhead),
+    ("Roofline", roofline),
+]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced request counts / epochs")
+    ap.add_argument("--only", default=None, help="substring filter")
+    args = ap.parse_args(argv)
+
+    failures = 0
+    for name, mod in MODULES:
+        if args.only and args.only.lower() not in name.lower():
+            continue
+        print(f"\n{'=' * 72}\n== {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            mod.main(quick=args.quick)
+            print(f"  [{name}] done in {time.time() - t0:.1f}s")
+        except Exception:
+            failures += 1
+            traceback.print_exc()
+            print(f"  [{name}] FAILED")
+    print(f"\n{'=' * 72}")
+    print(f"benchmarks complete: {len(MODULES) - failures}/{len(MODULES)} OK")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,28 @@
+"""Multi-pod serving/training dry-run for one architecture:
+
+  PYTHONPATH=src python examples/multipod_dryrun.py --arch mixtral-8x7b
+
+Lowers and compiles every applicable (shape) cell of the chosen arch on the
+single-pod (16x16) AND multi-pod (2x16x16) production meshes, printing the
+roofline terms — the exact machinery behind EXPERIMENTS.md §Dry-run.
+
+NOTE: must run as its own process (device count is forced to 512 before jax
+initializes, via repro.launch.dryrun's import-time XLA_FLAGS).
+"""
+import argparse
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import dryrun  # noqa: E402  (sets XLA_FLAGS first)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="mixtral-8x7b")
+    args = ap.parse_args()
+    return dryrun.main(["--arch", args.arch, "--both", "--quiet"])
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

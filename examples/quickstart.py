@@ -1,0 +1,50 @@
+"""Quickstart: the paper's full stack in ~60 lines.
+
+  PYTHONPATH=src python examples/quickstart.py
+
+1. Build a tiny llama-family model and a real chunked-prefill JAX engine.
+2. Serve a mixed workload under FCFS, then under Aging (§3.1).
+3. Compare TTFT/E2E — Aging reorders prefills, execution is identical.
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs import tiny_config
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.workload import WorkloadSpec, attach_prompt_tokens, sharegpt_like
+
+
+def run(policy: str) -> dict:
+    cfg = tiny_config("llama3.2-1b")
+    engine = JAXEngine(cfg, EngineConfig(n_slots=8, max_context=512))
+
+    # a short/long mixed workload (ShareGPT-like skew), real token ids
+    requests = sharegpt_like(WorkloadSpec(
+        n_requests=16, inter_arrival_s=0.02, max_context=256,
+        max_new_tokens=24, seed=0,
+    ))
+    attach_prompt_tokens(requests, cfg.vocab_size)
+
+    scheduler = ChunkedPrefillScheduler(SchedulerConfig(
+        policy=policy,          # "fcfs" | "sjf" | "aging"
+        alpha=1.0, beta=-0.1,   # aging: P_i = alpha*(wait) + beta*(remaining)
+        token_budget=64,        # B_max per scheduling round
+        max_seqs=8,
+    ))
+    result = serve(requests, scheduler, engine)
+    row = result.report.row()
+    print(f"{policy:6s}: finished {result.report.n_finished}/16 "
+          f"in {result.wall_s:.2f}s | mean TTFT {row['mean_ttft'] * 1e3:7.1f} ms "
+          f"| mean E2E {row['mean_e2e'] * 1e3:7.1f} ms")
+    return row
+
+
+if __name__ == "__main__":
+    print("serving 16 mixed requests on a tiny llama with real JAX execution\n")
+    fcfs = run("fcfs")
+    aging = run("aging")
+    d = 100 * (aging["mean_ttft"] - fcfs["mean_ttft"]) / fcfs["mean_ttft"]
+    print(f"\nAging vs FCFS mean TTFT: {d:+.1f}% "
+          "(negative = fairness-aware ordering helped)")

@@ -1,0 +1,240 @@
+"""The LPRS offline latency predictor (§3.2.1, Tables 7/8).
+
+Three-layer MLP (128, 64, 32), ReLU, dropout 0.1, trained with AdamW under a
+bucket-weighted asymmetric Huber loss: underestimating latency is penalized
+harder than overestimating (underestimates cause budget overflow online).
+
+Pure JAX; features are standardized with training-set statistics; data is
+bucketed by scheduled_tokens and overrepresented full-chunk buckets are
+downsampled (§3.2.1 step 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.features import N_FEATURES
+from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+
+
+@dataclass(frozen=True)
+class PredictorConfig:
+    hidden_sizes: Tuple[int, ...] = (128, 64, 32)
+    dropout: float = 0.1
+    epochs: int = 300
+    lr: float = 2e-3
+    weight_decay: float = 1e-3
+    batch_size: int = 256
+    # asymmetric Huber (Eq. 5)
+    huber_delta: float = 5.0        # ms (or log-units * 100 when log_target)
+    under_weight: float = 2.0       # penalty multiplier when y_hat < y
+    over_weight: float = 1.0
+    # optional: regress log-latency (False = paper-exact).  With the linear
+    # cost structure the direct target trains better; log helps only when
+    # the latency function is multiplicative.
+    log_target: bool = False
+    seed: int = 0
+
+
+def init_mlp(rng, cfg: PredictorConfig, n_in: int = N_FEATURES) -> Dict:
+    sizes = (n_in,) + tuple(cfg.hidden_sizes) + (1,)
+    params = {}
+    ks = jax.random.split(rng, len(sizes) - 1)
+    for i, (a, b) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"w{i}"] = jax.random.normal(ks[i], (a, b), jnp.float32) * np.sqrt(2.0 / a)
+        params[f"b{i}"] = jnp.zeros((b,), jnp.float32)
+    return params
+
+
+def mlp_apply(params: Dict, x, *, dropout: float = 0.0, rng=None):
+    n_layers = len(params) // 2
+    h = x
+    for i in range(n_layers):
+        h = h @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n_layers - 1:
+            h = jax.nn.relu(h)
+            if dropout > 0.0 and rng is not None:
+                keep = jax.random.bernoulli(jax.random.fold_in(rng, i), 1.0 - dropout, h.shape)
+                h = jnp.where(keep, h / (1.0 - dropout), 0.0)
+    return h[..., 0]
+
+
+def asymmetric_huber(y, y_hat, delta: float, w_under: float, w_over: float):
+    """Huber base with heavier penalty on underestimation (y_hat < y)."""
+    err = y_hat - y
+    a = jnp.abs(err)
+    base = jnp.where(a <= delta, 0.5 * a * a, delta * (a - 0.5 * delta))
+    side = jnp.where(err < 0, w_under, w_over)
+    return side * base
+
+
+class LatencyPredictor:
+    """Trained predictor with feature standardization baked in."""
+
+    def __init__(self, cfg: Optional[PredictorConfig] = None):
+        self.cfg = cfg or PredictorConfig()
+        self.params: Optional[Dict] = None
+        self.mean = np.zeros(N_FEATURES)
+        self.std = np.ones(N_FEATURES)
+        self.y_scale = 1.0
+        self._apply = jax.jit(lambda p, x: mlp_apply(p, x))
+
+    # -- inference ----------------------------------------------------------
+    def predict(self, features: np.ndarray) -> np.ndarray:
+        """features: (16,) or (n, 16) -> predicted latency (ms), same leading
+        shape."""
+        assert self.params is not None, "predictor not trained/loaded"
+        x = np.atleast_2d(np.asarray(features, np.float64))
+        xs = (x - self.mean) / self.std
+        out = np.asarray(self._apply(self.params, jnp.asarray(xs, jnp.float32)),
+                         np.float64)
+        out = out * self.y_scale
+        if self.cfg.log_target:
+            out = np.expm1(np.clip(out, -30.0, 30.0))
+        return out if features.ndim > 1 else float(out[0])
+
+    # -- training ------------------------------------------------------------
+    def fit(
+        self,
+        features: np.ndarray,      # (N, 16)
+        latencies: np.ndarray,     # (N,) ms
+        *,
+        sample_weights: Optional[np.ndarray] = None,
+        epochs: Optional[int] = None,
+        verbose: bool = False,
+    ) -> Dict[str, float]:
+        cfg = self.cfg
+        N = features.shape[0]
+        self.mean = features.mean(axis=0)
+        self.std = features.std(axis=0) + 1e-9
+        targets = np.log1p(latencies) if cfg.log_target else latencies
+        self.y_scale = float(np.std(targets) + 1e-9)
+        x = ((features - self.mean) / self.std).astype(np.float32)
+        y = (targets / self.y_scale).astype(np.float32)
+        w = (sample_weights if sample_weights is not None else np.ones(N)).astype(np.float32)
+
+        rng = jax.random.PRNGKey(cfg.seed)
+        params = init_mlp(rng, cfg)
+        opt_cfg = AdamWConfig(lr=cfg.lr, weight_decay=cfg.weight_decay)
+        opt = adamw_init(params)
+        delta = (cfg.huber_delta / 100.0 if cfg.log_target
+                 else cfg.huber_delta) / self.y_scale
+
+        @jax.jit
+        def step(params, opt, xb, yb, wb, drng):
+            def loss_fn(p):
+                pred = mlp_apply(p, xb, dropout=cfg.dropout, rng=drng)
+                l = asymmetric_huber(yb, pred, delta, cfg.under_weight, cfg.over_weight)
+                return jnp.sum(wb * l) / jnp.maximum(jnp.sum(wb), 1e-9)
+
+            loss, grads = jax.value_and_grad(loss_fn)(params)
+            params, opt, _ = adamw_update(opt_cfg, grads, opt, params)
+            return params, opt, loss
+
+        n_epochs = epochs or cfg.epochs
+        bs = min(cfg.batch_size, N)
+        rng_np = np.random.default_rng(cfg.seed)
+        last = 0.0
+        for ep in range(n_epochs):
+            perm = rng_np.permutation(N)
+            for s in range(0, N - bs + 1, bs):
+                idx = perm[s:s + bs]
+                params, opt, last = step(
+                    params, opt, x[idx], y[idx], w[idx],
+                    jax.random.fold_in(rng, ep * 100_000 + s),
+                )
+            if verbose and (ep % 50 == 0 or ep == n_epochs - 1):
+                print(f"  epoch {ep:4d} loss={float(last):.5f}")
+        self.params = params
+        return {"final_loss": float(last)}
+
+    # -- evaluation (Table 8 metrics) -------------------------------------------
+    def evaluate(self, features: np.ndarray, latencies: np.ndarray) -> Dict[str, float]:
+        pred = self.predict(features)
+        err = pred - latencies
+        abs_err = np.abs(err)
+        mape = float(np.mean(np.abs(err / np.maximum(np.abs(latencies), 1e-9)))) * 100
+        return {
+            "mae_ms": float(abs_err.mean()),
+            "rmse_ms": float(np.sqrt((err ** 2).mean())),
+            "mape_pct": mape,
+            "p50_ms": float(np.percentile(abs_err, 50)),
+            "p90_ms": float(np.percentile(abs_err, 90)),
+            "p95_ms": float(np.percentile(abs_err, 95)),
+            "p99_ms": float(np.percentile(abs_err, 99)),
+            "within_5ms_pct": float((abs_err <= 5.0).mean() * 100),
+            "within_10ms_pct": float((abs_err <= 10.0).mean() * 100),
+        }
+
+    # -- persistence -----------------------------------------------------------
+    def state_dict(self) -> Dict:
+        return {
+            "params": jax.tree.map(np.asarray, self.params),
+            "mean": self.mean,
+            "std": self.std,
+            "y_scale": self.y_scale,
+            "cfg": dataclasses.asdict(self.cfg),
+        }
+
+    @classmethod
+    def from_state(cls, state: Dict) -> "LatencyPredictor":
+        cfg = PredictorConfig(**{
+            k: tuple(v) if k == "hidden_sizes" else v for k, v in state["cfg"].items()
+        })
+        p = cls(cfg)
+        p.params = jax.tree.map(jnp.asarray, state["params"])
+        p.mean = np.asarray(state["mean"])
+        p.std = np.asarray(state["std"])
+        p.y_scale = float(state["y_scale"])
+        return p
+
+
+class AnalyticPredictor:
+    """Closed-form fallback/oracle predictor (linear cost model).  Used for
+    tests and as the simulator's ground truth generator."""
+
+    def __init__(self, c0=2.0, c_prefill=0.04, c_decode=0.06, c_ctx=2e-5, c_batch=0.05):
+        self.c = (c0, c_prefill, c_decode, c_ctx, c_batch)
+
+    def predict(self, features: np.ndarray) -> np.ndarray:
+        f = np.atleast_2d(np.asarray(features, np.float64))
+        c0, cp, cd, cc, cb = self.c
+        out = c0 + cp * f[..., 0] + cd * f[..., 1] + cc * f[..., 3] + cb * f[..., 2]
+        return out if np.asarray(features).ndim > 1 else float(out[0])
+
+
+def bucket_and_downsample(
+    scheduled_tokens: np.ndarray,
+    *,
+    n_buckets: int = 16,
+    max_bucket_frac: float = 0.25,
+    seed: int = 0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """§3.2.1 step 3: bucket samples by total scheduled tokens, downsample
+    overrepresented (full-chunk) buckets.  Returns (keep_idx, weights)."""
+    st = np.asarray(scheduled_tokens, np.float64)
+    N = len(st)
+    edges = np.quantile(st, np.linspace(0, 1, n_buckets + 1))
+    edges[-1] += 1
+    bucket = np.clip(np.searchsorted(edges, st, side="right") - 1, 0, n_buckets - 1)
+    rng = np.random.default_rng(seed)
+    keep = np.ones(N, bool)
+    cap = int(max_bucket_frac * N)
+    for b in range(n_buckets):
+        idx = np.where(bucket == b)[0]
+        if len(idx) > cap:
+            drop = rng.choice(idx, size=len(idx) - cap, replace=False)
+            keep[drop] = False
+    kept = np.where(keep)[0]
+    # bucket-aware weights: inverse sqrt frequency of the kept distribution
+    kb = bucket[kept]
+    counts = np.bincount(kb, minlength=n_buckets).astype(np.float64)
+    wts = 1.0 / np.sqrt(np.maximum(counts[kb], 1.0))
+    wts *= len(kept) / wts.sum()
+    return kept, wts

@@ -1,0 +1,94 @@
+"""Request model and lifecycle for chunked-prefill serving.
+
+State machine:  WAITING -> PREFILLING -> DECODING -> FINISHED
+A request may bounce between WAITING and PREFILLING across rounds (it returns
+to the prefill queue with updated priority after each chunk, per §3.1.3).
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+_req_counter = itertools.count()
+
+
+class RequestState(enum.Enum):
+    WAITING = "waiting"
+    PREFILLING = "prefilling"
+    DECODING = "decoding"
+    FINISHED = "finished"
+
+
+@dataclass
+class Request:
+    prompt_len: int
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    req_id: int = field(default_factory=lambda: next(_req_counter))
+    tenant: str = "default"
+    prompt_tokens: Optional[List[int]] = None      # real-engine mode
+
+    # progress
+    state: RequestState = RequestState.WAITING
+    prefill_done: int = 0
+    generated: int = 0
+    output_tokens: List[int] = field(default_factory=list)
+
+    # timestamps (set by the engine/simulator clock)
+    prefill_end_time: Optional[float] = None
+    first_token_time: Optional[float] = None
+    finish_time: Optional[float] = None
+    # scheduling accounting
+    rounds_scheduled: int = 0
+    chunks: List[int] = field(default_factory=list)
+
+    @property
+    def remaining_prefill(self) -> int:
+        return self.prompt_len - self.prefill_done
+
+    @property
+    def context_len(self) -> int:
+        return self.prefill_done + self.generated
+
+    @property
+    def is_prefill(self) -> bool:
+        return self.state in (RequestState.WAITING, RequestState.PREFILLING)
+
+    def receive_chunk(self, c: int) -> None:
+        assert 0 < c <= self.remaining_prefill, (c, self.remaining_prefill)
+        self.prefill_done += c
+        self.chunks.append(c)
+        self.rounds_scheduled += 1
+        self.state = (
+            RequestState.DECODING if self.remaining_prefill == 0 else RequestState.PREFILLING
+        )
+
+    def receive_token(self, tok: int = 0, now: float = 0.0) -> None:
+        assert self.state == RequestState.DECODING
+        self.generated += 1
+        self.output_tokens.append(tok)
+        if self.first_token_time is None:
+            self.first_token_time = now
+        if self.generated >= self.max_new_tokens:
+            self.state = RequestState.FINISHED
+            self.finish_time = now
+
+    # metrics -----------------------------------------------------------------
+    def e2e_latency(self) -> Optional[float]:
+        return None if self.finish_time is None else self.finish_time - self.arrival_time
+
+    def ttft(self) -> Optional[float]:
+        return (
+            None
+            if self.first_token_time is None
+            else self.first_token_time - self.arrival_time
+        )
+
+    def prefill_e2e(self) -> Optional[float]:
+        return (
+            None
+            if self.prefill_end_time is None
+            else self.prefill_end_time - self.arrival_time
+        )

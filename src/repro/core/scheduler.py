@@ -1,0 +1,243 @@
+"""ChunkedPrefillScheduler — the paper's full scheduling round (§3.1–3.3).
+
+Round semantics (decode-first, §3.1.3):
+  1. Reserve capacity for all ongoing decode requests (one token each).
+  2. Rank prefill candidates by the configured policy (FCFS / SJF / Aging).
+  3. For each candidate in priority order: choose a chunk via the static
+     token-budget rule (Eq. 7) or LPRS (Algorithm 1); gate it through APC
+     (Eq. 14) when enabled; commit the chunk and update request state.
+  4. Requests with remaining prefill return to the queue with updated
+     priority (heap update, O(log n)).
+
+The scheduler is execution-agnostic: it emits a ScheduledBatch; the engine
+(real JAX execution) or the simulator (calibrated clock) runs it and calls
+``on_batch_done``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.apc import APCConfig, APCStats, activity_cap
+from repro.core.apc import apply as apc_apply
+from repro.core.features import BatchState
+from repro.core.lprs import LPRSConfig, select_chunk
+from repro.core.policies import PrefillQueue, make_policy
+from repro.core.request import Request, RequestState
+
+
+@dataclass(frozen=True)
+class SchedulerConfig:
+    policy: str = "fcfs"              # fcfs | sjf | aging
+    alpha: float = 1.0                # aging waiting-time weight (>0)
+    beta: float = -0.01               # aging remaining-work weight (<0)
+    token_budget: int = 1024          # B_max per round
+    max_seqs: int = 128               # S_max sequence slots
+    lprs: Optional[LPRSConfig] = None # None = static token-budget chunking
+    apc: Optional[APCConfig] = None   # None = APC off
+
+
+@dataclass
+class ScheduledBatch:
+    round_idx: int
+    decode_reqs: List[Request] = field(default_factory=list)
+    prefill_chunks: List[Tuple[Request, int]] = field(default_factory=list)
+    state: BatchState = field(default_factory=BatchState)
+
+    @property
+    def prefill_tokens(self) -> int:
+        return sum(c for _, c in self.prefill_chunks)
+
+    @property
+    def decode_tokens(self) -> int:
+        return len(self.decode_reqs)
+
+    @property
+    def total_tokens(self) -> int:
+        return self.prefill_tokens + self.decode_tokens
+
+    @property
+    def n_seqs(self) -> int:
+        return len(self.decode_reqs) + len(self.prefill_chunks)
+
+    def is_empty(self) -> bool:
+        return self.n_seqs == 0
+
+
+@dataclass
+class SchedulerStats:
+    rounds: int = 0
+    scheduled_prefill_seqs: int = 0     # Σ per-round count (Table 10)
+    scheduled_prefill_tokens: int = 0
+    scheduled_decode_tokens: int = 0
+    apc: APCStats = field(default_factory=APCStats)
+
+    @property
+    def avg_prefill_seqs_per_round(self) -> float:
+        return self.scheduled_prefill_seqs / max(self.rounds, 1)
+
+    @property
+    def avg_chunk_size(self) -> float:
+        # prefill tokens per round (incl. rounds with zero prefill)
+        return self.scheduled_prefill_tokens / max(self.rounds, 1)
+
+    @property
+    def avg_tokens_per_prefill_seq(self) -> float:
+        # Paper's Table 10 "Avg. Prefill Chunk Size": tokens per SCHEDULED
+        # prefill sequence — fragmentation shows as values near 1.
+        return self.scheduled_prefill_tokens / max(self.scheduled_prefill_seqs, 1)
+
+
+class ChunkedPrefillScheduler:
+    def __init__(
+        self,
+        cfg: SchedulerConfig,
+        *,
+        predictor=None,
+        kv_pool=None,           # optional: exposes used_mb/free_mb/allocated_mb/reserved_mb
+    ):
+        if cfg.lprs is not None and predictor is None:
+            raise ValueError("LPRS requires a latency predictor")
+        self.cfg = cfg
+        self.predictor = predictor
+        self.kv_pool = kv_pool
+        self.queue: PrefillQueue = make_policy(cfg.policy, alpha=cfg.alpha, beta=cfg.beta)
+        self.decoding: List[Request] = []
+        self.stats = SchedulerStats()
+        self._round = 0
+
+    # -- intake ------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        assert req.state == RequestState.WAITING
+        self.queue.add(req)
+
+    def has_work(self) -> bool:
+        return len(self.queue) > 0 or len(self.decoding) > 0
+
+    # -- one scheduling round -------------------------------------------------
+    def schedule(self, now: float) -> ScheduledBatch:
+        cfg = self.cfg
+        batch = ScheduledBatch(round_idx=self._round)
+        self._round += 1
+        self.stats.rounds += 1
+
+        # 1. decode-first: reserve budget for ongoing decodes
+        self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
+        n_decode = min(len(self.decoding), cfg.max_seqs, cfg.token_budget)
+        batch.decode_reqs = self.decoding[:n_decode]
+        committed = n_decode
+
+        st = BatchState(
+            decode_tokens=n_decode,
+            batch_request_count=n_decode,
+            sum_decode_context_len=sum(r.context_len for r in batch.decode_reqs),
+            max_decode_context_len=max(
+                (r.context_len for r in batch.decode_reqs), default=0
+            ),
+        )
+        if self.kv_pool is not None:
+            st.kv_used_mb = self.kv_pool.used_mb
+            st.kv_free_mb = self.kv_pool.free_mb
+            st.hbm_allocated_mb = self.kv_pool.allocated_mb
+            st.hbm_reserved_mb = self.kv_pool.reserved_mb
+
+        # 2.-3. rank prefill candidates, allocate residual budget in order
+        cap = (
+            activity_cap(
+                cfg.apc,
+                n_decode=n_decode,
+                max_seqs=cfg.max_seqs,
+                token_budget=cfg.token_budget,
+                committed=committed,
+            )
+            if cfg.apc is not None
+            else None
+        )
+
+        n_active_prefills = 0
+        deferred: List[Request] = []
+        seq_slots = cfg.max_seqs - n_decode
+        blocks = 0
+        MAX_BLOCK_SCAN = 8  # bounded lookahead after APC blocks: keeps O(k log n)
+        while committed < cfg.token_budget and seq_slots > 0 and blocks < MAX_BLOCK_SCAN:
+            req = self.queue.pop()
+            if req is None:
+                break
+            h_i = min(req.remaining_prefill, cfg.token_budget - committed)
+            if h_i <= 0:
+                deferred.append(req)
+                break
+
+            # chunk proposal: LPRS (Algorithm 1) or static rule (Eq. 7)
+            if cfg.lprs is not None:
+                c = select_chunk(
+                    remaining=req.remaining_prefill,
+                    committed=committed,
+                    token_budget=cfg.token_budget,
+                    batch_state=st,
+                    processed=req.prefill_done,
+                    predictor=self.predictor,
+                    cfg=cfg.lprs,
+                )
+            else:
+                c = h_i
+
+            # APC gate (Eq. 14)
+            if cfg.apc is not None:
+                c = apc_apply(
+                    cfg.apc,
+                    self.stats.apc,
+                    proposed=c,
+                    remaining=req.remaining_prefill,
+                    upper_bound=h_i,
+                    n_active_prefills=n_active_prefills,
+                    cap=cap,
+                )
+
+            if c <= 0:
+                deferred.append(req)
+                blocks += 1
+                # cap blocks are global to the round — no later candidate can
+                # pass; min-chunk blocks are per-request, keep scanning a
+                # bounded number of candidates.
+                if cfg.apc is not None and n_active_prefills >= cap:
+                    break
+                continue
+            blocks = 0
+
+            batch.prefill_chunks.append((req, int(c)))
+            st = st.with_extra_prefill(int(c), req.prefill_done)
+            committed += int(c)
+            seq_slots -= 1
+            if req.remaining_prefill - c > 0:
+                n_active_prefills += 1
+
+        for r in deferred:
+            self.queue.add(r)
+
+        batch.state = st
+        self.stats.scheduled_prefill_seqs += len(batch.prefill_chunks)
+        self.stats.scheduled_prefill_tokens += batch.prefill_tokens
+        self.stats.scheduled_decode_tokens += batch.decode_tokens
+        return batch
+
+    # -- post-execution updates ---------------------------------------------
+    def on_batch_done(self, batch: ScheduledBatch, now: float) -> None:
+        """Apply chunk/token deliveries after the engine executed the batch."""
+        for req, c in batch.prefill_chunks:
+            req.receive_chunk(c)
+            if req.state == RequestState.DECODING:
+                # Sarathi semantics: the round that finishes the prefill also
+                # produces the first output token (TTFT = prefill completion).
+                req.prefill_end_time = now
+                req.receive_token(0, now)
+                if req.state == RequestState.DECODING:
+                    self.decoding.append(req)
+            else:
+                # back to the queue with updated priority (O(log n))
+                self.queue.update(req)
+        for req in batch.decode_reqs:
+            req.receive_token(0, now)
+        self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]

@@ -1,0 +1,232 @@
+"""Sharding rules: logical axes, parameter specs, activation constraints.
+
+Model code annotates activations with *logical* axis names via ``constrain``.
+A rules context (set by the launcher / dry-run) maps logical names to mesh
+axes; without an active context ``constrain`` is the identity, so models run
+unsharded on CPU tests unchanged.
+
+Parameter sharding is name-based (``spec_for_param``): TP over the "model"
+axis for head/ffn/expert dims, optional FSDP over the "data" axis for the
+embed dims of big models (2D weight sharding), replication for norms/scalars.
+Every candidate spec is sanitized against actual dim sizes — axes that do not
+divide a dimension are dropped (e.g. granite's single KV head under TP=16).
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+AxisVal = Union[None, str, Tuple[str, ...]]
+
+
+def _active() -> Optional[Tuple[Mesh, Dict[str, AxisVal]]]:
+    return getattr(_ctx, "active", None)
+
+
+@contextmanager
+def axis_rules(mesh: Mesh, rules: Dict[str, AxisVal]):
+    prev = _active()
+    _ctx.active = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ctx.active = prev
+
+
+def _axis_size(mesh: Mesh, axis: AxisVal) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, str):
+        return mesh.shape[axis]
+    return int(np.prod([mesh.shape[a] for a in axis]))
+
+
+def sanitize_spec(mesh: Mesh, spec: Sequence[AxisVal], shape: Sequence[int]) -> P:
+    """Drop mesh axes that don't divide the corresponding dim."""
+    used = set()
+    out = []
+    for dim, axis in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if axis is None:
+            out.append(None)
+            continue
+        axes = (axis,) if isinstance(axis, str) else tuple(axis)
+        keep = []
+        size = 1
+        for a in axes:
+            asz = mesh.shape[a]
+            if a not in used and dim % (size * asz) == 0:
+                keep.append(a)
+                size *= asz
+        for a in keep:
+            used.add(a)
+        out.append(tuple(keep) if len(keep) > 1 else (keep[0] if keep else None))
+    return P(*out)
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """Attach a sharding constraint by logical axis names (no-op w/o context)."""
+    active = _active()
+    if active is None or not hasattr(x, "shape") or x.ndim != len(logical):
+        return x
+    mesh, rules = active
+    spec = [rules.get(name) if name else None for name in logical]
+    spec_p = sanitize_spec(mesh, spec, x.shape)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec_p))
+
+
+# ---------------------------------------------------------------------------
+# rule sets
+# ---------------------------------------------------------------------------
+
+
+def default_rules(mesh: Mesh, *, shard_seq: bool = False, fsdp: bool = False) -> Dict[str, AxisVal]:
+    """Logical-name -> mesh-axis mapping.
+
+    shard_seq: long-context decode — shard the KV/cache length over "data"
+    (sequence parallelism for the cache; softmax reductions become small
+    all-reduces under GSPMD).
+    """
+    has_pod = "pod" in mesh.axis_names
+    batch_axes: AxisVal = ("pod", "data") if has_pod else "data"
+    rules: Dict[str, AxisVal] = {
+        "batch": batch_axes,
+        "seq": None,
+        "kv_seq": "data" if shard_seq else None,
+        "embed": None,
+        "heads": "model",
+        "kv_heads": "model",
+        "mlp": "model",
+        "moe_mlp": "model",
+        "experts": "model",
+        "vocab": "model",
+        "ssm_inner": "model",
+        "fsdp": "data" if fsdp else None,
+        "pod_dp": "pod" if has_pod else None,
+        # layout of KV COLLECTED for the prefill cache — distinct from the
+        # compute-path kv_heads so a capacity-driven cache layout (e.g.
+        # hd-sharded) becomes a local slice at collection instead of
+        # back-propagating into the attention loop.
+        "cache_seq": None,
+        "cache_heads": "model",
+        "cache_hd": None,
+        # residual-stream sequence dim (Megatron sequence parallelism):
+        # "model" shards norms/residual adds over TP and decomposes the TP
+        # all-reduces into reduce-scatter + all-gather
+        "act_seq": None,
+    }
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# parameter specs (name-based)
+# ---------------------------------------------------------------------------
+
+_PARAM_RULES = [
+    # (name, ndim) -> logical spec (pre-sanitization)
+    ("wq", ("fsdp", "model", None)),
+    ("wk", ("fsdp", "model", None)),
+    ("wv", ("fsdp", "model", None)),
+    ("wo", ("model", None, "fsdp")),
+    ("bq", ("model", None)),
+    ("bk", ("model", None)),
+    ("bv", ("model", None)),
+    ("w_gate", None),   # resolved dynamically (dense vs moe)
+    ("w_up", None),
+    ("w_down", None),
+    ("router", (None, None)),
+    ("embed", ("model", "fsdp")),       # (V, D): vocab over model
+    ("lm_head", ("fsdp", "model")),     # (D, V)
+    ("in_proj", ("fsdp", "model")),     # mamba (D, 2*d_inner)
+    ("conv_w", ("model", None)),        # (d_inner, width)
+    ("conv_b", ("model",)),
+    ("x_proj", ("model", None)),        # (d_inner, dt_rank + 2*state)
+    ("dt_proj", (None, "model")),
+    ("dt_bias", ("model",)),
+    ("A_log", ("model", None)),
+    ("D", ("model",)),
+    ("out_proj", ("model", "fsdp")),    # (d_inner, D)
+    # xlstm
+    ("up_proj", ("fsdp", "model")),
+    ("down_proj", ("model", "fsdp")),
+    ("wi", ("model", None)),
+    ("wf", ("model", None)),
+    ("wog", ("fsdp", "model")),
+    ("r_gate", ("model", None)),
+]
+
+
+def spec_for_param(path: str, shape: Tuple[int, ...], mesh: Mesh, *, fsdp: bool) -> P:
+    name = path.split("/")[-1]
+    is_expert = "moe" in path and name in ("w_gate", "w_up", "w_down")
+    is_ffn = (not is_expert) and name in ("w_gate", "w_up", "w_down")
+    model_axis_sz = mesh.shape["model"]
+
+    # layer-stacked params carry a leading layer dim: detect via path marker
+    stacked = "layers" in path or "blocks" in path
+    lead: Tuple[AxisVal, ...] = (None,) if stacked else ()
+
+    fsdp_ax: AxisVal = "data" if fsdp else None
+
+    if is_expert:
+        # experts (E, D, F)/(E, F, D): EP over model if divisible, else TP on F
+        e_dim = shape[len(lead)]
+        if e_dim % model_axis_sz == 0:
+            spec: Tuple[AxisVal, ...] = lead + ("model", fsdp_ax, None)
+        elif name == "w_down":
+            spec = lead + (None, "model", fsdp_ax)
+        else:
+            spec = lead + (None, fsdp_ax, "model")
+        return sanitize_spec(mesh, spec, shape)
+    if is_ffn:
+        if name == "w_down":
+            spec = lead + ("model", fsdp_ax)
+        else:
+            spec = lead + (fsdp_ax, "model")
+        return sanitize_spec(mesh, spec, shape)
+
+    for rule_name, logical in _PARAM_RULES:
+        if name == rule_name and logical is not None:
+            resolved = tuple(
+                ("data" if fsdp else None) if ax == "fsdp" else ax for ax in logical
+            )
+            spec = lead + resolved
+            return sanitize_spec(mesh, spec, shape)
+    # norms, scalars, biases: replicated (stacked layer dim unsharded)
+    return sanitize_spec(mesh, lead + (None,) * (len(shape) - len(lead)), shape)
+
+
+def _flatten_paths(tree: Any, prefix: str = "") -> Dict[str, Any]:
+    out = {}
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            out.update(_flatten_paths(v, f"{prefix}/{k}" if prefix else str(k)))
+    else:
+        out[prefix] = tree
+    return out
+
+
+def param_specs(params_shape: Any, mesh: Mesh, *, fsdp: bool) -> Any:
+    """PartitionSpec pytree matching a param pytree (of arrays or
+    ShapeDtypeStructs)."""
+
+    def walk(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, f"{prefix}/{k}" if prefix else str(k)) for k, v in tree.items()}
+        return spec_for_param(prefix, tree.shape, mesh, fsdp=fsdp)
+
+    return walk(params_shape)
+
+
+def shardings_for(tree_specs: Any, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

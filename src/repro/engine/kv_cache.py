@@ -1,0 +1,103 @@
+"""Paged KV-cache block pool (vLLM-style block accounting).
+
+The pool manages fixed-size token blocks per request; on TPU the backing
+store is a preallocated HBM tensor, here the accounting layer is shared by
+the simulator (features + admission control) and the CPU engine (which backs
+requests with per-request arrays but books blocks through the same pool, so
+LPRS sees identical memory features in both modes).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+
+@dataclass
+class KVPoolConfig:
+    n_blocks: int = 4096
+    block_size: int = 16              # tokens per block
+    bytes_per_token: int = 0          # 2 * L * H_kv * hd * dtype_bytes
+    hbm_capacity_mb: float = 16 * 1024.0
+    param_mb: float = 0.0
+
+
+class KVBlockPool:
+    def __init__(self, cfg: KVPoolConfig):
+        self.cfg = cfg
+        self.free_blocks: List[int] = list(range(cfg.n_blocks - 1, -1, -1))
+        self.tables: Dict[int, List[int]] = {}     # req_id -> block ids
+        self.lens: Dict[int, int] = {}             # req_id -> tokens stored
+
+    # -- alloc/free -----------------------------------------------------------
+    def blocks_needed(self, req_id: int, new_tokens: int) -> int:
+        cur = self.lens.get(req_id, 0)
+        have = len(self.tables.get(req_id, []))
+        need = math.ceil((cur + new_tokens) / self.cfg.block_size)
+        return max(0, need - have)
+
+    def can_allocate(self, req_id: int, new_tokens: int) -> bool:
+        return self.blocks_needed(req_id, new_tokens) <= len(self.free_blocks)
+
+    def allocate(self, req_id: int, new_tokens: int) -> List[int]:
+        need = self.blocks_needed(req_id, new_tokens)
+        if need > len(self.free_blocks):
+            raise MemoryError(
+                f"KV pool exhausted: need {need} blocks, have {len(self.free_blocks)}"
+            )
+        got = [self.free_blocks.pop() for _ in range(need)]
+        self.tables.setdefault(req_id, []).extend(got)
+        self.lens[req_id] = self.lens.get(req_id, 0) + new_tokens
+        return got
+
+    def release(self, req_id: int) -> None:
+        blocks = self.tables.pop(req_id, [])
+        self.free_blocks.extend(blocks)
+        self.lens.pop(req_id, None)
+
+    # -- accounting (LPRS features) --------------------------------------------
+    @property
+    def used_blocks(self) -> int:
+        return self.cfg.n_blocks - len(self.free_blocks)
+
+    @property
+    def used_mb(self) -> float:
+        return self.used_blocks * self.cfg.block_size * self.cfg.bytes_per_token / 2**20
+
+    @property
+    def free_mb(self) -> float:
+        return len(self.free_blocks) * self.cfg.block_size * self.cfg.bytes_per_token / 2**20
+
+    @property
+    def allocated_mb(self) -> float:
+        return self.cfg.param_mb + self.used_mb
+
+    @property
+    def reserved_mb(self) -> float:
+        return self.cfg.hbm_capacity_mb
+
+    def utilization(self) -> float:
+        return self.used_blocks / max(self.cfg.n_blocks, 1)
+
+
+def pool_for_model(cfg_model, *, n_blocks: int = 8192, block_size: int = 16,
+                   hbm_mb: float = 16 * 1024.0) -> KVBlockPool:
+    """Size bytes_per_token from a ModelConfig (attention layers only)."""
+    hd = cfg_model.resolved_head_dim
+    if cfg_model.attn_every:
+        n_attn = sum(1 for l in range(cfg_model.n_layers) if l % cfg_model.attn_every == 0)
+    elif cfg_model.family == "ssm":
+        n_attn = 0
+    else:
+        n_attn = cfg_model.n_layers
+    bpt = 2 * n_attn * cfg_model.n_kv_heads * hd * 2  # k+v, bf16
+    param_mb = cfg_model.param_count() * 2 / 2**20
+    return KVBlockPool(
+        KVPoolConfig(
+            n_blocks=n_blocks,
+            block_size=block_size,
+            bytes_per_token=max(bpt, 2),
+            hbm_capacity_mb=hbm_mb,
+            param_mb=param_mb,
+        )
+    )

@@ -1,0 +1,85 @@
+"""Latency metrics: request-level and prefill-level summaries (§4.2).
+
+L_req = finish - arrive; L_pf = prefill_done - arrive; TTFT; TPOT.
+Percentile statistics are the primary summary (high-percentile latency is
+more informative than the mean in interactive serving).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.request import Request
+
+PCTS = (50, 80, 90, 95, 99)
+
+
+def percentiles(xs: Sequence[float], pcts=PCTS) -> Dict[str, float]:
+    if len(xs) == 0:
+        return {f"p{p}": float("nan") for p in pcts} | {"mean": float("nan")}
+    arr = np.asarray(xs, np.float64)
+    out = {f"p{p}": float(np.percentile(arr, p)) for p in pcts}
+    out["mean"] = float(arr.mean())
+    out["max"] = float(arr.max())
+    return out
+
+
+@dataclass
+class LatencyReport:
+    e2e: Dict[str, float]
+    ttft: Dict[str, float]
+    prefill_e2e: Dict[str, float]
+    tpot: Dict[str, float]
+    n_finished: int
+    n_total: int
+    makespan: float
+    throughput_rps: float
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "mean_e2e": self.e2e["mean"],
+            "p95_e2e": self.e2e["p95"],
+            "p99_e2e": self.e2e["p99"],
+            "mean_ttft": self.ttft["mean"],
+            "p95_ttft": self.ttft["p95"],
+            "p99_ttft": self.ttft["p99"],
+            "mean_prefill": self.prefill_e2e["mean"],
+            "p90_prefill": self.prefill_e2e["p90"],
+            "p99_prefill": self.prefill_e2e["p99"],
+            "mean_tpot": self.tpot["mean"],
+            "throughput_rps": self.throughput_rps,
+        }
+
+
+def summarize(requests: Iterable[Request], makespan: Optional[float] = None) -> LatencyReport:
+    reqs = list(requests)
+    fin = [r for r in reqs if r.finish_time is not None]
+    e2e = [r.e2e_latency() for r in fin]
+    ttft = [r.ttft() for r in reqs if r.ttft() is not None]
+    pf = [r.prefill_e2e() for r in reqs if r.prefill_e2e() is not None]
+    tpot = [
+        (r.finish_time - r.first_token_time) / max(r.generated - 1, 1)
+        for r in fin
+        if r.first_token_time is not None and r.generated > 1
+    ]
+    ms = makespan if makespan is not None else (
+        max((r.finish_time for r in fin), default=0.0)
+        - min((r.arrival_time for r in reqs), default=0.0)
+    )
+    return LatencyReport(
+        e2e=percentiles(e2e),
+        ttft=percentiles(ttft),
+        prefill_e2e=percentiles(pf),
+        tpot=percentiles(tpot),
+        n_finished=len(fin),
+        n_total=len(reqs),
+        makespan=ms,
+        throughput_rps=len(fin) / ms if ms > 0 else float("nan"),
+    )
+
+
+def cdf_points(xs: Sequence[float], n: int = 100) -> List[tuple]:
+    arr = np.sort(np.asarray(xs, np.float64))
+    return [(float(arr[int(q * (len(arr) - 1))]), q) for q in np.linspace(0, 1, n)]

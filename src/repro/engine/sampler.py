@@ -1,0 +1,25 @@
+"""Token sampling: greedy / temperature / top-k, jit-friendly."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class SamplerConfig:
+    temperature: float = 0.0     # 0 = greedy
+    top_k: int = 0               # 0 = full distribution
+
+
+def sample_tokens(logits, rng, cfg: SamplerConfig):
+    """logits: (B, V) -> (B,) int32 tokens."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32) / cfg.temperature
+    if cfg.top_k > 0:
+        top_vals, _ = jax.lax.top_k(logits, cfg.top_k)
+        kth = top_vals[..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)

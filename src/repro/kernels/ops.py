@@ -1,0 +1,57 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` selects kernel vs pure-jnp oracle; on CPU the kernels run in
+interpret mode (Python-executed kernel bodies — correctness, not speed); on
+TPU the same calls compile to Mosaic.  The engine flips this with one flag.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fused_swiglu import fused_swiglu
+
+_ON_TPU = None
+
+
+def on_tpu() -> bool:
+    global _ON_TPU
+    if _ON_TPU is None:
+        _ON_TPU = jax.devices()[0].platform == "tpu"
+    return _ON_TPU
+
+
+def prefill_chunk_attention(q, k_cache, v_cache, kv_lens, q_offset, *,
+                            use_pallas: bool = True, block_q: int = 128,
+                            block_k: int = 128):
+    """(B, Sq, Hq, hd) chunk vs (B, Skv, Hkv, hd) cache with causal offset."""
+    if not use_pallas:
+        return ref.chunked_prefill_attention_ref(q, k_cache, v_cache, kv_lens, q_offset)
+    return chunked_prefill_attention(
+        q, k_cache, v_cache, kv_lens, q_offset,
+        block_q=block_q, block_k=block_k, interpret=not on_tpu(),
+    )
+
+
+def flash_decode_attention(q, k_cache, v_cache, kv_lens, *,
+                           use_pallas: bool = True, block_k: int = 256):
+    """(B, Hq, hd) single-token decode vs (B, S, Hkv, hd) cache."""
+    if not use_pallas:
+        return ref.decode_attention_ref(q, k_cache, v_cache, kv_lens)
+    return decode_attention(
+        q, k_cache, v_cache, kv_lens, block_k=block_k, interpret=not on_tpu()
+    )
+
+
+def swiglu_ffn(x, w_gate, w_up, w_down, *, use_pallas: bool = True,
+               block_m: int = 256, block_f: int = 256):
+    """(M, D) x (D, F) SwiGLU; fused single-HBM-pass kernel on TPU."""
+    if not use_pallas:
+        return ref.fused_swiglu_ref(x, w_gate, w_up, w_down)
+    return fused_swiglu(
+        x, w_gate, w_up, w_down,
+        block_m=block_m, block_f=block_f, interpret=not on_tpu(),
+    )

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (exact f32 math, no tiling).
+
+These are the correctness references for tests/test_kernels.py shape/dtype
+sweeps and the CPU execution path of the engine (``use_pallas=False``).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_prefill_attention_ref(
+    q,            # (B, Sq, Hq, hd)   the prefill chunk's queries
+    k_cache,      # (B, Skv, Hkv, hd) prefix KV incl. the chunk's own K
+    v_cache,      # (B, Skv, Hkv, hd)
+    kv_lens,      # (B,) valid KV length (prefix + chunk)
+    q_offset,     # (B,) absolute position of q[:, 0] (= prefix length)
+):
+    """Chunk of queries attends to (prefix ‖ itself) with a causal offset.
+
+    Query i (absolute pos q_offset + i) sees key j iff j <= q_offset + i and
+    j < kv_lens.  All math in f32.
+    """
+    B, Sq, Hq, hd = q.shape
+    Skv, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32) * (1.0 / math.sqrt(hd))
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+
+    qf = qf.reshape(B, Sq, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kf)
+    q_pos = q_offset[:, None] + jnp.arange(Sq)[None, :]          # (B, Sq)
+    k_pos = jnp.arange(Skv)[None, :]                             # (1, Skv)
+    mask = (k_pos[:, None, :] <= q_pos[:, :, None]) & (
+        k_pos[:, None, :] < kv_lens[:, None, None]
+    )                                                            # (B, Sq, Skv)
+    scores = jnp.where(mask[:, None, None, :, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, vf)
+    return out.reshape(B, Sq, Hq, hd).astype(q.dtype)
+
+
+def decode_attention_ref(
+    q,            # (B, Hq, hd)   one query token per sequence
+    k_cache,      # (B, S, Hkv, hd)
+    v_cache,      # (B, S, Hkv, hd)
+    kv_lens,      # (B,) valid lengths
+):
+    """Single-token flash-decode oracle: full softmax over the valid cache."""
+    B, Hq, hd = q.shape
+    S, Hkv = k_cache.shape[1], k_cache.shape[2]
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32) * (1.0 / math.sqrt(hd))
+    qf = qf.reshape(B, Hkv, g, hd)
+    scores = jnp.einsum("bhgd,bkhd->bhgk", qf, k_cache.astype(jnp.float32))
+    mask = jnp.arange(S)[None, :] < kv_lens[:, None]             # (B, S)
+    scores = jnp.where(mask[:, None, None, :], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, hd).astype(q.dtype)
+
+
+def fused_swiglu_ref(x, w_gate, w_up, w_down):
+    """x: (M, D); w_gate/w_up: (D, F); w_down: (F, D) -> (M, D), f32 math."""
+    xf = x.astype(jnp.float32)
+    h = jax.nn.silu(xf @ w_gate.astype(jnp.float32)) * (
+        xf @ w_up.astype(jnp.float32)
+    )
+    return (h @ w_down.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,537 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# Multi-pod dry-run: lower + compile every (architecture x input shape) cell
+# on the production meshes and extract roofline terms from the compiled HLO.
+#
+# MUST be run as a module entry point (``python -m repro.launch.dryrun``) or
+# imported before anything else touches jax — the XLA_FLAGS line above runs
+# before any jax import so 512 host platform devices exist.
+#
+# Usage:
+#   python -m repro.launch.dryrun                      # all cells, single-pod
+#   python -m repro.launch.dryrun --multi-pod          # all cells, 2-pod mesh
+#   python -m repro.launch.dryrun --arch mixtral-8x7b --shape decode_32k
+#   python -m repro.launch.dryrun --json out.json      # machine-readable record
+
+import argparse
+import json
+import re
+import sys
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import REGISTRY, ASSIGNED_ARCHS, get_config, applicable_shapes
+from repro.configs.base import ModelConfig, ShapeSpec, SHAPES_BY_NAME
+from repro.distributed.sharding import (
+    axis_rules,
+    default_rules,
+    param_specs,
+    sanitize_spec,
+    shardings_for,
+)
+from repro.launch.mesh import (
+    HBM_BW,
+    ICI_BW_PER_LINK,
+    PEAK_FLOPS_BF16,
+    make_production_mesh,
+    mesh_chips,
+)
+from repro.models.model import Model, build_model
+from repro.training.train_step import (
+    TrainConfig,
+    default_train_config,
+    init_train_state_shape,
+    make_train_step,
+)
+
+from repro.launch.hlo_cost import analyze_hlo
+
+# ---------------------------------------------------------------------------
+# roofline terms
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CellResult:
+    arch: str
+    shape: str
+    mesh: str
+    ok: bool
+    error: Optional[str] = None
+    lower_s: float = 0.0
+    compile_s: float = 0.0
+    hlo_flops: float = 0.0
+    hlo_bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_breakdown: Dict[str, int] = field(default_factory=dict)
+    bytes_per_device: float = 0.0
+    peak_memory_mb: float = 0.0
+    compute_term_s: float = 0.0
+    memory_term_s: float = 0.0
+    collective_term_s: float = 0.0
+    dominant: str = ""
+    model_flops: float = 0.0
+    useful_flops_ratio: float = 0.0
+    roofline_fraction: float = 0.0
+
+    def bound_s(self) -> float:
+        return max(self.compute_term_s, self.memory_term_s, self.collective_term_s)
+
+
+def model_flops_for(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (prefill) / 2*N_active*B (decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.tokens
+    return 2.0 * n_active * shape.global_batch  # decode: one token per seq
+
+
+def roofline(res: CellResult, n_chips: int) -> None:
+    res.compute_term_s = res.hlo_flops / (n_chips * PEAK_FLOPS_BF16)
+    res.memory_term_s = res.hlo_bytes / (n_chips * HBM_BW)
+    res.collective_term_s = res.coll_bytes / (n_chips * ICI_BW_PER_LINK)
+    terms = {
+        "compute": res.compute_term_s,
+        "memory": res.memory_term_s,
+        "collective": res.collective_term_s,
+    }
+    res.dominant = max(terms, key=terms.get)
+    res.useful_flops_ratio = res.model_flops / res.hlo_flops if res.hlo_flops else 0.0
+    ideal = res.model_flops / (n_chips * PEAK_FLOPS_BF16)
+    res.roofline_fraction = ideal / res.bound_s() if res.bound_s() > 0 else 0.0
+
+
+# ---------------------------------------------------------------------------
+# per-cell lowering
+# ---------------------------------------------------------------------------
+
+
+def batch_input_shardings(model: Model, shape: ShapeSpec, mesh, rules) -> Any:
+    """NamedShardings for the input batch dict of this cell."""
+    specs = model.input_specs(shape)
+
+    def spec_of(name: str, s: jax.ShapeDtypeStruct) -> NamedSharding:
+        batch_ax = rules["batch"]
+        if name in ("tokens", "labels", "loss_mask", "lens"):
+            p = sanitize_spec(mesh, (batch_ax,) + (None,) * (len(s.shape) - 1), s.shape)
+        elif name in ("frames", "patch_embeds"):
+            p = sanitize_spec(mesh, (batch_ax, None, None), s.shape)
+        else:
+            p = P()
+        return NamedSharding(mesh, p)
+
+    def walk(tree, name=""):
+        if isinstance(tree, dict):
+            return {k: walk(v, k) for k, v in tree.items()}
+        return spec_of(name, tree)
+
+    return walk(specs)
+
+
+def cache_shardings(
+    model: Model, shape: ShapeSpec, mesh, rules, *, phase: str = "decode"
+) -> Any:
+    """KV cache: batch over data; heads over model when divisible.  When
+    heads do not divide the model axis, the layout is phase-optimal
+    (DistServe-style): the *decode* input cache shards the LENGTH over model
+    (flash-decode partial softmax -> small all-reduces), while the *prefill*
+    output cache shards HEAD_DIM over model — a pure local slice on write,
+    which keeps GSPMD from back-propagating a seq-resharding into the
+    flash-attention block loop.  Recurrent (SSM / xLSTM) states: batch over
+    data + the widest divisible trailing dim over model."""
+    struct = model.cache_struct(shape.global_batch, shape.seq_len)
+    batch_ax = rules["batch"]
+    model_sz = mesh.shape["model"]
+
+    batch_shards = 1
+    for a in (batch_ax,) if isinstance(batch_ax, str) else tuple(batch_ax):
+        batch_shards *= mesh.shape[a]
+
+    hd_sharded = []  # records whether any prefill kv leaf went hd-sharded
+
+    def kv_spec(shp, dtype_bytes=2):
+        # (L, B, S, H, hd)
+        L_, B, S, H, hd = shp
+        if H % model_sz == 0:
+            return sanitize_spec(mesh, (None, batch_ax, None, "model", None), shp)
+        if phase == "prefill":
+            # output cache: avoid resharding the scan's ys when it fits;
+            # hd-sharding (pure local slice on write) only under capacity
+            # pressure.  4 GB/device budget for one of k/v.
+            per_dev = L_ * max(1, B // batch_shards) * S * H * hd * dtype_bytes
+            if per_dev <= 4 * 2**30 or hd % model_sz != 0:
+                return sanitize_spec(mesh, (None, batch_ax, None, None, None), shp)
+            hd_sharded.append(True)
+            return sanitize_spec(mesh, (None, batch_ax, None, None, "model"), shp)
+        return sanitize_spec(mesh, (None, batch_ax, "model", None, None), shp)
+
+    def state_spec(shp):
+        spec = [None] * len(shp)
+        b_idx = None
+        for i, d in enumerate(shp):
+            if d == shape.global_batch:
+                spec[i] = batch_ax
+                b_idx = i
+                break
+        # widest trailing dim divisible by the model axis (skip the batch dim)
+        best, best_d = None, 0
+        for i in range(len(shp) - 1, (b_idx if b_idx is not None else -1), -1):
+            if spec[i] is None and shp[i] % model_sz == 0 and shp[i] > best_d:
+                best, best_d = i, shp[i]
+        if best is not None:
+            spec[best] = "model"
+        return sanitize_spec(mesh, tuple(spec), shp)
+
+    def one(path_keys, s: jax.ShapeDtypeStruct) -> NamedSharding:
+        shp = s.shape
+        name = path_keys[0] if path_keys else ""
+        if (name in ("k", "v") or name.startswith("self")
+                or name.startswith("cross")):
+            p = kv_spec(shp)
+        elif name == "kv_pos":
+            p = sanitize_spec(mesh, (None, batch_ax, None), shp)
+        else:  # recurrent / conv state of any nesting
+            p = state_spec(shp)
+        return NamedSharding(mesh, p)
+
+    def keystr(kp) -> list:
+        out = []
+        for k in kp:
+            if hasattr(k, "key"):
+                out.append(str(k.key))
+            elif hasattr(k, "idx"):
+                out.append(str(k.idx))
+        return out
+
+    shardings = jax.tree_util.tree_map_with_path(
+        lambda kp, s: one(keystr(kp), s), struct
+    )
+    # rules so the model constrains COLLECTED kv to the cache layout at the
+    # collection point (local slice) instead of GSPMD back-propagating it
+    cache_rules = (
+        {"cache_hd": "model", "cache_heads": None} if hd_sharded else {}
+    )
+    return shardings, cache_rules
+
+
+def lower_cell(
+    arch: str,
+    shape_name: str,
+    mesh,
+    *,
+    fsdp: Optional[bool] = None,
+    shard_seq: bool = False,
+    verbose: bool = True,
+    extra_rules: Optional[Dict[str, Any]] = None,
+    return_compiled: bool = False,
+) -> CellResult:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    res = CellResult(arch=arch, shape=shape_name, mesh=mesh_name, ok=False)
+    n_chips = mesh_chips(mesh)
+
+    model = build_model(cfg)
+    use_fsdp = fsdp if fsdp is not None else (cfg.sharding == "fsdp_tp")
+    rules = default_rules(mesh, shard_seq=shard_seq, fsdp=use_fsdp)
+    if extra_rules:
+        rules.update(extra_rules)
+
+    batch_shards = 1
+    batch_ax = rules["batch"]
+    for a in (batch_ax,) if isinstance(batch_ax, str) else tuple(batch_ax):
+        batch_shards *= mesh.shape[a]
+
+    t0 = time.time()
+    try:
+        with mesh, axis_rules(mesh, rules):
+            if shape.kind == "train":
+                tcfg = default_train_config(
+                    cfg.param_count(), batch_shards=batch_shards,
+                    global_batch=shape.global_batch,
+                )
+                pshape, oshape = init_train_state_shape(model, tcfg)
+                pspecs = param_specs(pshape, mesh, fsdp=use_fsdp)
+                pshard = shardings_for(pspecs, mesh)
+                oshard = jax.tree.map(
+                    lambda s: NamedSharding(mesh, P())
+                    if s.ndim == 0
+                    else None,  # filled below
+                    oshape,
+                )
+                # moments shard like params; step replicated
+                mu_shard = shardings_for(param_specs(oshape.mu, mesh, fsdp=use_fsdp), mesh)
+                nu_shard = shardings_for(param_specs(oshape.nu, mesh, fsdp=use_fsdp), mesh)
+                oshard = type(oshape)(step=NamedSharding(mesh, P()), mu=mu_shard, nu=nu_shard)
+                bshard = batch_input_shardings(model, shape, mesh, rules)
+
+                step = make_train_step(model, tcfg)
+                jitted = jax.jit(
+                    step,
+                    in_shardings=(pshard, oshard, bshard),
+                    out_shardings=(pshard, oshard, None),
+                    donate_argnums=(0, 1),
+                )
+                args = (pshape, oshape, model.input_specs(shape))
+            elif shape.kind == "prefill":
+                pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+                pshard = shardings_for(param_specs(pshape, mesh, fsdp=use_fsdp), mesh)
+                bshard = batch_input_shardings(model, shape, mesh, rules)
+                cshard, cache_rules = cache_shardings(
+                    model, shape, mesh, rules, phase="prefill"
+                )
+                rules.update(cache_rules)
+
+                def prefill_step(params, batch):
+                    return model.prefill(params, batch)
+
+                jitted = jax.jit(
+                    prefill_step,
+                    in_shardings=(pshard, bshard),
+                    out_shardings=(None, cshard),
+                )
+                args = (pshape, model.input_specs(shape))
+            else:  # decode
+                pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+                pshard = shardings_for(param_specs(pshape, mesh, fsdp=use_fsdp), mesh)
+                specs = model.input_specs(shape)
+                cshard, _ = cache_shardings(model, shape, mesh, rules, phase="decode")
+                tok_shard = NamedSharding(
+                    mesh, sanitize_spec(mesh, (rules["batch"], None), specs["tokens"].shape)
+                )
+                lens_shard = NamedSharding(
+                    mesh, sanitize_spec(mesh, (rules["batch"],), specs["lens"].shape)
+                )
+
+                def serve_step(params, tokens, cache, lens):
+                    return model.decode(params, tokens, cache, lens)
+
+                jitted = jax.jit(
+                    serve_step,
+                    in_shardings=(pshard, tok_shard, cshard, lens_shard),
+                    out_shardings=(None, cshard),
+                    donate_argnums=(2,),
+                )
+                args = (pshape, specs["tokens"], model.cache_struct(
+                    shape.global_batch, shape.seq_len), specs["lens"])
+
+            lowered = jitted.lower(*args)
+            res.lower_s = time.time() - t0
+
+            t1 = time.time()
+            compiled = lowered.compile()
+            res.compile_s = time.time() - t1
+
+            # trip-count-aware per-device costs from the optimized HLO text
+            # (XLA's own cost_analysis counts while bodies once — useless for
+            # scan-over-layers programs; see launch/hlo_cost.py)
+            rep = analyze_hlo(compiled.as_text())
+            res.hlo_flops = rep.flops * n_chips        # global, per spec formula
+            res.hlo_bytes = rep.hbm_bytes * n_chips
+            res.coll_bytes = rep.total_collective_bytes * n_chips
+            res.coll_breakdown = {k: int(v) for k, v in rep.collective_bytes.items()}
+            res.coll_breakdown["n_ops"] = rep.n_collective_ops
+
+            mem = compiled.memory_analysis()
+            per_dev = (
+                getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+            )
+            args_bytes = getattr(mem, "argument_size_in_bytes", 0)
+            res.bytes_per_device = float(per_dev)
+            res.peak_memory_mb = float(per_dev + args_bytes) / 2**20
+
+            res.model_flops = model_flops_for(cfg, shape)
+            roofline(res, n_chips)
+            res.ok = True
+    except Exception as e:  # noqa: BLE001 — record per-cell failures
+        res.error = f"{type(e).__name__}: {e}"
+        compiled = None
+        if verbose:
+            import traceback
+            traceback.print_exc()
+    if return_compiled:
+        return res, (compiled if res.ok else None)
+    return res
+
+
+def lower_chunked_serve(
+    arch: str,
+    mesh,
+    *,
+    n_slots: int = 128,
+    chunk: int = 256,
+    max_context: int = 8192,
+    verbose: bool = False,
+) -> CellResult:
+    """Lower the paper's ACTUAL execution unit — one mixed chunked-prefill
+    round (decode slots advance 1 token, prefill slots by their chunk) —
+    on the production mesh.  This is the `chunked_step` the serving engine
+    jits; proving it compiles sharded closes the loop between the scheduler
+    (host) and the data plane (SPMD workers)."""
+    cfg = get_config(arch)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    res = CellResult(arch=arch, shape=f"chunk_serve", mesh=mesh_name, ok=False)
+    n_chips = mesh_chips(mesh)
+    model = build_model(cfg)
+    impl = model.impl
+    if not hasattr(impl, "chunked_step") or cfg.sliding_window:
+        res.error = "family has no linear-cache chunked_step"
+        return res
+    use_fsdp = cfg.sharding == "fsdp_tp"
+    rules = default_rules(mesh, fsdp=use_fsdp)
+    batch_ax = rules["batch"]
+
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.param_dtype)
+    kv_shape = (cfg.n_layers, n_slots, max_context + 1, cfg.n_kv_heads, hd)
+    cache = {
+        "k": jax.ShapeDtypeStruct(kv_shape, dt),
+        "v": jax.ShapeDtypeStruct(kv_shape, dt),
+    }
+    model_sz = mesh.shape["model"]
+    if cfg.n_kv_heads % model_sz == 0:
+        kv_spec = sanitize_spec(mesh, (None, batch_ax, None, "model", None), kv_shape)
+    else:
+        kv_spec = sanitize_spec(mesh, (None, batch_ax, None, None, None), kv_shape)
+    cshard = {k: NamedSharding(mesh, kv_spec) for k in ("k", "v")}
+
+    t0 = time.time()
+    try:
+        with mesh, axis_rules(mesh, rules):
+            pshape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+            pshard = shardings_for(param_specs(pshape, mesh, fsdp=use_fsdp), mesh)
+            tok = jax.ShapeDtypeStruct((n_slots, chunk), jnp.int32)
+            lens = jax.ShapeDtypeStruct((n_slots,), jnp.int32)
+            b_sh = NamedSharding(mesh, sanitize_spec(mesh, (batch_ax, None), tok.shape))
+            l_sh = NamedSharding(mesh, sanitize_spec(mesh, (batch_ax,), lens.shape))
+
+            def chunked_round(params, tokens, cache, lens, chunk_lens):
+                return impl.chunked_step(params, tokens, cache, lens, chunk_lens)
+
+            jitted = jax.jit(
+                chunked_round,
+                in_shardings=(pshard, b_sh, cshard, l_sh, l_sh),
+                out_shardings=(None, cshard),
+                donate_argnums=(2,),
+            )
+            lowered = jitted.lower(pshape, tok, cache, lens, lens)
+            res.lower_s = time.time() - t0
+            t1 = time.time()
+            compiled = lowered.compile()
+            res.compile_s = time.time() - t1
+
+            rep = analyze_hlo(compiled.as_text())
+            res.hlo_flops = rep.flops * n_chips
+            res.hlo_bytes = rep.hbm_bytes * n_chips
+            res.coll_bytes = rep.total_collective_bytes * n_chips
+            res.coll_breakdown = {k: int(v) for k, v in rep.collective_bytes.items()}
+            mem = compiled.memory_analysis()
+            res.peak_memory_mb = float(
+                getattr(mem, "output_size_in_bytes", 0)
+                + getattr(mem, "temp_size_in_bytes", 0)
+                + getattr(mem, "argument_size_in_bytes", 0)
+            ) / 2**20
+            # model flops: ~n_slots*chunk tokens of prefill-like work
+            res.model_flops = 2.0 * cfg.active_param_count() * n_slots * chunk
+            roofline(res, n_chips)
+            res.ok = True
+    except Exception as e:  # noqa: BLE001
+        res.error = f"{type(e).__name__}: {e}"
+        if verbose:
+            import traceback
+            traceback.print_exc()
+    return res
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+
+def all_cells() -> List[tuple]:
+    cells = []
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        for s in applicable_shapes(cfg):
+            cells.append((arch, s.name))
+    return cells
+
+
+def fmt_row(r: CellResult) -> str:
+    if not r.ok:
+        return f"  {r.arch:24s} {r.shape:12s} FAIL  {r.error}"
+    return (
+        f"  {r.arch:24s} {r.shape:12s} ok "
+        f"comp={r.compute_term_s*1e3:9.2f}ms mem={r.memory_term_s*1e3:9.2f}ms "
+        f"coll={r.collective_term_s*1e3:9.2f}ms dom={r.dominant:10s} "
+        f"useful={r.useful_flops_ratio:6.3f} roofline={r.roofline_fraction:6.3f} "
+        f"mem/dev={r.peak_memory_mb:9.1f}MB"
+    )
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both", action="store_true", help="run single-pod AND multi-pod")
+    ap.add_argument("--chunked-serve", action="store_true",
+                    help="also lower the paper's mixed chunked-prefill round")
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    meshes = []
+    if args.both:
+        meshes = [("single-pod 16x16", False), ("multi-pod 2x16x16", True)]
+    else:
+        meshes = [("multi-pod 2x16x16" if args.multi_pod else "single-pod 16x16",
+                   args.multi_pod)]
+
+    if args.arch and args.shape:
+        cells = [(args.arch, args.shape)]
+    elif args.arch:
+        cells = [(args.arch, s.name) for s in applicable_shapes(get_config(args.arch))]
+    else:
+        cells = all_cells()
+
+    results: List[CellResult] = []
+    n_fail = 0
+    for mesh_label, mp in meshes:
+        mesh = make_production_mesh(multi_pod=mp)
+        print(f"=== {mesh_label}: {mesh_chips(mesh)} chips, "
+              f"axes {mesh.axis_names} {tuple(mesh.devices.shape)} ===")
+        for arch, shape in cells:
+            r = lower_cell(arch, shape, mesh, verbose=not args.quiet)
+            results.append(r)
+            print(fmt_row(r), flush=True)
+            n_fail += 0 if r.ok else 1
+        if args.chunked_serve:
+            for arch in dict.fromkeys(a for a, _ in cells):
+                r = lower_chunked_serve(arch, mesh, verbose=not args.quiet)
+                if r.error == "family has no linear-cache chunked_step":
+                    continue
+                results.append(r)
+                print(fmt_row(r), flush=True)
+                n_fail += 0 if r.ok else 1
+
+    print(f"\n{len(results) - n_fail}/{len(results)} cells OK")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump([asdict(r) for r in results], f, indent=1)
+        print(f"wrote {args.json}")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

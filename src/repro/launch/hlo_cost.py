@@ -1,0 +1,620 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` (a) reports per-device numbers
+for SPMD programs and (b) counts ``while`` bodies ONCE, ignoring trip counts.
+Our models scan over layers (and microbatches, seq chunks), so XLA's own
+numbers undercount FLOPs/bytes/collectives by ~n_layers.  This module parses
+``compiled.as_text()`` and walks the call graph with while-loop trip counts
+multiplied through, producing per-device:
+
+  * flops             — dot/conv exact, elementwise/reduce ~1 flop/element
+  * hbm_bytes         — per-op operand+result traffic; fusions count only
+                        their boundary tensors; dynamic-slice counts the
+                        slice, not the sliced buffer (weight streaming via
+                        scan is therefore counted once per iteration)
+  * collective bytes  — per collective type, trip-count multiplied, using a
+                        fixed link-traffic convention:
+                          all-gather          -> result bytes
+                          reduce-scatter      -> operand bytes
+                          all-reduce          -> 2 x operand bytes (ring)
+                          all-to-all          -> operand bytes
+                          collective-permute  -> operand bytes
+
+All quantities are PER DEVICE (the SPMD module is the per-device program);
+roofline terms divide by per-chip peaks directly.
+
+The parser is validated in tests/test_hlo_cost.py against programs with
+analytically known costs (scan-of-matmul etc.).
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "token": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+
+# ops that are aliases/bookkeeping, not data movement
+_FREE_OPS = {
+    "get-tuple-element", "tuple", "parameter", "bitcast", "constant",
+    "partition-id", "replica-id", "after-all", "opt-barrier", "domain",
+    "get-dimension-size", "iota",
+}
+
+_COLLECTIVES = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+_TRANSCENDENTAL = {"exp", "expm1", "log", "log1p", "tanh", "rsqrt", "sqrt",
+                   "power", "sine", "cosine", "logistic", "erf", "atan2",
+                   "cbrt", "divide"}
+
+
+@dataclass
+class Shape:
+    dtype: str
+    dims: Tuple[int, ...]
+
+    @property
+    def elems(self) -> int:
+        n = 1
+        for d in self.dims:
+            n *= d
+        return n
+
+    @property
+    def bytes(self) -> int:
+        return self.elems * _DTYPE_BYTES.get(self.dtype, 4)
+
+
+def parse_shapes(s: str) -> List[Shape]:
+    """All tensor shapes appearing in an HLO type string (tuples flattened)."""
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        if dt not in _DTYPE_BYTES:
+            continue
+        out.append(Shape(dt, tuple(int(d) for d in dims.split(",") if d)))
+    return out
+
+
+def _total_bytes(shapes: List[Shape]) -> int:
+    return sum(s.bytes for s in shapes)
+
+
+@dataclass
+class Op:
+    name: str
+    opcode: str
+    result: List[Shape]
+    operands: List[str]
+    attrs: str
+
+    def attr_call(self, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w.\-]+)", self.attrs)
+        return m.group(1) if m else None
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: List[Op] = field(default_factory=list)
+    by_name: Dict[str, Op] = field(default_factory=dict)
+
+    def shape_of(self, operand: str) -> List[Shape]:
+        op = self.by_name.get(operand)
+        return op.result if op else []
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{\s*$")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+
+
+def _split_type_rest(s: str) -> Tuple[str, str]:
+    """'(s32[], f32[2]{0}) tuple(...)' -> (type_str, rest)."""
+    s = s.strip()
+    if s.startswith("("):
+        depth = 0
+        for i, ch in enumerate(s):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return s[: i + 1], s[i + 1:].strip()
+    m = re.match(r"^([a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?)\s*(.*)$", s)
+    if m:
+        return m.group(1), m.group(2)
+    # scalar without brackets shouldn't happen in HLO; bail
+    parts = s.split(None, 1)
+    return parts[0], parts[1] if len(parts) > 1 else ""
+
+
+def _matching_paren(s: str, start: int) -> int:
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def parse_hlo(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and ("->" in line):
+                cur = Computation(m.group(1))
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+            continue
+        if line.strip() == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        type_str, tail = _split_type_rest(rest)
+        # strip metadata (can contain parens/braces)
+        meta = tail.find(", metadata=")
+        if meta >= 0:
+            tail = tail[:meta]
+        om = re.match(r"^([\w\-]+)\s*\(", tail)
+        if not om:
+            continue
+        opcode = om.group(1)
+        p0 = tail.find("(")
+        p1 = _matching_paren(tail, p0)
+        operand_str = tail[p0 + 1 : p1]
+        attrs = tail[p1 + 1 :]
+        operands = re.findall(r"%([\w.\-]+)", operand_str)
+        if opcode == "parameter":
+            # preserve the parameter index (lives in the operand slot)
+            attrs = f"parameter({operand_str}){attrs}"
+        op = Op(name, opcode, parse_shapes(type_str), operands, attrs)
+        cur.ops.append(op)
+        cur.by_name[name] = op
+    return comps, entry
+
+
+@dataclass
+class CostReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_bytes: Dict[str, float] = field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES}
+    )
+    n_collective_ops: int = 0
+    n_while_loops: int = 0
+    unknown_ops: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def merge_scaled(self, other: "CostReport", k: float) -> None:
+        self.flops += k * other.flops
+        self.hbm_bytes += k * other.hbm_bytes
+        for c in _COLLECTIVES:
+            self.collective_bytes[c] += k * other.collective_bytes[c]
+        self.n_collective_ops += int(k * other.n_collective_ops)
+        self.n_while_loops += other.n_while_loops
+        for o, n in other.unknown_ops.items():
+            self.unknown_ops[o] = self.unknown_ops.get(o, 0) + n
+
+
+class HloCostAnalyzer:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_hlo(text)
+        self._memo: Dict[str, CostReport] = {}
+
+    # -- helpers -------------------------------------------------------------
+
+    def trip_count(self, cond_name: str) -> int:
+        """Max scalar int constant in the while condition computation.
+
+        jax scans lower to (i < N) loops with i0=0, step 1, so the loop-bound
+        constant IS the trip count.  The condition may delegate the compare to
+        a fused computation, but the bound constant is materialized in the
+        condition region itself.  Falls back to 1 if unparseable.
+        """
+        vals = self._const_values.get(cond_name, [])
+        return max(vals) if vals else 1
+
+    # -- flops per op --------------------------------------------------------
+
+    def _dot_flops(self, comp: Computation, op: Op) -> float:
+        out_elems = sum(s.elems for s in op.result)
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        lhs_shapes = comp.shape_of(op.operands[0]) if op.operands else []
+        if not m or not lhs_shapes:
+            return 2.0 * out_elems
+        lhs = lhs_shapes[0]
+        k = 1
+        for d in m.group(1).split(","):
+            if d and int(d) < len(lhs.dims):
+                k *= lhs.dims[int(d)]
+        return 2.0 * out_elems * k
+
+    def _conv_flops(self, comp: Computation, op: Op) -> float:
+        out_elems = sum(s.elems for s in op.result)
+        if len(op.operands) < 2:
+            return 2.0 * out_elems
+        kshapes = comp.shape_of(op.operands[1])
+        if not kshapes:
+            return 2.0 * out_elems
+        kelems = kshapes[0].elems
+        # per output element: kernel_elems / out_features macs
+        m = re.search(r"dim_labels=\S*_(\S*?)->", op.attrs)
+        out_feat = 1
+        for s in op.result:
+            if s.dims:
+                out_feat = s.dims[-1]
+        return 2.0 * out_elems * max(1, kelems // max(out_feat, 1))
+
+    # -- analysis ------------------------------------------------------------
+
+    def analyze_computation(self, name: str, *, fused: bool = False) -> CostReport:
+        key = f"{name}|fused={fused}"
+        if key in self._memo:
+            return self._memo[key]
+        rep = CostReport()
+        comp = self.comps.get(name)
+        if comp is None:
+            self._memo[key] = rep
+            return rep
+        for op in comp.ops:
+            oc = op.opcode
+            out_elems = sum(s.elems for s in op.result)
+            out_bytes = _total_bytes(op.result)
+            operand_bytes = sum(
+                _total_bytes(comp.shape_of(o)) for o in op.operands
+            )
+
+            if oc in _FREE_OPS:
+                continue
+
+            if oc in _COLLECTIVES or any(oc == c + "-start" for c in _COLLECTIVES):
+                base = oc.replace("-start", "")
+                if base == "all-gather":
+                    vol = out_bytes
+                elif base == "all-reduce":
+                    vol = 2 * operand_bytes
+                else:
+                    vol = operand_bytes
+                rep.collective_bytes[base] += vol
+                rep.n_collective_ops += 1
+                if not fused:
+                    rep.hbm_bytes += out_bytes + operand_bytes
+                continue
+            if oc.endswith("-done") or oc in ("copy-start", "copy-done"):
+                continue
+
+            if oc == "while":
+                body = op.attr_call("body")
+                cond = op.attr_call("condition")
+                trips = self.trip_count(cond) if cond else 1
+                rep.n_while_loops += 1
+                body_rep = self.analyze_computation(body) if body else CostReport()
+                rep.merge_scaled(body_rep, trips)
+                continue
+
+            if oc == "conditional":
+                branches = re.findall(r"branch_computations=\{([^}]*)\}", op.attrs)
+                names = []
+                if branches:
+                    names = re.findall(r"%?([\w.\-]+)", branches[0])
+                else:
+                    tc = op.attr_call("true_computation")
+                    fc = op.attr_call("false_computation")
+                    names = [n for n in (tc, fc) if n]
+                subs = [self.analyze_computation(n) for n in names]
+                if subs:
+                    biggest = max(subs, key=lambda r: r.flops)
+                    rep.merge_scaled(biggest, 1.0)
+                continue
+
+            if oc in ("call", "async-start"):
+                callee = op.attr_call("to_apply") or op.attr_call("calls")
+                if callee:
+                    rep.merge_scaled(self.analyze_computation(callee), 1.0)
+                continue
+
+            if oc == "fusion":
+                callee = op.attr_call("calls")
+                inner = (
+                    self.analyze_computation(callee, fused=True)
+                    if callee
+                    else CostReport()
+                )
+                rep.flops += inner.flops
+                for c in _COLLECTIVES:
+                    rep.collective_bytes[c] += inner.collective_bytes[c]
+                rep.n_collective_ops += inner.n_collective_ops
+                if not fused:
+                    # boundary traffic only; slice-only params count slice
+                    # size; in-place-update fusions (root = DUS, i.e. scan ys
+                    # collection) count the UPDATE, not the aliased buffer
+                    eff_out = self._fusion_output_bytes(op, callee, out_bytes)
+                    rep.hbm_bytes += eff_out + self._fusion_operand_bytes(
+                        comp, op, callee
+                    )
+                continue
+
+            # plain ops ------------------------------------------------------
+            if oc == "dot":
+                rep.flops += self._dot_flops(comp, op)
+            elif oc == "convolution":
+                rep.flops += self._conv_flops(comp, op)
+            elif oc in ("reduce", "reduce-window", "select-and-scatter"):
+                rep.flops += max(operand_bytes // 4, out_elems)
+            elif oc == "sort":
+                n = max(out_elems, 1)
+                rep.flops += n * max(1, int(math.log2(n)))
+            elif oc in _TRANSCENDENTAL:
+                rep.flops += 4 * out_elems
+            elif oc in ("add", "subtract", "multiply", "maximum", "minimum",
+                        "and", "or", "xor", "not", "negate", "abs", "compare",
+                        "select", "clamp", "floor", "ceil", "round",
+                        "reduce-precision", "exponential",
+                        "exponential-minus-one", "sign", "shift-left",
+                        "shift-right-logical", "shift-right-arithmetic",
+                        "remainder", "is-finite"):
+                rep.flops += out_elems
+            elif oc == "convert":
+                # dtype converts are free on TPU (MXU consumes bf16 natively
+                # with f32 accumulation; XLA-CPU materializes upcasts that
+                # TPU-XLA fuses).  Count the write, not compute.
+                if not fused:
+                    rep.hbm_bytes += out_bytes
+                continue
+            elif oc in ("dynamic-slice", "slice", "gather"):
+                pass  # movement only
+            elif oc in ("dynamic-update-slice", "scatter"):
+                pass
+            elif oc in ("broadcast", "reshape", "transpose", "copy", "pad",
+                        "concatenate", "reverse", "rev", "map",
+                        "rng", "rng-bit-generator", "custom-call",
+                        "infeed", "outfeed", "cholesky", "triangular-solve",
+                        "send", "recv", "send-done", "recv-done"):
+                pass
+            else:
+                rep.unknown_ops[oc] = rep.unknown_ops.get(oc, 0) + 1
+
+            if not fused:
+                if oc in ("dynamic-slice", "slice", "gather"):
+                    rep.hbm_bytes += 2 * out_bytes  # read slice + write
+                elif oc in ("dynamic-update-slice", "scatter"):
+                    upd = (
+                        _total_bytes(comp.shape_of(op.operands[1]))
+                        if len(op.operands) > 1
+                        else out_bytes
+                    )
+                    rep.hbm_bytes += 2 * upd
+                elif oc in ("broadcast", "reshape", "transpose"):
+                    rep.hbm_bytes += out_bytes + min(operand_bytes, out_bytes)
+                else:
+                    rep.hbm_bytes += out_bytes + operand_bytes
+
+        self._memo[key] = rep
+        return rep
+
+    def _dus_update_bytes(self, inner: Computation) -> Optional[int]:
+        """If the computation's root is a dynamic-update-slice (or a tuple of
+        them), return the summed update-operand bytes; else None."""
+        if not inner.ops:
+            return None
+        root = inner.ops[-1]
+        roots = [root]
+        if root.opcode == "tuple":
+            roots = [inner.by_name[o] for o in root.operands if o in inner.by_name]
+        upd = 0
+        any_dus = False
+        for r in roots:
+            if r.opcode == "dynamic-update-slice" and len(r.operands) > 1:
+                any_dus = True
+                upd += _total_bytes(inner.shape_of(r.operands[1]))
+            elif r.opcode == "bitcast" and r.operands:
+                src = inner.by_name.get(r.operands[0])
+                if src is not None and src.opcode == "dynamic-update-slice":
+                    any_dus = True
+                    upd += _total_bytes(inner.shape_of(src.operands[1]))
+                else:
+                    upd += _total_bytes(r.result)
+            else:
+                upd += _total_bytes(r.result)
+        return upd if any_dus else None
+
+    def _fusion_output_bytes(self, op: Op, callee: str, out_bytes: int) -> int:
+        inner = self.comps.get(callee or "")
+        if inner is None:
+            return out_bytes
+        dus = self._dus_update_bytes(inner)
+        return dus if dus is not None else out_bytes
+
+    def _fusion_operand_bytes(self, comp: Computation, op: Op, callee: str) -> int:
+        """Operand traffic of a fusion: parameters consumed only via
+        dynamic-slice/gather count as the slice size; parameters that are
+        only the TARGET of a dynamic-update-slice (in-place buffers, aliased
+        with the output) count as zero reads."""
+        inner = self.comps.get(callee or "")
+        total = 0
+        for idx, oname in enumerate(op.operands):
+            full = _total_bytes(comp.shape_of(oname))
+            if inner is None:
+                total += full
+                continue
+            pname = None
+            for iop in inner.ops:
+                if iop.opcode == "parameter" and re.search(
+                    rf"parameter\({idx}\)", iop.attrs
+                ):
+                    pname = iop.name
+                    break
+            if pname is None:
+                total += full
+                continue
+            uses = [iop for iop in inner.ops if pname in iop.operands]
+            if uses and all(
+                u.opcode in ("dynamic-slice", "slice", "gather") for u in uses
+            ):
+                total += sum(_total_bytes(u.result) for u in uses)
+            elif uses and all(
+                u.opcode == "dynamic-update-slice" and u.operands
+                and u.operands[0] == pname
+                for u in uses
+            ):
+                total += 0   # pure in-place target, aliased with output
+            else:
+                total += full
+        return total
+
+    # -- entry ---------------------------------------------------------------
+
+    _const_values: Dict[str, List[int]] = {}
+
+    def analyze(self) -> CostReport:
+        return self.analyze_computation(self.entry)
+
+
+def _collect_const_values(text: str) -> Dict[str, List[int]]:
+    """computation name -> list of scalar int constants defined inside."""
+    out: Dict[str, List[int]] = {}
+    cur = None
+    for line in text.splitlines():
+        s = line.strip()
+        m = _COMP_HDR.match(s)
+        if cur is None and m and "->" in s:
+            cur = m.group(1)
+            out[cur] = []
+            continue
+        if cur is None:
+            continue
+        if s == "}":
+            cur = None
+            continue
+        cm = re.search(r"=\s*[su]\d+\[\]\s*constant\((-?\d+)\)", s)
+        if cm:
+            out[cur].append(int(cm.group(1)))
+    return out
+
+
+def analyze_hlo(text: str) -> CostReport:
+    an = HloCostAnalyzer(text)
+    an._const_values = _collect_const_values(text)
+    return an.analyze()
+
+
+def bytes_breakdown(text: str, top: int = 15) -> List[Tuple[str, float]]:
+    """Top HBM-traffic ops (opcode + shape), trip-count scaled — the perf
+    loop's profile for memory-bound cells."""
+    an = HloCostAnalyzer(text)
+    an._const_values = _collect_const_values(text)
+    contrib: Dict[str, float] = {}
+
+    def walk(comp_name: str, scale: float):
+        comp = an.comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc in _FREE_OPS or oc in _COLLECTIVES:
+                continue
+            if oc == "while":
+                body, cond = op.attr_call("body"), op.attr_call("condition")
+                if body:
+                    walk(body, scale * (an.trip_count(cond) if cond else 1))
+                continue
+            if oc in ("call", "conditional"):
+                callee = op.attr_call("to_apply") or op.attr_call("true_computation")
+                if callee:
+                    walk(callee, scale)
+                continue
+            out_bytes = _total_bytes(op.result)
+            operand_bytes = sum(_total_bytes(comp.shape_of(o)) for o in op.operands)
+            if oc == "fusion":
+                callee = op.attr_call("calls")
+                b = (an._fusion_output_bytes(op, callee, out_bytes)
+                     + an._fusion_operand_bytes(comp, op, callee))
+            elif oc in ("dynamic-slice", "slice", "gather"):
+                b = 2 * out_bytes
+            elif oc in ("dynamic-update-slice", "scatter"):
+                upd = (_total_bytes(comp.shape_of(op.operands[1]))
+                       if len(op.operands) > 1 else out_bytes)
+                b = 2 * upd
+            elif oc == "convert":
+                b = out_bytes
+            else:
+                b = out_bytes + operand_bytes
+            key = f"{oc} {op.result[0].dims if op.result else ()}"
+            contrib[key] = contrib.get(key, 0.0) + b * scale
+
+    walk(an.entry, 1.0)
+    return sorted(contrib.items(), key=lambda kv: -kv[1])[:top]
+
+
+def flop_breakdown(text: str, top: int = 15) -> List[Tuple[str, float]]:
+    """Top FLOP-contributing ops (opcode + result shape), trip-count scaled.
+
+    Debug tool for the perf loop: shows where compiled FLOPs actually go.
+    """
+    an = HloCostAnalyzer(text)
+    an._const_values = _collect_const_values(text)
+
+    contrib: Dict[str, float] = {}
+
+    def walk(comp_name: str, scale: float):
+        comp = an.comps.get(comp_name)
+        if comp is None:
+            return
+        for op in comp.ops:
+            oc = op.opcode
+            if oc == "while":
+                body = op.attr_call("body")
+                cond = op.attr_call("condition")
+                trips = an.trip_count(cond) if cond else 1
+                if body:
+                    walk(body, scale * trips)
+            elif oc == "fusion":
+                callee = op.attr_call("calls")
+                if callee:
+                    walk(callee, scale)
+            elif oc in ("call", "conditional"):
+                callee = op.attr_call("to_apply") or op.attr_call(
+                    "true_computation"
+                )
+                if callee:
+                    walk(callee, scale)
+            elif oc == "dot":
+                f = an._dot_flops(comp, op) * scale
+                key = f"dot {op.result[0].dims if op.result else ()} <- {op.name}"
+                contrib[key] = contrib.get(key, 0.0) + f
+            elif oc in _TRANSCENDENTAL or oc in (
+                "add", "subtract", "multiply", "maximum", "minimum", "select",
+                "compare", "convert", "reduce",
+            ):
+                f = sum(s.elems for s in op.result) * (
+                    4 if oc in _TRANSCENDENTAL else 1
+                ) * scale
+                key = f"{oc} {op.result[0].dims if op.result else ()}"
+                contrib[key] = contrib.get(key, 0.0) + f
+
+    walk(an.entry, 1.0)
+    return sorted(contrib.items(), key=lambda kv: -kv[1])[:top]

@@ -1,0 +1,117 @@
+"""Training driver: ``python -m repro.launch.train --arch llama3.2-1b-tiny``.
+
+End-to-end: config -> mesh -> sharded init -> data pipeline -> jitted
+train_step loop with checkpoint/restart.  On CPU this trains the tiny
+configs (examples/quickstart); under a TPU runtime the same driver runs the
+full configs on the production mesh — nothing here is CPU-specific.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, tiny_config
+from repro.distributed.checkpoint import CheckpointManager
+from repro.distributed.sharding import (
+    axis_rules, default_rules, param_specs, shardings_for,
+)
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models.model import build_model
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamWConfig
+from repro.training.train_step import (
+    TrainConfig, init_train_state, make_train_step,
+)
+
+
+def train(
+    arch: str,
+    *,
+    steps: int = 50,
+    global_batch: int = 8,
+    seq_len: int = 128,
+    lr: float = 3e-4,
+    tiny: bool = True,
+    production_mesh: bool = False,
+    ckpt_dir: Optional[str] = None,
+    ckpt_every: int = 20,
+    resume: bool = False,
+    log_every: int = 10,
+    n_microbatches: int = 1,
+    seed: int = 0,
+):
+    cfg = tiny_config(arch) if tiny else get_config(arch)
+    model = build_model(cfg)
+    mesh = make_production_mesh() if production_mesh else make_host_mesh()
+    use_fsdp = cfg.sharding == "fsdp_tp"
+    rules = default_rules(mesh, fsdp=use_fsdp)
+
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=lr, weight_decay=0.1, grad_clip_norm=1.0,
+                              warmup_steps=max(1, steps // 20), total_steps=steps),
+        n_microbatches=n_microbatches,
+    )
+    data = SyntheticLM(DataConfig(cfg.vocab_size, global_batch, seq_len, seed=seed))
+
+    with mesh, axis_rules(mesh, rules):
+        params, opt_state = init_train_state(model, jax.random.PRNGKey(seed), tcfg)
+        pshard = shardings_for(param_specs(params, mesh, fsdp=use_fsdp), mesh)
+        params = jax.tree.map(jax.device_put, params, pshard)
+
+        step_fn = jax.jit(make_train_step(model, tcfg), donate_argnums=(0, 1))
+
+        ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
+        start = 0
+        if ckpt and resume and ckpt.latest_step() is not None:
+            start, (params, opt_state) = ckpt.restore((params, opt_state))
+            print(f"resumed from step {start}")
+
+        losses = []
+        t0 = time.time()
+        for step in range(start, steps):
+            batch = {k: jax.numpy.asarray(v) for k, v in data.batch_at(step).items()}
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            losses.append(float(metrics["loss"]))
+            if step % log_every == 0 or step == steps - 1:
+                dt = time.time() - t0
+                tok_s = global_batch * seq_len * (step - start + 1) / max(dt, 1e-9)
+                print(
+                    f"step {step:5d} loss {losses[-1]:.4f} "
+                    f"gnorm {float(metrics['grad_norm']):.3f} tok/s {tok_s:,.0f}"
+                )
+            if ckpt and (step + 1) % ckpt_every == 0:
+                ckpt.save(step + 1, (params, opt_state))
+        if ckpt:
+            ckpt.save(steps, (params, opt_state), blocking=True)
+            ckpt.wait()
+            ckpt.close()
+    return params, losses
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--full", action="store_true", help="full (non-tiny) config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args(argv)
+    _, losses = train(
+        args.arch, steps=args.steps, global_batch=args.global_batch,
+        seq_len=args.seq_len, lr=args.lr, tiny=not args.full,
+        ckpt_dir=args.ckpt_dir, resume=args.resume,
+        n_microbatches=args.microbatches,
+    )
+    print(f"final loss {losses[-1]:.4f} (start {losses[0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model zoo package.  Lazy exports to avoid import cycles with submodules."""
+
+
+def __getattr__(name):
+    if name in ("Model", "build_model", "chunked_cross_entropy"):
+        from repro.models import model as _m
+
+        return getattr(_m, name)
+    raise AttributeError(name)
+
+
+__all__ = ["Model", "build_model", "chunked_cross_entropy"]

@@ -1,0 +1,209 @@
+"""Jamba-style hybrid: groups of (1 attention + 7 Mamba) layers with MoE FFNs
+on alternating layers (4 MoE + 4 dense per group -> 36 MoE layers over 72).
+
+Group pattern (index within group):
+  0: attention + dense FFN
+  1,3,5,7: mamba + MoE FFN
+  2,4,6:   mamba + dense FFN
+
+Parameters are stacked per-group and scanned over groups, keeping the HLO a
+single compact loop.  KV cache exists only for the one attention layer per
+group ((G, B, S, Hkv, hd)); Mamba layers carry O(1) conv/SSM state, which is
+what makes long_500k decode viable.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models.mamba import init_mamba, mamba_mixer, mamba_state_struct
+from repro.models.transformer import _block_decode, _block_fwd
+
+
+def _init_mamba_layer(rng, cfg: ModelConfig, use_moe: bool) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 3)
+    dt = jnp.dtype(cfg.param_dtype)
+    p = {
+        "mixer_norm": jnp.ones((cfg.d_model,), dt),
+        "mamba": init_mamba(ks[0], cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if use_moe:
+        p["moe"] = L.init_moe(ks[1], cfg)
+    else:
+        p["ffn"] = L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _init_attn_layer(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 2)
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(ks[0], cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+        "ffn": L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _mamba_layer_fwd(lp, x, cfg, state=None):
+    h = L.rms_norm(x, lp["mixer_norm"], cfg.norm_eps)
+    mix, new_state = mamba_mixer(lp["mamba"], h, cfg, state)
+    x = x + mix
+    h = L.rms_norm(x, lp["ffn_norm"], cfg.norm_eps)
+    if "moe" in lp:
+        moe_fn = L.moe_ffn_scatter if cfg.moe_impl == "scatter" else L.moe_ffn
+        x = x + moe_fn(lp["moe"], h, cfg)
+    else:
+        x = x + L.ffn(lp["ffn"], h)
+    return x, new_state
+
+
+class HybridLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        assert cfg.attn_every and cfg.n_layers % cfg.attn_every == 0
+        self.group = cfg.attn_every              # 8
+        self.n_groups = cfg.n_layers // self.group
+        self.n_mamba = self.group - 1            # 7
+        # within-group mamba positions 1..7; odd positions get MoE
+        self.moe_slots = [j for j in range(1, self.group) if j % 2 == 1]
+        self.dense_slots = [j for j in range(1, self.group) if j % 2 == 0]
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        k_emb, k_attn, k_moe, k_dense, k_head = jax.random.split(rng, 5)
+        a_rngs = jax.random.split(k_attn, self.n_groups)
+        moe_rngs = jax.random.split(k_moe, self.n_groups * len(self.moe_slots)).reshape(
+            self.n_groups, len(self.moe_slots), 2
+        )
+        dense_rngs = jax.random.split(
+            k_dense, self.n_groups * len(self.dense_slots)
+        ).reshape(self.n_groups, len(self.dense_slots), 2)
+        return {
+            "embed": L.dense_init(k_emb, (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+            "attn_layers": jax.vmap(lambda r: _init_attn_layer(r, cfg))(a_rngs),
+            "mamba_moe": jax.vmap(jax.vmap(lambda r: _init_mamba_layer(r, cfg, True)))(moe_rngs),
+            "mamba_dense": jax.vmap(jax.vmap(lambda r: _init_mamba_layer(r, cfg, False)))(dense_rngs),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": L.dense_init(k_head, (cfg.d_model, cfg.vocab_size), dt,
+                                    scale=1.0 / math.sqrt(cfg.d_model)),
+        }
+
+    # -- group bodies ----------------------------------------------------------
+    def _group_fwd(self, x, gp, positions, collect_kv: bool, states=None):
+        cfg = self.cfg
+        x, kv = _block_fwd(gp["attn"], x, positions, cfg, collect_kv)
+        new_states = []
+        mi = di = 0
+        for j in range(1, self.group):
+            if j % 2 == 1:
+                lp = jax.tree.map(lambda a: a[mi], gp["moe"])
+                mi += 1
+            else:
+                lp = jax.tree.map(lambda a: a[di], gp["dense"])
+                di += 1
+            st = None if states is None else jax.tree.map(lambda a, j=j: a[j - 1], states)
+            x, ns = _mamba_layer_fwd(lp, x, cfg, st)
+            new_states.append(ns)
+        stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+        return x, kv, stacked
+
+    def _run(self, params, x, positions, collect_kv: bool, remat: bool):
+        def body(carry, gp):
+            y, kv, ms = self._group_fwd(carry, gp, positions, collect_kv)
+            return y, (kv, ms) if collect_kv else None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        gps = {
+            "attn": params["attn_layers"],
+            "moe": params["mamba_moe"],
+            "dense": params["mamba_dense"],
+        }
+        x, ys = jax.lax.scan(body, x, gps)
+        return x, ys
+
+    # -- entry points -----------------------------------------------------------
+    def unembed_weight(self, params):
+        return params["lm_head"], "dv"
+
+    def train_hidden(self, params, batch, remat: bool = True):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        x = constrain(x, ("batch", "seq", "embed"))
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, _ = self._run(params, x, positions, collect_kv=False, remat=remat)
+        return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def train_logits(self, params, batch, remat: bool = True):
+        x = self.train_hidden(params, batch, remat)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+        return constrain(logits, ("batch", "seq", "vocab"))
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        x = params["embed"][batch["tokens"]]
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, ((ks, vs), mstates) = self._run(params, x, positions, collect_kv=True, remat=False)
+        x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+        cache = {"k": ks, "v": vs, "mamba": mstates}
+        return constrain(logits, ("batch", "vocab")), cache
+
+    def decode(self, params, tokens, cache, lens):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens]
+
+        def body(carry, xs):
+            gp, ck, cv, ms = xs
+            y, ck, cv, _ = _block_decode(gp["attn"], carry, ck, cv, lens, cfg)
+            new_states = []
+            mi = di = 0
+            for j in range(1, self.group):
+                if j % 2 == 1:
+                    lp = jax.tree.map(lambda a: a[mi], gp["moe"])
+                    mi += 1
+                else:
+                    lp = jax.tree.map(lambda a: a[di], gp["dense"])
+                    di += 1
+                st = jax.tree.map(lambda a, j=j: a[j - 1], ms)
+                y, ns = _mamba_layer_fwd(lp, y, cfg, st)
+                new_states.append(ns)
+            stacked = jax.tree.map(lambda *a: jnp.stack(a), *new_states)
+            return y, (ck, cv, stacked)
+
+        gps = {
+            "attn": params["attn_layers"],
+            "moe": params["mamba_moe"],
+            "dense": params["mamba_dense"],
+        }
+        x, (nk, nv, nm) = jax.lax.scan(body, x, (gps, cache["k"], cache["v"], cache["mamba"]))
+        x = L.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+        return constrain(logits, ("batch", "vocab")), {"k": nk, "v": nv, "mamba": nm}
+
+    def cache_struct(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        hd = cfg.resolved_head_dim
+        kv_shape = (self.n_groups, batch, seq_len, cfg.n_kv_heads, hd)
+        ms = mamba_state_struct(cfg, batch)
+        stacked = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((self.n_groups, self.n_mamba) + a.shape, a.dtype), ms
+        )
+        return {
+            "k": jax.ShapeDtypeStruct(kv_shape, dt),
+            "v": jax.ShapeDtypeStruct(kv_shape, dt),
+            "mamba": stacked,
+        }

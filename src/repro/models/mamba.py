@@ -1,0 +1,143 @@
+"""Mamba (S6) mixer — the SSM layer of the Jamba hybrid.
+
+Selective scan runs chunked: an outer ``lax.scan`` over sequence chunks
+carries the (B, d_inner, d_state) SSM state; the inner per-chunk scan is
+wrapped in ``jax.checkpoint`` so training backward stores only chunk-boundary
+states (the same recompute strategy as the reference CUDA kernel).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init
+
+MAMBA_CHUNK = 256
+
+
+def mamba_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    d_inner = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or max(1, cfg.d_model // 16)
+    return d_inner, dt_rank, cfg.ssm.d_state
+
+
+def init_mamba(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    d_in, dt_rank, N = mamba_dims(cfg)
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    # S4D-real initialization for A
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32), (d_in, N))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in), dt),
+        "conv_w": dense_init(ks[1], (d_in, cfg.ssm.conv_width), dt, scale=0.5),
+        "conv_b": jnp.zeros((d_in,), dt),
+        "x_proj": dense_init(ks[2], (d_in, dt_rank + 2 * N), dt),
+        "dt_proj": dense_init(ks[3], (dt_rank, d_in), dt),
+        "dt_bias": jnp.full((d_in,), -4.6, jnp.float32),  # softplus^-1(0.01)
+        "A_log": jnp.log(A),
+        "D": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[4], (d_in, d), dt),
+    }
+
+
+def _causal_conv(x, w, b, state=None):
+    """x: (B, S, d_in); w: (d_in, W); state: (B, W-1, d_in) trailing context.
+
+    Returns (y, new_state) with y[t] = b + sum_j w[:, j] * x[t - W + 1 + j].
+    """
+    B, S, d_in = x.shape
+    W = w.shape[1]
+    if state is None:
+        state = jnp.zeros((B, W - 1, d_in), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)  # (B, S + W - 1, d_in)
+    y = jnp.zeros_like(x)
+    for j in range(W):
+        y = y + xp[:, j:j + S] * w[None, None, :, j]
+    new_state = xp[:, S:]  # last W-1 inputs
+    return y + b[None, None, :], new_state
+
+
+def _ssm_chunk(h0, xs, A):
+    """One chunk of the selective scan.  h0: (B, d_in, N);
+    xs = (x, dt, Bm, Cm) with x/dt: (B, Q, d_in), Bm/Cm: (B, Q, N)."""
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp  # (B,d_in),(B,d_in),(B,N),(B,N)
+        dA = jnp.exp(dt_t[..., None] * A[None])            # (B,d_in,N)
+        h = dA * h + (dt_t * x_t)[..., None] * B_t[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, C_t)
+        return h, y
+
+    x, dt, Bm, Cm = xs
+    h, ys = jax.lax.scan(
+        step, h0,
+        (x.transpose(1, 0, 2), dt.transpose(1, 0, 2),
+         Bm.transpose(1, 0, 2), Cm.transpose(1, 0, 2)),
+    )
+    return h, ys.transpose(1, 0, 2)  # (B, Q, d_in)
+
+
+def mamba_mixer(p, x, cfg: ModelConfig, state=None, chunk: int = MAMBA_CHUNK):
+    """x: (B, S, D) -> (y, new_state).
+
+    state: None (prefill from scratch) or dict(conv=(B,W-1,d_in) in compute
+    dtype, ssm=(B,d_in,N) float32).
+    """
+    B, S, D = x.shape
+    d_in, dt_rank, N = mamba_dims(cfg)
+
+    xz = x @ p["in_proj"]                       # (B, S, 2*d_in)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs = constrain(xs, ("batch", "seq", "ssm_inner"))
+
+    conv_state = None if state is None else state["conv"]
+    xc, new_conv = _causal_conv(xs, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+
+    proj = xc @ p["x_proj"]                     # (B, S, dt_rank + 2N)
+    dt_low = proj[..., :dt_rank]
+    Bm = proj[..., dt_rank:dt_rank + N].astype(jnp.float32)
+    Cm = proj[..., dt_rank + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        (dt_low @ p["dt_proj"]).astype(jnp.float32) + p["dt_bias"]
+    )                                           # (B, S, d_in) f32
+    A = -jnp.exp(p["A_log"])                    # (d_in, N) f32
+    xc_f = xc.astype(jnp.float32)
+
+    h0 = jnp.zeros((B, d_in, N), jnp.float32) if state is None else state["ssm"]
+
+    Q = min(chunk, S)
+    if S % Q:
+        Q = math.gcd(S, Q) or 1
+
+    if S == 1:  # decode fast path
+        h, ys = _ssm_chunk(h0, (xc_f, dt, Bm, Cm), A)
+    else:
+        nC = S // Q
+        reshape = lambda a: a.reshape(B, nC, Q, a.shape[-1]).transpose(1, 0, 2, 3)
+        xs_c = (reshape(xc_f), reshape(dt), reshape(Bm), reshape(Cm))
+
+        chunk_fn = jax.checkpoint(lambda h, inp: _ssm_chunk(h, inp, A), prevent_cse=False)
+        h, ys = jax.lax.scan(chunk_fn, h0, xs_c)
+        ys = ys.transpose(1, 0, 2, 3).reshape(B, S, d_in)
+
+    y = ys + xc_f * p["D"][None, None, :]
+    y = (y.astype(x.dtype)) * jax.nn.silu(z)
+    out = y @ p["out_proj"]
+    out = constrain(out, ("batch", "seq", "embed"))
+    new_state = {"conv": new_conv, "ssm": h}
+    return out, new_state
+
+
+def mamba_state_struct(cfg: ModelConfig, batch: int):
+    d_in, _, N = mamba_dims(cfg)
+    return {
+        "conv": jax.ShapeDtypeStruct((batch, cfg.ssm.conv_width - 1, d_in), jnp.dtype(cfg.param_dtype)),
+        "ssm": jax.ShapeDtypeStruct((batch, d_in, N), jnp.float32),
+    }

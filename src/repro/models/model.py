@@ -1,0 +1,175 @@
+"""Model factory + unified API.
+
+``build_model(cfg)`` dispatches on the config family and returns a wrapper
+exposing a uniform surface:
+
+  init(rng) -> params
+  train_hidden / train_logits(params, batch)
+  prefill(params, batch) -> (last_logits, cache)
+  decode(params, tokens, cache, lens) -> (logits, cache)
+  loss(params, batch) -> (scalar, metrics)       # chunked cross-entropy
+  cache_struct(batch, seq_len)
+  input_specs(shape_spec) -> dict of ShapeDtypeStruct (modality stubs incl.)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.distributed.sharding import constrain
+from repro.models.hybrid import HybridLM
+from repro.models.transformer import TransformerLM
+from repro.models.whisper import WhisperModel
+from repro.models.xlstm import XLSTMLM
+
+XENT_CHUNK = 512
+
+
+def chunked_cross_entropy(hidden, unembed, kind: str, labels, mask=None, chunk: int = XENT_CHUNK):
+    """Cross-entropy fused with the unembedding, chunked over sequence so the
+    (B, S, V) logits tensor never materializes in fp32.
+
+    hidden: (B, S, D); unembed: (D, V) if kind == "dv" else (V, D);
+    labels: (B, S) int32; mask: (B, S) float or None.
+    """
+    B, S, D = hidden.shape
+    V = unembed.shape[1] if kind == "dv" else unembed.shape[0]
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+
+    c = min(chunk, S)
+    while S % c:
+        c -= 1
+    nC = S // c
+
+    def body(acc, xs):
+        h, y, m = xs                                   # (B,c,D), (B,c), (B,c)
+        eq = "bcd,dv->bcv" if kind == "dv" else "bcd,vd->bcv"
+        logits = jnp.einsum(eq, h, unembed).astype(jnp.float32)
+        logits = constrain(logits, ("batch", None, "vocab"))
+        logz = jax.nn.logsumexp(logits, axis=-1)       # (B,c)
+        oh = jax.nn.one_hot(y, V, dtype=logits.dtype)
+        ll = jnp.einsum("bcv,bcv->bc", oh, logits)
+        loss = jnp.sum((logz - ll) * m)
+        return (acc[0] + loss, acc[1] + jnp.sum(m)), None
+
+    resh = lambda a: a.reshape(B, nC, c, *a.shape[2:]).swapaxes(0, 1)
+    body = jax.checkpoint(body, prevent_cse=False)
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)),
+        (resh(hidden), resh(labels), resh(mask)),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        if cfg.family in ("dense", "moe", "vlm"):
+            self.impl = TransformerLM(cfg)
+        elif cfg.family == "hybrid":
+            self.impl = HybridLM(cfg)
+        elif cfg.family == "ssm":
+            self.impl = XLSTMLM(cfg)
+        elif cfg.family == "encdec":
+            self.impl = WhisperModel(cfg)
+        else:
+            raise ValueError(f"unknown family {cfg.family!r}")
+
+    # passthrough ------------------------------------------------------------
+    def init(self, rng):
+        return self.impl.init(rng)
+
+    def init_shape(self, rng=None):
+        """Param ShapeDtypeStructs without allocation (for the dry-run)."""
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        return jax.eval_shape(self.impl.init, rng)
+
+    def train_hidden(self, params, batch, remat: bool = True):
+        return self.impl.train_hidden(params, batch, remat=remat)
+
+    def train_logits(self, params, batch, remat: bool = True):
+        return self.impl.train_logits(params, batch, remat=remat)
+
+    def prefill(self, params, batch):
+        from repro.models.layers import attention_phase
+        with attention_phase("prefill"):
+            return self.impl.prefill(params, batch)
+
+    def decode(self, params, tokens, cache, lens):
+        return self.impl.decode(params, tokens, cache, lens)
+
+    def cache_struct(self, batch: int, seq_len: int):
+        return self.impl.cache_struct(batch, seq_len)
+
+    # loss ---------------------------------------------------------------------
+    def loss(self, params, batch, remat: bool = True):
+        hidden = self.train_hidden(params, batch, remat=remat)
+        w, kind = self.impl.unembed_weight(params)
+        labels = batch["labels"]
+        # VLM: hidden includes patch positions at the front; loss on text tail
+        if labels.shape[1] != hidden.shape[1]:
+            hidden = hidden[:, -labels.shape[1]:]
+        loss = chunked_cross_entropy(hidden, w, kind, labels, batch.get("loss_mask"))
+        return loss, {"loss": loss}
+
+    # input specs -----------------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec) -> Dict[str, Any]:
+        """ShapeDtypeStruct stand-ins for every model input of this shape cell."""
+        cfg = self.cfg
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        emb_dt = jnp.dtype(cfg.param_dtype)
+
+        if shape.kind == "train":
+            specs: Dict[str, Any] = {}
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder.seq_len, cfg.d_model), emb_dt
+                )
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            elif cfg.family == "vlm":
+                P = cfg.n_patch_tokens
+                specs["patch_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), emb_dt)
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+                specs["labels"] = jax.ShapeDtypeStruct((B, S - P), i32)
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+                specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+            return specs
+
+        if shape.kind == "prefill":
+            specs = {}
+            if cfg.family == "encdec":
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (B, cfg.encoder.seq_len, cfg.d_model), emb_dt
+                )
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            elif cfg.family == "vlm":
+                P = cfg.n_patch_tokens
+                specs["patch_embeds"] = jax.ShapeDtypeStruct((B, P, cfg.d_model), emb_dt)
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S - P), i32)
+            else:
+                specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+            return specs
+
+        # decode: one new token against a cache of length S
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, 1), i32),
+            "cache": self.cache_struct(B, S),
+            "lens": jax.ShapeDtypeStruct((B,), i32),
+        }
+
+
+_MODEL_CACHE: Dict[str, Model] = {}
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    key = cfg.name
+    if key not in _MODEL_CACHE or _MODEL_CACHE[key].cfg is not cfg:
+        _MODEL_CACHE[key] = Model(cfg)
+    return _MODEL_CACHE[key]

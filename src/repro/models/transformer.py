@@ -1,0 +1,306 @@
+"""Decoder-only transformer LM (dense / MoE / SWA / VLM families).
+
+Layers are stored stacked (leading layer dim) and executed with
+``jax.lax.scan`` so that 88-layer configs lower to a single compact HLO loop.
+Supports three entry points:
+
+  * ``train_logits``  — full-sequence logits (used by the training step)
+  * ``prefill``       — forward + KV-cache construction, last-position logits
+  * ``decode``        — one token with a padded (or SWA ring) KV cache
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+def _block_init(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    ks = jax.random.split(rng, 4)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: Dict[str, Any] = {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(ks[0], cfg),
+        "ffn_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if cfg.moe is not None and cfg.moe.every == 1:
+        p["moe"] = L.init_moe(ks[1], cfg)
+        if cfg.moe.dense_residual:
+            p["ffn"] = L.init_ffn(ks[2], cfg.d_model, cfg.d_ff, dt)
+    else:
+        p["ffn"] = L.init_ffn(ks[1], cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def _block_ffn(p, x, cfg: ModelConfig):
+    h = L.rms_norm(x, p["ffn_norm"], cfg.norm_eps)
+    if "moe" in p:
+        moe_fn = L.moe_ffn_scatter if cfg.moe_impl == "scatter" else L.moe_ffn
+        out = moe_fn(p["moe"], h, cfg)
+        if "ffn" in p:  # arctic dense residual (parallel branch)
+            out = out + L.ffn(p["ffn"], h)
+    else:
+        out = L.ffn(p["ffn"], h)
+    return x + out
+
+
+def _block_fwd(p, x, positions, cfg: ModelConfig, collect_kv: bool):
+    """Full-sequence causal block (train / prefill)."""
+    h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k, v = L.qkv_project(p["attn"], h, cfg, positions)
+    attn = L.attention(
+        q, k, v, q_offset=0, causal=True, sliding_window=cfg.sliding_window
+    )
+    # residual stream may be sequence-sharded (Megatron-SP style): norms and
+    # residual adds then run on S/TP-sharded activations; GSPMD turns the
+    # row-parallel matmuls' all-reduces into reduce-scatter + all-gather
+    x = constrain(x + L.attn_output(p["attn"], attn, cfg),
+                  ("batch", "act_seq", "embed"))
+    x = constrain(_block_ffn(p, x, cfg), ("batch", "act_seq", "embed"))
+    cache_axes = ("batch", "cache_seq", "cache_heads", "cache_hd")
+    kv = (constrain(k, cache_axes), constrain(v, cache_axes)) if collect_kv else None
+    return x, kv
+
+
+def _block_decode(p, x, cache_k, cache_v, lens, cfg: ModelConfig, kv_positions=None):
+    """Single-token block against a padded KV cache.
+
+    cache_k/v: (B, S, Hkv, hd); lens: (B,) current lengths (write position for
+    linear caches; for SWA ring caches the write slot is lens % W and
+    ``kv_positions`` carries per-slot absolute positions).
+    """
+    B = x.shape[0]
+    h = L.rms_norm(x, p["attn_norm"], cfg.norm_eps)
+    q, k_new, v_new = L.qkv_project(p["attn"], h, cfg, lens[:, None])
+
+    W = cache_k.shape[1]
+    slot = lens % W if cfg.sliding_window else lens
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k_new[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v_new[:, 0])
+
+    if cfg.sliding_window:
+        new_kv_positions = kv_positions.at[bidx, slot].set(lens)
+        attn = L.attention(
+            q, cache_k, cache_v,
+            q_offset=lens, causal=True, sliding_window=cfg.sliding_window,
+            kv_positions=new_kv_positions,
+        )
+    else:
+        new_kv_positions = None
+        attn = L.attention(q, cache_k, cache_v, q_offset=lens, kv_lens=lens + 1)
+    x = x + L.attn_output(p["attn"], attn, cfg)
+    x = _block_ffn(p, x, cfg)
+    return x, cache_k, cache_v, new_kv_positions
+
+
+class TransformerLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    # -- params ------------------------------------------------------------
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        k_emb, k_layers, k_head = jax.random.split(rng, 3)
+        layer_rngs = jax.random.split(k_layers, cfg.n_layers)
+        stacked = jax.vmap(lambda r: _block_init(r, cfg))(layer_rngs)
+        params = {
+            "embed": L.dense_init(k_emb, (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+            "layers": stacked,
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L.dense_init(
+                k_head, (cfg.d_model, cfg.vocab_size), dt, scale=1.0 / math.sqrt(cfg.d_model)
+            )
+        return params
+
+    # -- shared ------------------------------------------------------------
+    def _embed_inputs(self, params, batch: Dict[str, Any]):
+        cfg = self.cfg
+        tok_emb = params["embed"][batch["tokens"]]  # (B, St, D) gather
+        if cfg.n_patch_tokens and "patch_embeds" in batch:
+            x = jnp.concatenate(
+                [batch["patch_embeds"].astype(tok_emb.dtype), tok_emb], axis=1
+            )
+        else:
+            x = tok_emb
+        return constrain(x, ("batch", "seq", "embed"))
+
+    def _unembed(self, params, x):
+        if "lm_head" in params:
+            logits = jnp.einsum("...d,dv->...v", x, params["lm_head"])
+        else:
+            logits = jnp.einsum("...d,vd->...v", x, params["embed"])
+        return logits
+
+    def _run_layers(self, params, x, positions, collect_kv: bool, remat: bool):
+        cfg = self.cfg
+
+        def body(carry, lp):
+            y, kv = _block_fwd(lp, carry, positions, cfg, collect_kv)
+            return y, kv
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, kvs = jax.lax.scan(body, x, params["layers"])
+        return x, kvs
+
+    def unembed_weight(self, params):
+        if "lm_head" in params:
+            return params["lm_head"], "dv"
+        return params["embed"], "vd"
+
+    # -- entry points --------------------------------------------------------
+    def train_hidden(self, params, batch: Dict[str, Any], remat: bool = True):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, _ = self._run_layers(params, x, positions, collect_kv=False, remat=remat)
+        return L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+
+    def train_logits(self, params, batch: Dict[str, Any], remat: bool = True):
+        logits = self._unembed(params, self.train_hidden(params, batch, remat))
+        return constrain(logits, ("batch", "seq", "vocab"))
+
+    def prefill(self, params, batch: Dict[str, Any]):
+        cfg = self.cfg
+        x = self._embed_inputs(params, batch)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+        x, (ks, vs) = self._run_layers(params, x, positions, collect_kv=True, remat=False)
+        x = L.rms_norm(x[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = self._unembed(params, x)[:, 0]
+
+        if cfg.sliding_window:
+            # Always return a W-sized ring cache so decode wraps correctly.
+            W = cfg.sliding_window
+            nL = ks.shape[0]
+            if S >= W:
+                pos = jnp.arange(S - W, S)
+                slots = pos % W
+                ks_r = jnp.zeros_like(ks[:, :, :W]).at[:, :, slots].set(ks[:, :, S - W:])
+                vs_r = jnp.zeros_like(vs[:, :, :W]).at[:, :, slots].set(vs[:, :, S - W:])
+                kv_pos = jnp.zeros((B, W), jnp.int32).at[:, slots].set(pos[None, :])
+            else:
+                pad = [(0, 0), (0, 0), (0, W - S), (0, 0), (0, 0)]
+                ks_r = jnp.pad(ks, pad)
+                vs_r = jnp.pad(vs, pad)
+                kv_pos = jnp.full((B, W), L.INVALID_POS, jnp.int32).at[:, :S].set(
+                    jnp.arange(S)[None, :]
+                )
+            cache = {
+                "k": ks_r,
+                "v": vs_r,
+                "kv_pos": jnp.broadcast_to(kv_pos[None], (nL, B, W)),
+            }
+        else:
+            cache = {"k": ks, "v": vs}  # (L, B, S, Hkv, hd)
+        return logits, cache
+
+    def decode(self, params, tokens, cache, lens):
+        """tokens: (B, 1); cache k/v: (L, B, S, Hkv, hd); lens: (B,)."""
+        cfg = self.cfg
+        x = params["embed"][tokens]
+        x = constrain(x, ("batch", None, "embed"))
+
+        has_pos = "kv_pos" in cache
+
+        def body(carry, xs):
+            if has_pos:
+                lp, ck, cv, kp = xs
+            else:
+                lp, ck, cv = xs
+                kp = None
+            y, ck, cv, kp = _block_decode(lp, carry, ck, cv, lens, cfg, kv_positions=kp)
+            return y, ((ck, cv, kp) if has_pos else (ck, cv))
+
+        xs = (params["layers"], cache["k"], cache["v"])
+        if has_pos:
+            xs = xs + (cache["kv_pos"],)
+        x, new = jax.lax.scan(body, x, xs)
+        new_cache = {"k": new[0], "v": new[1]}
+        if has_pos:
+            new_cache["kv_pos"] = new[2]
+        x = L.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+        logits = self._unembed(params, x)
+        return constrain(logits, ("batch", "vocab")), new_cache
+
+    def chunked_step(self, params, tokens, cache, lens, chunk_lens,
+                     *, use_pallas: bool = False):
+        """One chunked-prefill engine round (Sarathi semantics, §3.1).
+
+        The mixed batch is slot-aligned: every sequence slot advances by its
+        ``chunk_lens[b]`` tokens this round — decode slots advance by 1 (their
+        freshly sampled token), prefill slots by their scheduled chunk,
+        inactive slots by 0.  tokens: (B, C) right-padded; cache k/v:
+        (L, B, S+1, Hkv, hd) — the +1 row is a write sink for padding;
+        lens: (B,) tokens already in cache; returns (logits_at_chunk_end,
+        new_cache).
+
+        Attention is the chunked-prefill kernel's exact computation: the
+        chunk's queries attend to (prefix ‖ chunk) with a causal offset —
+        ``use_pallas=True`` runs kernels/chunked_prefill_attention (interpret
+        mode on CPU, Mosaic on TPU); False uses its jnp oracle.
+        """
+        from repro.kernels import ops as kops
+
+        cfg = self.cfg
+        assert not cfg.sliding_window, "engine demo path supports linear caches"
+        B, C = tokens.shape
+        S_pad = cache["k"].shape[2]          # S + 1 (padding sink row)
+        positions = lens[:, None] + jnp.arange(C)[None, :]
+        write_mask = jnp.arange(C)[None, :] < chunk_lens[:, None]
+        # padding positions scatter into the sink row S_pad-1
+        write_pos = jnp.where(write_mask, positions, S_pad - 1)
+        kv_lens = lens + chunk_lens
+        bidx = jnp.arange(B)
+
+        x = params["embed"][tokens]
+        x = constrain(x, ("batch", "seq", "embed"))
+
+        def body(carry, xs):
+            lp, ck, cv = xs
+            h = L.rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = L.qkv_project(lp["attn"], h, cfg, positions)
+            ck = ck.at[bidx[:, None], write_pos].set(k_new)
+            cv = cv.at[bidx[:, None], write_pos].set(v_new)
+            attn = kops.prefill_chunk_attention(
+                q, ck[:, :-1], cv[:, :-1], kv_lens, lens,
+                use_pallas=use_pallas,
+            )
+            y = carry + L.attn_output(lp["attn"], attn, cfg)
+            y = _block_ffn(lp, y, cfg)
+            return y, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        # logits at each slot's last chunk position (chunk_len-1; slot 0 for idle)
+        last = jnp.maximum(chunk_lens - 1, 0)
+        x_last = x[bidx, last]                       # (B, D)
+        logits = self._unembed(params, x_last)
+        return constrain(logits, ("batch", "vocab")), {"k": nk, "v": nv}
+
+    # -- cache/spec helpers ---------------------------------------------------
+    def cache_struct(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        S = cfg.sliding_window if cfg.sliding_window else seq_len
+        hd = cfg.resolved_head_dim
+        shape = (cfg.n_layers, batch, S, cfg.n_kv_heads, hd)
+        c = {
+            "k": jax.ShapeDtypeStruct(shape, dt),
+            "v": jax.ShapeDtypeStruct(shape, dt),
+        }
+        if cfg.sliding_window:
+            c["kv_pos"] = jax.ShapeDtypeStruct((cfg.n_layers, batch, S), jnp.int32)
+        return c

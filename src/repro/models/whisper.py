@@ -1,0 +1,208 @@
+"""Whisper-style encoder-decoder (audio backbone; conv frontend stubbed).
+
+Per the assignment the modality frontend is a STUB: ``input_specs()`` provides
+precomputed frame embeddings (B, enc_seq, d_model).  The 32-layer
+bidirectional encoder, and the 32-layer decoder with self-attention (causal,
+KV cache) + cross-attention (encoder KV computed once at prefill) are real.
+Whisper uses sinusoidal absolute positions and GELU MLPs (no RoPE/SwiGLU).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+
+
+def sinusoid_at(positions, d_model: int):
+    """positions: any int array -> (..., d_model) sinusoidal embeddings."""
+    pos = positions.astype(jnp.float32)[..., None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)
+    ang = pos / jnp.power(10_000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def sinusoid(seq_len: int, d_model: int):
+    return sinusoid_at(jnp.arange(seq_len), d_model)
+
+
+def _init_mlp(rng, d: int, d_ff: int, dt):
+    k1, k2 = jax.random.split(rng)
+    return {
+        "w_in": L.dense_init(k1, (d, d_ff), dt),
+        "w_out": L.dense_init(k2, (d_ff, d), dt, scale=1.0 / math.sqrt(d_ff)),
+    }
+
+
+def _mlp(p, x):
+    h = jax.nn.gelu(x @ p["w_in"])
+    h = constrain(h, ("batch", "seq", "mlp"))
+    return constrain(h @ p["w_out"], ("batch", "seq", "embed"))
+
+
+def _init_enc_block(rng, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(rng)
+    return {
+        "attn_norm": jnp.ones((cfg.d_model,), dt),
+        "attn": L.init_attention(k1, cfg),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp": _init_mlp(k2, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+def _init_dec_block(rng, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(rng, 3)
+    return {
+        "self_norm": jnp.ones((cfg.d_model,), dt),
+        "self_attn": L.init_attention(k1, cfg),
+        "cross_norm": jnp.ones((cfg.d_model,), dt),
+        "cross_attn": L.init_attention(k2, cfg),
+        "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        "mlp": _init_mlp(k3, cfg.d_model, cfg.d_ff, dt),
+    }
+
+
+class WhisperModel:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        ks = jax.random.split(rng, 4)
+        enc_rngs = jax.random.split(ks[0], cfg.encoder.n_layers)
+        dec_rngs = jax.random.split(ks[1], cfg.n_layers)
+        return {
+            "embed": L.dense_init(ks[2], (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+            "enc_blocks": jax.vmap(lambda r: _init_enc_block(r, cfg))(enc_rngs),
+            "dec_blocks": jax.vmap(lambda r: _init_dec_block(r, cfg))(dec_rngs),
+            "enc_norm": jnp.ones((cfg.d_model,), dt),
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+        }
+
+    # -- encoder -------------------------------------------------------------
+    def encode(self, params, frames, remat: bool = False):
+        """frames: (B, enc_seq, D) precomputed frame embeddings (stub frontend)."""
+        cfg = self.cfg
+        x = frames.astype(jnp.dtype(cfg.param_dtype))
+        x = x + sinusoid(x.shape[1], cfg.d_model).astype(x.dtype)[None]
+        x = constrain(x, ("batch", "seq", "embed"))
+
+        def body(carry, lp):
+            h = L.rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+            q, k, v = L.qkv_project(lp["attn"], h, cfg, rope=False)
+            a = L.attention(q, k, v, causal=False)
+            y = carry + L.attn_output(lp["attn"], a, cfg)
+            y = y + _mlp(lp["mlp"], L.rms_norm(y, lp["mlp_norm"], cfg.norm_eps))
+            return y, None
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(body, x, params["enc_blocks"])
+        return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder -------------------------------------------------------------
+    def _dec_fwd(self, params, tokens, enc_out, collect_kv: bool,
+                 remat: bool = False):
+        cfg = self.cfg
+        B, S = tokens.shape
+        x = params["embed"][tokens]
+        x = x + sinusoid(S, cfg.d_model).astype(x.dtype)[None]
+        x = constrain(x, ("batch", "seq", "embed"))
+
+        def body(carry, lp):
+            h = L.rms_norm(carry, lp["self_norm"], cfg.norm_eps)
+            q, k, v = L.qkv_project(lp["self_attn"], h, cfg, rope=False)
+            a = L.attention(q, k, v, causal=True)
+            y = carry + L.attn_output(lp["self_attn"], a, cfg)
+            h2 = L.rms_norm(y, lp["cross_norm"], cfg.norm_eps)
+            q2 = jnp.einsum("bsd,dhk->bshk", h2, lp["cross_attn"]["wq"])
+            ck = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wk"])
+            cv = jnp.einsum("bsd,dhk->bshk", enc_out, lp["cross_attn"]["wv"])
+            a2 = L.attention(q2, ck, cv, causal=False)
+            y = y + L.attn_output(lp["cross_attn"], a2, cfg)
+            y = y + _mlp(lp["mlp"], L.rms_norm(y, lp["mlp_norm"], cfg.norm_eps))
+            ca = ("batch", "cache_seq", "cache_heads", "cache_hd")
+            kv = (
+                (constrain(k, ca), constrain(v, ca),
+                 constrain(ck, ca), constrain(cv, ca))
+                if collect_kv else None
+            )
+            return y, kv
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        x, kvs = jax.lax.scan(body, x, params["dec_blocks"])
+        return L.rms_norm(x, params["final_norm"], cfg.norm_eps), kvs
+
+    def unembed_weight(self, params):
+        return params["embed"], "vd"
+
+    def train_hidden(self, params, batch, remat: bool = True):
+        enc_out = self.encode(params, batch["frames"], remat=remat)
+        x, _ = self._dec_fwd(
+            params, batch["tokens"], enc_out, collect_kv=False, remat=remat
+        )
+        return x
+
+    def train_logits(self, params, batch, remat: bool = True):
+        x = self.train_hidden(params, batch, remat)
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+        return constrain(logits, ("batch", "seq", "vocab"))
+
+    def prefill(self, params, batch):
+        enc_out = self.encode(params, batch["frames"])
+        x, (sk, sv, ck, cv) = self._dec_fwd(params, batch["tokens"], enc_out, collect_kv=True)
+        logits = jnp.einsum("bd,vd->bv", x[:, -1], params["embed"])
+        cache = {"self_k": sk, "self_v": sv, "cross_k": ck, "cross_v": cv}
+        return constrain(logits, ("batch", "vocab")), cache
+
+    def decode(self, params, tokens, cache, lens):
+        cfg = self.cfg
+        B = tokens.shape[0]
+        x = params["embed"][tokens]
+        x = x + sinusoid_at(lens, cfg.d_model)[:, None].astype(x.dtype)
+
+        def body(carry, xs):
+            lp, k_c, v_c, ck, cv = xs
+            h = L.rms_norm(carry, lp["self_norm"], cfg.norm_eps)
+            q, k_new, v_new = L.qkv_project(lp["self_attn"], h, cfg, rope=False)
+            bidx = jnp.arange(B)
+            k_c = k_c.at[bidx, lens].set(k_new[:, 0])
+            v_c = v_c.at[bidx, lens].set(v_new[:, 0])
+            a = L.attention(q, k_c, v_c, q_offset=lens, kv_lens=lens + 1)
+            y = carry + L.attn_output(lp["self_attn"], a, cfg)
+            h2 = L.rms_norm(y, lp["cross_norm"], cfg.norm_eps)
+            q2 = jnp.einsum("bsd,dhk->bshk", h2, lp["cross_attn"]["wq"])
+            a2 = L.attention(q2, ck, cv, causal=False)
+            y = y + L.attn_output(lp["cross_attn"], a2, cfg)
+            y = y + _mlp(lp["mlp"], L.rms_norm(y, lp["mlp_norm"], cfg.norm_eps))
+            return y, (k_c, v_c)
+
+        xs = (params["dec_blocks"], cache["self_k"], cache["self_v"],
+              cache["cross_k"], cache["cross_v"])
+        x, (nk, nv) = jax.lax.scan(body, x, xs)
+        x = L.rms_norm(x[:, -1], params["final_norm"], cfg.norm_eps)
+        logits = jnp.einsum("bd,vd->bv", x, params["embed"])
+        new_cache = dict(cache, self_k=nk, self_v=nv)
+        return constrain(logits, ("batch", "vocab")), new_cache
+
+    def cache_struct(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        hd = cfg.resolved_head_dim
+        self_shape = (cfg.n_layers, batch, seq_len, cfg.n_kv_heads, hd)
+        cross_shape = (cfg.n_layers, batch, cfg.encoder.seq_len, cfg.n_kv_heads, hd)
+        return {
+            "self_k": jax.ShapeDtypeStruct(self_shape, dt),
+            "self_v": jax.ShapeDtypeStruct(self_shape, dt),
+            "cross_k": jax.ShapeDtypeStruct(cross_shape, dt),
+            "cross_v": jax.ShapeDtypeStruct(cross_shape, dt),
+        }

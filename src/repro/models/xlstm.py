@@ -1,0 +1,324 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel prefill) and sLSTM
+(scalar memory, sequential recurrence), per arXiv:2405.04517.
+
+Layer pattern (xLSTM[7:1]): one sLSTM per ``slstm_every`` layers, rest mLSTM.
+mLSTM uses exponential input gating + logsigmoid forget gating with the
+standard log-space stabilizer; prefill runs the chunkwise-parallel form
+(quadratic within a chunk, recurrent across chunks) so long-context prefill is
+sub-quadratic and decode is O(1) state.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import dense_init, rms_norm
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    H = cfg.n_heads
+    hd = cfg.resolved_head_dim
+    d_in = H * hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 8)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "wq": dense_init(ks[0], (d, H, hd), dt),
+        "wk": dense_init(ks[1], (d, H, hd), dt),
+        "wv": dense_init(ks[2], (d, H, hd), dt),
+        "wi": dense_init(ks[3], (d, H), jnp.float32, scale=0.1),
+        "wf": dense_init(ks[4], (d, H), jnp.float32, scale=0.1),
+        "bf": jnp.full((H,), 3.0, jnp.float32),  # bias forget gate open
+        "wog": dense_init(ks[5], (d, d_in), dt),
+        "out_norm": jnp.ones((d_in,), dt),
+        "down_proj": dense_init(ks[6], (d_in, d), dt),
+    }
+
+
+def _mlstm_chunk(carry, xs, hd: int):
+    """Chunkwise-parallel mLSTM step.
+
+    carry: (C (B,H,hd,hd) f32, n (B,H,hd) f32, m (B,H) f32)
+    xs: q,k,v (B,Q,H,hd); log_i, log_f (B,Q,H) f32
+    Returns new carry and h (B,Q,H,hd).
+    """
+    C_prev, n_prev, m_prev = carry
+    q, k, v, log_i, log_f = xs
+    B, Q, H, _ = q.shape
+    qf = q.astype(jnp.float32) / math.sqrt(hd)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    lf_cum = jnp.cumsum(log_f, axis=1)                     # (B,Q,H) inclusive
+    # intra-chunk decay matrix D[t,s] = lf_cum[t]-lf_cum[s]+log_i[s], s<=t
+    Dm = lf_cum[:, :, None, :] - lf_cum[:, None, :, :] + log_i[:, None, :, :]
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    Dm = jnp.where(tri[None, :, :, None], Dm, NEG_INF)     # (B,t,s,H)
+
+    inter_scale = lf_cum + m_prev[:, None, :]              # (B,Q,H)
+    m_t = jnp.maximum(jnp.max(Dm, axis=2), inter_scale)    # (B,Q,H)
+    m_t = jnp.maximum(m_t, -1e30)
+
+    w_intra = jnp.exp(Dm - m_t[:, :, None, :])             # (B,t,s,H)
+    w_inter = jnp.exp(inter_scale - m_t)                   # (B,Q,H)
+
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * w_intra
+    h_intra = jnp.einsum("btsh,bshd->bthd", scores, vf)
+    h_inter = w_inter[..., None] * jnp.einsum("bthd,bhde->bthe", qf, C_prev)
+
+    n_intra = jnp.einsum("btsh,bshd->bthd", w_intra, kf)
+    n_t = w_inter[..., None] * n_prev[:, None] + n_intra   # (B,Q,H,hd)
+
+    num = h_inter + h_intra
+    den = jnp.maximum(
+        jnp.abs(jnp.einsum("bthd,bthd->bth", qf, n_t)), jnp.exp(-m_t)
+    )
+    h = num / den[..., None]                               # (B,Q,H,hd)
+
+    # end-of-chunk state
+    total = lf_cum[:, -1, :]                               # (B,H)
+    s_scale = total[:, None, :] - lf_cum + log_i           # (B,Q,H)
+    m_new = jnp.maximum(total + m_prev, jnp.max(s_scale, axis=1))
+    w_state = jnp.exp(s_scale - m_new[:, None, :])         # (B,Q,H)
+    C_new = (
+        jnp.exp(total + m_prev - m_new)[:, :, None, None] * C_prev
+        + jnp.einsum("bqh,bqhd,bqhe->bhde", w_state, kf, vf)
+    )
+    n_new = (
+        jnp.exp(total + m_prev - m_new)[..., None] * n_prev
+        + jnp.einsum("bqh,bqhd->bhd", w_state, kf)
+    )
+    return (C_new, n_new, m_new), h
+
+
+def mlstm_mixer(p, x, cfg: ModelConfig, state=None, chunk: int = 0):
+    """x: (B, S, D) -> (y, new_state); state = (C, n, m)."""
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    Q = chunk or cfg.ssm.chunk_size
+
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = jnp.einsum("bsd,dhk->bshk", h_in, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h_in, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h_in, p["wv"])
+    q = constrain(q, ("batch", "seq", "heads", None))
+    log_i = jnp.einsum("bsd,dh->bsh", h_in.astype(jnp.float32), p["wi"])
+    log_f = jax.nn.log_sigmoid(
+        jnp.einsum("bsd,dh->bsh", h_in.astype(jnp.float32), p["wf"]) + p["bf"]
+    )
+
+    if state is None:
+        state = (
+            jnp.zeros((B, H, hd, hd), jnp.float32),
+            jnp.zeros((B, H, hd), jnp.float32),
+            jnp.full((B, H), 0.0, jnp.float32),
+        )
+
+    if S % Q:
+        Q = math.gcd(S, Q) or 1
+    nC = S // Q
+    resh = lambda a: a.reshape(B, nC, Q, *a.shape[2:]).transpose(1, 0, 2, *range(3, a.ndim + 1))
+    xs = (resh(q), resh(k), resh(v), resh(log_i), resh(log_f))
+
+    body = jax.checkpoint(lambda c, inp: _mlstm_chunk(c, inp, hd), prevent_cse=False)
+    new_state, hs = jax.lax.scan(body, state, xs)
+    h = hs.transpose(1, 0, 2, 3, 4).reshape(B, S, H * hd)
+
+    og = jax.nn.sigmoid(h_in @ p["wog"])
+    h = rms_norm(h.astype(x.dtype), p["out_norm"], cfg.norm_eps) * og
+    return x + h @ p["down_proj"], new_state
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_slstm(rng, cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    d_in = H * hd
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(rng, 6)
+    pf = 4.0 / 3.0
+    d_ff = int(pf * d)
+    return {
+        "norm": jnp.ones((d,), dt),
+        "w_gates": dense_init(ks[0], (d, 4, H, hd), jnp.float32, scale=0.1),
+        "r_gates": dense_init(ks[1], (4, H, hd, hd), jnp.float32, scale=0.1),
+        "b_gates": jnp.zeros((4, H, hd), jnp.float32),
+        "out_norm": jnp.ones((d_in,), dt),
+        "down_proj": dense_init(ks[2], (d_in, d), dt),
+        "ffn_norm": jnp.ones((d,), dt),
+        "up_proj": dense_init(ks[3], (d, 2 * d_ff), dt),
+        "ffn_down": dense_init(ks[4], (d_ff, d), dt),
+    }
+
+
+def _slstm_step(carry, wx_t, r_gates):
+    """carry: (c, n, h, m) each (B, H, hd); wx_t: (B, 4, H, hd)."""
+    c, n, h, m = carry
+    rec = jnp.einsum("bhd,ghde->bghe", h, r_gates)          # (B,4,H,hd)
+    g = wx_t + rec
+    i_t, f_t, z_t, o_t = g[:, 0], g[:, 1], g[:, 2], g[:, 3]
+    m_new = jnp.maximum(f_t + m, i_t)
+    i_p = jnp.exp(i_t - m_new)
+    f_p = jnp.exp(f_t + m - m_new)
+    c_new = f_p * c + i_p * jnp.tanh(z_t)
+    n_new = f_p * n + i_p
+    h_new = jax.nn.sigmoid(o_t) * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def slstm_mixer(p, x, cfg: ModelConfig, state=None):
+    B, S, D = x.shape
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+
+    h_in = rms_norm(x, p["norm"], cfg.norm_eps)
+    wx = jnp.einsum("bsd,dghe->bsghe", h_in.astype(jnp.float32), p["w_gates"])
+    wx = wx + p["b_gates"][None, None]
+
+    if state is None:
+        z = jnp.zeros((B, H, hd), jnp.float32)
+        state = (z, z, z, jnp.full((B, H, hd), NEG_INF, jnp.float32))
+
+    step = lambda c, w: _slstm_step(c, w, p["r_gates"])
+    new_state, hs = jax.lax.scan(step, state, wx.transpose(1, 0, 2, 3, 4))
+    h = hs.transpose(1, 0, 2, 3).reshape(B, S, H * hd)
+
+    h = rms_norm(h.astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    x = x + h @ p["down_proj"]
+    # gated FFN (factor 4/3, GeLU) per xLSTM post-up-projection block
+    f = rms_norm(x, p["ffn_norm"], cfg.norm_eps) @ p["up_proj"]
+    a, b = jnp.split(f, 2, axis=-1)
+    x = x + (jax.nn.gelu(a) * b) @ p["ffn_down"]
+    return x, new_state
+
+
+def slstm_state_struct(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    s = jax.ShapeDtypeStruct((batch, H, hd), jnp.float32)
+    return (s, s, s, s)
+
+
+def mlstm_state_struct(cfg: ModelConfig, batch: int):
+    H, hd = cfg.n_heads, cfg.resolved_head_dim
+    return (
+        jax.ShapeDtypeStruct((batch, H, hd, hd), jnp.float32),
+        jax.ShapeDtypeStruct((batch, H, hd), jnp.float32),
+        jax.ShapeDtypeStruct((batch, H), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# full xLSTM LM
+# ---------------------------------------------------------------------------
+
+
+class XLSTMLM:
+    """xLSTM[7:1] language model: one sLSTM per ``slstm_every`` layers."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.n_groups = cfg.n_layers // cfg.ssm.slstm_every
+        self.m_per_group = cfg.ssm.slstm_every - 1
+
+    def init(self, rng) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.param_dtype)
+        k_emb, k_m, k_s, k_head = jax.random.split(rng, 4)
+        m_rngs = jax.random.split(k_m, self.n_groups * self.m_per_group).reshape(
+            self.n_groups, self.m_per_group, 2
+        )
+        s_rngs = jax.random.split(k_s, self.n_groups)
+        mlstm = jax.vmap(jax.vmap(lambda r: init_mlstm(r, cfg)))(m_rngs)
+        slstm = jax.vmap(lambda r: init_slstm(r, cfg))(s_rngs)
+        return {
+            "embed": dense_init(k_emb, (cfg.vocab_size, cfg.d_model), dt, scale=0.02),
+            "mlstm": mlstm,      # (G, 7, ...)
+            "slstm": slstm,      # (G, ...)
+            "final_norm": jnp.ones((cfg.d_model,), dt),
+            "lm_head": dense_init(k_head, (cfg.d_model, cfg.vocab_size), dt,
+                                  scale=1.0 / math.sqrt(cfg.d_model)),
+        }
+
+    def _group_fwd(self, x, gp, states):
+        """One group: m_per_group mLSTM blocks then one sLSTM block."""
+        cfg = self.cfg
+        m_states_new = []
+        for j in range(self.m_per_group):
+            lp = jax.tree.map(lambda a: a[j], gp["mlstm"])
+            st = None if states is None else jax.tree.map(lambda a: a[j], states["mlstm"])
+            x, ns = mlstm_mixer(lp, x, cfg, st)
+            m_states_new.append(ns)
+        st = None if states is None else states["slstm"]
+        x, s_new = slstm_mixer(gp["slstm"], x, cfg, st)
+        stacked_m = jax.tree.map(lambda *a: jnp.stack(a), *m_states_new)
+        return x, {"mlstm": stacked_m, "slstm": s_new}
+
+    def _run(self, params, x, states=None, remat: bool = False):
+        def body(carry, xs):
+            if states is None:
+                gp = xs
+                st = None
+            else:
+                gp, st = xs
+            y, ns = self._group_fwd(carry, gp, st)
+            return y, ns
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        gp_all = {"mlstm": params["mlstm"], "slstm": params["slstm"]}
+        xs = gp_all if states is None else (gp_all, states)
+        x, new_states = jax.lax.scan(body, x, xs)
+        return x, new_states
+
+    def unembed_weight(self, params):
+        return params["lm_head"], "dv"
+
+    def train_hidden(self, params, batch, remat: bool = True):
+        x = params["embed"][batch["tokens"]]
+        x, _ = self._run(params, x, remat=remat)
+        return rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+
+    def train_logits(self, params, batch, remat: bool = True):
+        x = self.train_hidden(params, batch, remat)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+        return constrain(logits, ("batch", "seq", "vocab"))
+
+    def prefill(self, params, batch):
+        x = params["embed"][batch["tokens"]]
+        x, states = self._run(params, x)
+        x = rms_norm(x[:, -1:], params["final_norm"], self.cfg.norm_eps)
+        logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])[:, 0]
+        return constrain(logits, ("batch", "vocab")), states
+
+    def decode(self, params, tokens, cache, lens):
+        x = params["embed"][tokens]
+        x, states = self._run(params, x, cache)
+        x = rms_norm(x[:, -1], params["final_norm"], self.cfg.norm_eps)
+        logits = jnp.einsum("bd,dv->bv", x, params["lm_head"])
+        return constrain(logits, ("batch", "vocab")), states
+
+    def cache_struct(self, batch: int, seq_len: int):
+        cfg = self.cfg
+        G, M = self.n_groups, self.m_per_group
+        m = mlstm_state_struct(cfg, batch)
+        s = slstm_state_struct(cfg, batch)
+        stack = lambda t, *lead: jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(tuple(lead) + a.shape, a.dtype), t
+        )
+        return {"mlstm": stack(m, G, M), "slstm": stack(s, G)}

@@ -1,0 +1,90 @@
+"""AdamW in pure JAX (no optax in this environment).
+
+State and update are pytree-shaped like the params; used by both the model
+training step (bf16/f32 params, f32 moments) and the LPRS latency predictor.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip_norm: float = 0.0     # 0 = off
+    # optional linear warmup + cosine decay
+    warmup_steps: int = 0
+    total_steps: int = 0
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, moment_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def _schedule(cfg: AdamWConfig, step):
+    lr = jnp.float32(cfg.lr)
+    if cfg.warmup_steps:
+        lr = lr * jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    if cfg.total_steps:
+        frac = jnp.clip(
+            (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0
+        )
+        lr = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return lr
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree))
+    )
+
+
+def adamw_update(cfg: AdamWConfig, grads, state: AdamWState, params):
+    """Returns (new_params, new_state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip_norm:
+        scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    # moments may live in bf16 (memory lever for 100B+ configs); math in f32
+    mu = jax.tree.map(
+        lambda m, g: (b1 * m.astype(jnp.float32)
+                      + (1 - b1) * g.astype(jnp.float32)).astype(m.dtype),
+        state.mu, grads,
+    )
+    nu = jax.tree.map(
+        lambda v, g: (b2 * v.astype(jnp.float32)
+                      + (1 - b2) * jnp.square(g.astype(jnp.float32))).astype(v.dtype),
+        state.nu, grads,
+    )
+    mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+    nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+    lr = _schedule(cfg, step.astype(jnp.float32))
+
+    def upd(p, m, v):
+        m, v = m.astype(jnp.float32), v.astype(jnp.float32)
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, mu, nu)
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), {"grad_norm": gnorm, "lr": lr}

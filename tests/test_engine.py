@@ -1,0 +1,187 @@
+"""Real-execution engine integration: chunked_step correctness vs whole-
+prompt prefill, the serve loop, KV pool accounting, sampler."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiny_config
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig, pool_for_model
+from repro.engine.sampler import SamplerConfig, sample_tokens
+from repro.engine.workload import (
+    WorkloadSpec, apc_heterogeneous, attach_prompt_tokens, sharegpt_like,
+    uniform_arrivals,
+)
+from repro.models.model import build_model
+
+
+def test_chunked_step_equals_whole_prefill():
+    """Splitting a prompt into chunks must produce the same final logits as
+    prefilling it in one shot — the core correctness claim of chunked
+    prefill (the schedule changes, the math must not)."""
+    cfg = tiny_config("llama3.2-1b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 48
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 1, cfg.vocab_size)
+
+    # whole-shot reference
+    ref_logits, _ = model.prefill(params, {"tokens": tokens})
+
+    # chunked: 3 rounds of 16 via chunked_step
+    impl = model.impl
+    hd = cfg.resolved_head_dim
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, B, S + 1, cfg.n_kv_heads, hd), jnp.bfloat16),
+        "v": jnp.zeros((cfg.n_layers, B, S + 1, cfg.n_kv_heads, hd), jnp.bfloat16),
+    }
+    lens = jnp.zeros((B,), jnp.int32)
+    C = 16
+    for i in range(3):
+        chunk = tokens[:, i * C:(i + 1) * C]
+        logits, cache = impl.chunked_step(
+            params, chunk, cache, lens, jnp.full((B,), C, jnp.int32)
+        )
+        lens = lens + C
+
+    np.testing.assert_allclose(
+        np.asarray(logits, np.float32), np.asarray(ref_logits, np.float32),
+        atol=0.25, rtol=0.05,  # bf16 accumulation-order tolerance
+    )
+    # argmax (the sampled token) must agree
+    assert (np.argmax(np.asarray(logits, np.float32), -1)
+            == np.argmax(np.asarray(ref_logits, np.float32), -1)).all()
+
+
+def test_chunked_step_mixed_decode_and_prefill():
+    """One round advancing a decode slot (chunk 1) and a prefill slot
+    (chunk 16) together — Sarathi's mixed batch."""
+    cfg = tiny_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    impl = model.impl
+    B, S = 2, 64
+    hd = cfg.resolved_head_dim
+    cache = {
+        "k": jnp.zeros((cfg.n_layers, B, S + 1, cfg.n_kv_heads, hd), jnp.bfloat16),
+        "v": jnp.zeros((cfg.n_layers, B, S + 1, cfg.n_kv_heads, hd), jnp.bfloat16),
+    }
+    lens = jnp.zeros((B,), jnp.int32)
+    # slot 0: prefill 16 tokens; slot 1: idle
+    toks = jnp.ones((B, 16), jnp.int32)
+    logits, cache = impl.chunked_step(
+        params, toks, cache, lens, jnp.array([16, 0], jnp.int32)
+    )
+    lens = lens + jnp.array([16, 0])
+    # now slot 0 decodes (chunk 1), slot 1 prefills 8
+    toks2 = jnp.ones((B, 8), jnp.int32)
+    logits2, cache = impl.chunked_step(
+        params, toks2, cache, lens, jnp.array([1, 8], jnp.int32)
+    )
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("policy", ["fcfs", "aging"])
+def test_serve_end_to_end(policy):
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(n_slots=8, max_context=256))
+    reqs = sharegpt_like(WorkloadSpec(
+        n_requests=6, inter_arrival_s=0.01, max_context=100,
+        max_new_tokens=8, seed=7,
+    ))
+    attach_prompt_tokens(reqs, cfg.vocab_size)
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy=policy, token_budget=48, max_seqs=8)
+    )
+    res = serve(reqs, sched, eng, collect_samples=True)
+    assert res.report.n_finished == 6
+    assert all(len(res.outputs[r.req_id]) == r.max_new_tokens for r in reqs)
+    feats, lats = res.samples
+    assert feats.shape[1] == 16 and (lats > 0).all()
+
+
+def test_serve_with_pallas_kernels():
+    """Same serve loop with the Pallas chunked-prefill kernel (interpret)."""
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(n_slots=4, max_context=128, use_pallas=True))
+    reqs = sharegpt_like(WorkloadSpec(
+        n_requests=2, inter_arrival_s=0.01, max_context=48,
+        max_new_tokens=4, seed=9,
+    ))
+    attach_prompt_tokens(reqs, cfg.vocab_size)
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="aging", token_budget=32, max_seqs=4)
+    )
+    res = serve(reqs, sched, eng)
+    assert res.report.n_finished == 2
+
+
+# ---------------------------------------------------------------------------
+# KV pool
+# ---------------------------------------------------------------------------
+
+
+def test_kv_pool_alloc_release_cycle():
+    pool = KVBlockPool(KVPoolConfig(n_blocks=10, block_size=16, bytes_per_token=4))
+    assert pool.can_allocate(1, 100)          # 7 blocks
+    pool.allocate(1, 100)
+    assert pool.used_blocks == 7
+    pool.allocate(1, 12)                      # fits in block 7
+    assert pool.used_blocks == 7
+    pool.allocate(1, 10)                      # crosses into block 8
+    assert pool.used_blocks == 8
+    assert not pool.can_allocate(2, 40)       # needs 3, only 2 free
+    pool.release(1)
+    assert pool.used_blocks == 0
+    assert pool.can_allocate(2, 160)
+
+
+def test_kv_pool_exhaustion_raises():
+    pool = KVBlockPool(KVPoolConfig(n_blocks=2, block_size=16))
+    with pytest.raises(MemoryError):
+        pool.allocate(1, 100)
+
+
+# ---------------------------------------------------------------------------
+# sampler
+# ---------------------------------------------------------------------------
+
+
+def test_sampler_greedy():
+    logits = jnp.asarray([[0.0, 5.0, 1.0], [3.0, 0.0, -1.0]])
+    out = sample_tokens(logits, jax.random.PRNGKey(0), SamplerConfig())
+    assert list(np.asarray(out)) == [1, 0]
+
+
+def test_sampler_topk_restricts_support():
+    logits = jnp.asarray([[0.0, 10.0, 9.0, -50.0]] * 64)
+    out = sample_tokens(
+        logits, jax.random.PRNGKey(0),
+        SamplerConfig(temperature=1.0, top_k=2),
+    )
+    assert set(np.asarray(out).tolist()) <= {1, 2}
+
+
+# ---------------------------------------------------------------------------
+# workloads
+# ---------------------------------------------------------------------------
+
+
+def test_sharegpt_like_is_skewed_and_seeded():
+    spec = WorkloadSpec(n_requests=500, seed=4)
+    a = sharegpt_like(spec)
+    b = sharegpt_like(spec)
+    assert [r.prompt_len for r in a] == [r.prompt_len for r in b]
+    ps = np.asarray([r.prompt_len for r in a])
+    assert np.percentile(ps, 50) < 60          # short median
+    assert np.percentile(ps, 90) > 90          # heavy tail
+
+
+def test_apc_heterogeneous_ratio():
+    reqs = apc_heterogeneous(n_requests=500, seed=1)
+    short = sum(1 for r in reqs if r.prompt_len <= 50)
+    long_ = sum(1 for r in reqs if r.prompt_len >= 200)
+    assert short + long_ == 500
+    assert abs(short / 500 - 0.98) < 0.02      # 49:1

@@ -1,0 +1,184 @@
+"""Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes kernel bodies in Python on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.fused_swiglu import fused_swiglu
+from repro.models import layers as L
+
+TOLS = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _rand(rng, shape, dtype):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill attention
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Sq,Skv,Hq,Hkv,hd,blk_q,blk_k",
+    [
+        (1, 64, 128, 4, 4, 32, 32, 64),      # MHA
+        (2, 128, 256, 8, 2, 64, 64, 128),    # GQA g=4
+        (1, 32, 96, 8, 1, 64, 32, 32),       # MQA
+        (3, 64, 64, 4, 4, 128, 64, 64),      # hd=128, self only
+        (2, 256, 256, 2, 2, 16, 128, 128),   # long chunk
+    ],
+)
+def test_chunked_prefill_vs_oracle(rng, dtype, B, Sq, Skv, Hq, Hkv, hd, blk_q, blk_k):
+    q = _rand(rng, (B, Sq, Hq, hd), dtype)
+    k = _rand(rng, (B, Skv, Hkv, hd), dtype)
+    v = _rand(rng, (B, Skv, Hkv, hd), dtype)
+    # random prefix per batch row; kv valid = prefix + chunk
+    q_off = jnp.asarray(rng.integers(0, Skv - Sq + 1, B), jnp.int32)
+    kv_lens = q_off + Sq
+    out = chunked_prefill_attention(
+        q, k, v, kv_lens, q_off, block_q=blk_q, block_k=blk_k
+    )
+    want = ref.chunked_prefill_attention_ref(q, k, v, kv_lens, q_off)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype],
+    )
+
+
+def test_chunked_prefill_zero_prefix_is_causal_self_attention(rng):
+    """q_offset=0, kv == chunk itself: must equal plain causal attention."""
+    B, S, H, hd = 2, 64, 4, 32
+    q = _rand(rng, (B, S, H, hd), jnp.float32)
+    out = chunked_prefill_attention(
+        q, q, q, jnp.full((B,), S, jnp.int32), jnp.zeros((B,), jnp.int32),
+        block_q=32, block_k=32,
+    )
+    want = L.attention_naive(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash decode
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "B,Hq,Hkv,hd,S,blk",
+    [
+        (1, 4, 4, 32, 128, 64),
+        (4, 8, 2, 64, 512, 128),
+        (2, 8, 1, 128, 256, 256),
+        (3, 16, 4, 64, 384, 128),
+    ],
+)
+def test_decode_attention_vs_oracle(rng, dtype, B, Hq, Hkv, hd, S, blk):
+    q = _rand(rng, (B, Hq, hd), dtype)
+    k = _rand(rng, (B, S, Hkv, hd), dtype)
+    v = _rand(rng, (B, S, Hkv, hd), dtype)
+    lens = jnp.asarray(rng.integers(1, S + 1, B), jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=blk)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=TOLS[dtype], rtol=TOLS[dtype],
+    )
+
+
+def test_decode_attention_len_one(rng):
+    """Edge: cache holds exactly one token."""
+    q = _rand(rng, (2, 4, 32), jnp.float32)
+    k = _rand(rng, (2, 128, 4, 32), jnp.float32)
+    v = _rand(rng, (2, 128, 4, 32), jnp.float32)
+    lens = jnp.array([1, 1], jnp.int32)
+    out = decode_attention(q, k, v, lens, block_k=64)
+    want = ref.decode_attention_ref(q, k, v, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# fused swiglu
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize(
+    "M,D,F,bm,bf",
+    [
+        (64, 32, 128, 32, 64),
+        (128, 96, 256, 64, 128),
+        (256, 128, 512, 128, 256),
+        (32, 64, 64, 32, 64),
+    ],
+)
+def test_fused_swiglu_vs_oracle(rng, dtype, M, D, F, bm, bf):
+    x = _rand(rng, (M, D), dtype)
+    s = 0.1
+    wg = _rand(rng, (D, F), dtype) * s
+    wu = _rand(rng, (D, F), dtype) * s
+    wd = _rand(rng, (F, D), dtype) * s
+    out = fused_swiglu(x, wg, wu, wd, block_m=bm, block_f=bf)
+    want = ref.fused_swiglu_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(want, np.float32),
+        atol=5 * TOLS[dtype], rtol=5 * TOLS[dtype],
+    )
+
+
+# ---------------------------------------------------------------------------
+# flash attention (jnp production path) vs naive oracle — all mask modes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "kw",
+    [
+        dict(),                                           # causal self
+        dict(causal=False),                               # bidirectional
+        dict(sliding_window=16),                          # SWA
+    ],
+)
+def test_flash_attention_modes(rng, kw):
+    B, S, Hq, Hkv, hd = 2, 64, 8, 4, 32
+    q = _rand(rng, (B, S, Hq, hd), jnp.float32)
+    k = _rand(rng, (B, S, Hkv, hd), jnp.float32)
+    v = _rand(rng, (B, S, Hkv, hd), jnp.float32)
+    a = L.attention_naive(q, k, v, **kw)
+    b = L.flash_attention(q, k, v, block_q=16, block_k=32, **kw)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_flash_attention_offset_and_lens(rng):
+    B, Sq, Skv, H, hd = 2, 32, 128, 4, 32
+    q = _rand(rng, (B, Sq, H, hd), jnp.float32)
+    k = _rand(rng, (B, Skv, H, hd), jnp.float32)
+    v = _rand(rng, (B, Skv, H, hd), jnp.float32)
+    q_off = jnp.array([50, 3], jnp.int32)
+    kv_lens = q_off + Sq
+    a = L.attention_naive(q, k, v, q_offset=q_off, kv_lens=kv_lens)
+    b = L.flash_attention(q, k, v, q_offset=q_off, kv_lens=kv_lens,
+                          block_q=16, block_k=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=3e-5)
+
+
+def test_kernel_matches_flash_matches_naive(rng):
+    """Triangle check: Pallas kernel == flash jnp == naive, same inputs."""
+    B, Sq, Skv, H, hd = 2, 64, 128, 4, 64
+    q = _rand(rng, (B, Sq, H, hd), jnp.float32)
+    k = _rand(rng, (B, Skv, H, hd), jnp.float32)
+    v = _rand(rng, (B, Skv, H, hd), jnp.float32)
+    q_off = jnp.array([64, 10], jnp.int32)
+    kv_lens = q_off + Sq
+    kern = chunked_prefill_attention(q, k, v, kv_lens, q_off,
+                                     block_q=32, block_k=64)
+    flash = L.flash_attention(q, k, v, q_offset=q_off, kv_lens=kv_lens,
+                              block_q=32, block_k=64)
+    naive = L.attention_naive(q, k, v, q_offset=q_off, kv_lens=kv_lens)
+    np.testing.assert_allclose(np.asarray(kern), np.asarray(naive), atol=3e-5)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(naive), atol=3e-5)

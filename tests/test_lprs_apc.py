@@ -1,0 +1,192 @@
+"""Unit + property tests for LPRS (§3.2, Algorithm 1) and APC (§3.3,
+Eqs. 12-14)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apc import APCConfig, APCStats, activity_cap, apply as apc_apply
+from repro.core.apc import min_effective_progress
+from repro.core.features import BatchState, N_FEATURES, derive_features
+from repro.core.lprs import LPRSConfig, candidate_set, score, select_chunk
+from repro.core.predictor import AnalyticPredictor
+
+
+# ---------------------------------------------------------------------------
+# Eq. 8 candidate set
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(h=st.integers(-5, 5000), delta=st.integers(1, 700))
+def test_candidate_set_properties(h, delta):
+    c = candidate_set(h, delta)
+    if h < 1:
+        assert len(c) == 0
+        return
+    assert 1 in c and h in c                      # {1, h_i} always included
+    assert all(1 <= x <= h for x in c)            # within bounds
+    assert list(c) == sorted(set(c))              # sorted, unique
+    for x in c:
+        assert x == 1 or x == h or x % delta == 0  # only {1, h, k*delta}
+    # every multiple of delta <= h present
+    for k in range(1, h // delta + 1):
+        assert k * delta in c
+
+
+# ---------------------------------------------------------------------------
+# Eq. 10 asymmetric scoring
+# ---------------------------------------------------------------------------
+
+
+def test_score_asymmetry_penalizes_overflow():
+    s_under = score(np.array([90.0]), 100.0, lam_u=1.0, lam_o=3.0)[0]
+    s_over = score(np.array([110.0]), 100.0, lam_u=1.0, lam_o=3.0)[0]
+    assert s_over == pytest.approx(30.0)
+    assert s_under == pytest.approx(10.0)
+    assert s_over > s_under                       # same 10ms deviation
+
+
+def test_select_chunk_hits_target():
+    """With a linear predictor, the chosen chunk should approach the target
+    latency from below (lambda_o > lambda_u makes overflow costly)."""
+    pred = AnalyticPredictor(c0=2.0, c_prefill=0.1, c_decode=0.0, c_ctx=0.0, c_batch=0.0)
+    cfg = LPRSConfig(target_latency_ms=50.0, search_delta=16, lambda_under=1.0, lambda_over=3.0)
+    st_ = BatchState()
+    c = select_chunk(
+        remaining=4096, committed=0, token_budget=2048, batch_state=st_,
+        processed=0, predictor=pred, cfg=cfg,
+    )
+    # latency = 2 + 0.1*(c) -> target 50ms at c=480; candidates step 16
+    assert 1 <= c <= 2048
+    pred_ms = 2.0 + 0.1 * c
+    assert pred_ms <= 50.0 + 1e-9                 # never overflow when avoidable
+    assert pred_ms > 50.0 - 0.1 * 16 - 1e-9       # …but as close as the grid allows
+
+
+def test_select_chunk_respects_hard_budget():
+    pred = AnalyticPredictor(c0=0.0, c_prefill=0.001)
+    cfg = LPRSConfig(target_latency_ms=1e9, search_delta=64)  # target unreachable
+    c = select_chunk(
+        remaining=10_000, committed=1000, token_budget=1024 + 1000,
+        batch_state=BatchState(), processed=0, predictor=pred, cfg=cfg,
+    )
+    assert c <= 1024                              # h_i = B_max - U_t
+
+
+def test_select_chunk_warm_start_line_24():
+    """Empty batch + all candidates overflowing -> returns 1 (Alg. 1 l.23-26)."""
+    pred = AnalyticPredictor(c0=1000.0)           # everything over target
+    cfg = LPRSConfig(target_latency_ms=1.0, search_delta=128,
+                     lambda_under=1.0, lambda_over=1000.0)
+    c = select_chunk(
+        remaining=512, committed=0, token_budget=1024,
+        batch_state=BatchState(), processed=0, predictor=pred, cfg=cfg,
+    )
+    assert c >= 1                                 # starvation guard
+
+
+def test_skip_when_budget_exhausted():
+    pred = AnalyticPredictor()
+    cfg = LPRSConfig()
+    c = select_chunk(
+        remaining=100, committed=1024, token_budget=1024,
+        batch_state=BatchState(), processed=0, predictor=pred, cfg=cfg,
+    )
+    assert c == 0
+
+
+# ---------------------------------------------------------------------------
+# derived features (§3.2.1 Table 2)
+# ---------------------------------------------------------------------------
+
+
+def test_derived_features_definitions():
+    st_ = BatchState(
+        prefill_tokens=100, decode_tokens=8, batch_request_count=9,
+        sum_decode_context_len=4000, max_decode_context_len=900,
+        prefill_processed_tokens=300, max_prefill_processed_tokens=200,
+    )
+    f = st_.features()
+    assert f.shape == (N_FEATURES,)
+    assert f[11] == 1.0                              # bias
+    assert f[12] == 108.0                            # scheduled = dec + pf
+    assert f[13] == pytest.approx(4000 / 8)          # avg_decode_ctx
+    assert f[14] == pytest.approx(8 * 500)           # decode_ctx_interaction
+    assert f[15] == pytest.approx(100 * 300)         # prefill_interaction
+
+
+def test_with_extra_prefill_is_candidate_state():
+    base = BatchState(prefill_tokens=10, decode_tokens=4, batch_request_count=4)
+    cand = base.with_extra_prefill(64, processed=128)
+    assert cand.prefill_tokens == 74
+    assert cand.batch_request_count == 5
+    assert cand.prefill_processed_tokens == 128
+    assert base.prefill_tokens == 10                 # immutable
+
+
+# ---------------------------------------------------------------------------
+# APC: Eq. 12 cap, Eq. 13 min progress, Eq. 14 decision rule
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    n_decode=st.integers(0, 256), max_seqs=st.integers(1, 512),
+    budget=st.integers(0, 8192), committed=st.integers(0, 8192),
+    c_max=st.integers(1, 64), l_min=st.integers(1, 512),
+)
+def test_activity_cap_eq12(n_decode, max_seqs, budget, committed, c_max, l_min):
+    cfg = APCConfig(c_max=c_max, l_min=l_min)
+    cap = activity_cap(cfg, n_decode=n_decode, max_seqs=max_seqs,
+                       token_budget=budget, committed=committed)
+    assert cap == min(c_max, max_seqs - n_decode, (budget - committed) // l_min)
+
+
+@settings(max_examples=200, deadline=None)
+@given(remaining=st.integers(1, 4096), l_min=st.integers(1, 512))
+def test_min_effective_progress_eq13(remaining, l_min):
+    assert min_effective_progress(APCConfig(l_min=l_min), remaining) == min(
+        remaining, l_min
+    )
+
+
+def test_apc_accepts_good_chunk():
+    stats = APCStats()
+    c = apc_apply(APCConfig(c_max=4, l_min=64), stats, proposed=128,
+                  remaining=512, upper_bound=256, n_active_prefills=1, cap=4)
+    assert c == 128
+    assert stats.blocked_by_cap == 0 and stats.blocked_by_min_chunk == 0
+
+
+def test_apc_blocks_fragmented_chunk():
+    """micro-progress (1-token chunks) blocked when other prefills active."""
+    stats = APCStats()
+    c = apc_apply(APCConfig(c_max=4, l_min=64), stats, proposed=3,
+                  remaining=512, upper_bound=256, n_active_prefills=2, cap=4)
+    assert c == 0
+    assert stats.blocked_by_min_chunk == 1
+
+
+def test_apc_blocks_over_cap():
+    stats = APCStats()
+    c = apc_apply(APCConfig(c_max=2, l_min=64), stats, proposed=128,
+                  remaining=512, upper_bound=256, n_active_prefills=2, cap=2)
+    assert c == 0
+    assert stats.blocked_by_cap == 1
+
+
+def test_apc_warm_start_when_no_active_prefill():
+    """Eq. 14 middle case: c* < m_i but batch has zero prefills."""
+    stats = APCStats()
+    c = apc_apply(APCConfig(c_max=4, l_min=64), stats, proposed=2,
+                  remaining=512, upper_bound=40, n_active_prefills=0, cap=4)
+    assert c == min(40, 64)                       # min(h_i, m_i)
+    assert stats.warm_starts == 1
+
+
+def test_apc_tail_chunk_smaller_than_lmin_allowed():
+    """A request whose ENTIRE remainder < L_min may finish (m_i = r_i)."""
+    stats = APCStats()
+    c = apc_apply(APCConfig(c_max=4, l_min=64), stats, proposed=20,
+                  remaining=20, upper_bound=20, n_active_prefills=0, cap=4)
+    assert c == 20

@@ -1,0 +1,148 @@
+"""Per-arch smoke tests: every assigned architecture instantiates a REDUCED
+same-family config and runs one forward/train step on CPU asserting shapes
+and finiteness (spec deliverable f)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, REGISTRY, get_config, tiny_config
+from repro.configs.base import applicable_shapes
+from repro.models.model import build_model
+
+
+def _batch_for(cfg, B=2, S=32, with_labels=True):
+    b = {}
+    if cfg.family == "encdec":
+        b["frames"] = jnp.zeros((B, cfg.encoder.seq_len, cfg.d_model), jnp.bfloat16)
+        b["tokens"] = jnp.ones((B, S), jnp.int32)
+    elif cfg.family == "vlm":
+        P = cfg.n_patch_tokens
+        b["patch_embeds"] = jnp.zeros((B, P, cfg.d_model), jnp.bfloat16)
+        b["tokens"] = jnp.ones((B, S - P), jnp.int32)
+    else:
+        b["tokens"] = jnp.ones((B, S), jnp.int32)
+    if with_labels:
+        b["labels"] = jnp.ones_like(b["tokens"])
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch):
+    cfg = tiny_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = _batch_for(cfg)
+    loss, metrics = model.loss(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    # one grad step moves the loss
+    grads = jax.grad(lambda p: model.loss(p, batch)[0])(params)
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)) and float(gnorm) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_prefill_decode(arch):
+    cfg = tiny_config(arch)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = _batch_for(cfg, B, S, with_labels=False)
+    logits, cache = model.prefill(params, batch)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    lens = jnp.full((B,), S, jnp.int32)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = model.decode(params, tok, cache, lens)
+    assert logits2.shape == (B, cfg.vocab_size)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # cache pytree structure preserved
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    spec = {
+        "llama3.2-1b": (16, 2048, 32, 8, 8192, 128_256),
+        "granite-34b": (88, 6144, 48, 1, 24_576, 49_152),
+        "qwen1.5-0.5b": (24, 1024, 16, 16, 2816, 151_936),
+        "mistral-large-123b": (88, 12_288, 96, 8, 28_672, 32_768),
+        "jamba-1.5-large-398b": (72, 8192, 64, 8, 24_576, 65_536),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51_866),
+        "arctic-480b": (35, 7168, 56, 8, 4864, 32_000),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14_336, 32_000),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14_336, 32_000),
+        "xlstm-1.3b": (48, 2048, 4, 4, 0, 50_304),
+    }[arch]
+    cfg = get_config(arch)
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+           cfg.moe.d_ff if arch == "arctic-480b" else cfg.d_ff, cfg.vocab_size)
+    assert got == spec
+
+
+def test_moe_details():
+    mix = get_config("mixtral-8x7b")
+    assert mix.moe.n_experts == 8 and mix.moe.top_k == 2
+    assert mix.sliding_window == 4096
+    arc = get_config("arctic-480b")
+    assert arc.moe.n_experts == 128 and arc.moe.top_k == 2
+    assert arc.moe.dense_residual
+    jam = get_config("jamba-1.5-large-398b")
+    assert jam.moe.n_experts == 16 and jam.attn_every == 8
+
+
+def test_qwen_has_qkv_bias():
+    assert get_config("qwen1.5-0.5b").qkv_bias
+
+
+def test_shape_skips_per_spec():
+    """long_500k only for sub-quadratic archs; 33 live cells of 40."""
+    total = 0
+    for arch in ASSIGNED_ARCHS:
+        cfg = get_config(arch)
+        shapes = {s.name for s in applicable_shapes(cfg)}
+        total += len(shapes)
+        if arch in ("jamba-1.5-large-398b", "mixtral-8x7b", "xlstm-1.3b"):
+            assert "long_500k" in shapes
+        else:
+            assert "long_500k" not in shapes
+    assert total == 33
+
+
+def test_param_counts_in_band():
+    """Analytic param counts should be near the nameplate sizes."""
+    bands = {
+        "llama3.2-1b": (0.9e9, 1.6e9),
+        # the ASSIGNED dims (88L x 6144 x 24576) analytically give ~47B;
+        # the assignment spec wins over the nameplate label
+        "granite-34b": (40e9, 52e9),
+        "qwen1.5-0.5b": (0.35e9, 0.7e9),
+        "mistral-large-123b": (110e9, 130e9),
+        "jamba-1.5-large-398b": (330e9, 440e9),
+        "arctic-480b": (420e9, 520e9),
+        "mixtral-8x7b": (42e9, 50e9),
+        "llava-next-mistral-7b": (6.5e9, 8e9),
+        "xlstm-1.3b": (0.9e9, 1.8e9),
+    }
+    for arch, (lo, hi) in bands.items():
+        n = get_config(arch).param_count()
+        assert lo <= n <= hi, f"{arch}: {n/1e9:.2f}B outside [{lo/1e9}, {hi/1e9}]"
+
+
+def test_sliding_window_ring_cache_decode():
+    """Mixtral-family: decode past the window wraps the ring buffer."""
+    cfg = tiny_config("mixtral-8x7b")
+    assert cfg.sliding_window == 32
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 1, 48   # prompt longer than the 32-token window
+    logits, cache = model.prefill(params, {"tokens": jnp.ones((B, S), jnp.int32)})
+    assert cache["k"].shape[2] == 32               # ring cache is W-sized
+    lens = jnp.full((B,), S, jnp.int32)
+    for i in range(4):                              # decode wraps the ring
+        tok = jnp.full((B, 1), 5, jnp.int32)
+        logits, cache = model.decode(params, tok, cache, lens + i)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()

@@ -1,0 +1,149 @@
+"""Unit + property tests for the paper's core: Aging policy (§3.1), the
+heap's O(k log n) ordering equivalence (Eq. 3/4), FCFS/SJF baselines."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.policies import (
+    NaiveAgingQueue, PrefillQueue, aging_priority, make_policy,
+)
+from repro.core.request import Request, RequestState
+
+
+def mk(prompt, arrival, gen=16):
+    return Request(prompt_len=prompt, max_new_tokens=gen, arrival_time=arrival)
+
+
+# ---------------------------------------------------------------------------
+# ordering-key equivalence: Eq. 1 ranking == Eq. 4 static-key heap ranking
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(
+            st.integers(min_value=1, max_value=2000),   # prompt len
+            st.floats(min_value=0, max_value=100, allow_nan=False),  # arrival
+        ),
+        min_size=1,
+        max_size=40,
+    ),
+    alpha=st.floats(min_value=1e-3, max_value=100, allow_nan=False),
+    beta=st.floats(min_value=-100, max_value=-1e-3, allow_nan=False),
+    now=st.floats(min_value=100, max_value=200, allow_nan=False),
+)
+def test_heap_order_matches_eq1_priority(data, alpha, beta, now):
+    """The time-independent key K_i = -alpha*a_i + beta*r_i must rank
+    identically to P_i(n) = alpha*(t - a_i) + beta*r_i at any shared t
+    (paper Eq. 3: the alpha*t term is rank-invariant)."""
+    reqs = [mk(p, a) for p, a in data]
+    heap = make_policy("aging", alpha=alpha, beta=beta)
+    for r in reqs:
+        heap.add(r)
+    heap_order = [heap.pop().req_id for _ in range(len(reqs))]
+
+    by_priority = sorted(
+        reqs,
+        key=lambda r: (-aging_priority(r, now, alpha, beta), r.req_id),
+    )
+    # ties (equal priority) may legitimately reorder; compare priorities
+    pri = {r.req_id: aging_priority(r, now, alpha, beta) for r in reqs}
+    heap_pris = [pri[i] for i in heap_order]
+    assert heap_pris == sorted(heap_pris, reverse=True)
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    data=st.lists(
+        st.tuples(st.integers(1, 500), st.floats(0, 50, allow_nan=False)),
+        min_size=1, max_size=25, unique_by=lambda t: t[1],
+    )
+)
+def test_heap_matches_naive_recompute(data):
+    """Heap implementation == the O(n) full-recompute reference."""
+    alpha, beta = 1.0, -0.01
+    reqs = [mk(p, a) for p, a in data]
+    heap = make_policy("aging", alpha=alpha, beta=beta)
+    naive = NaiveAgingQueue(alpha, beta)
+    for r in reqs:
+        heap.add(r)
+        naive.add(r)
+    while len(naive):
+        a = heap.pop()
+        b = naive.pop(now=123.0)
+        pa = aging_priority(a, 123.0, alpha, beta)
+        pb = aging_priority(b, 123.0, alpha, beta)
+        assert pa == pytest.approx(pb)
+
+
+def test_fcfs_is_arrival_order():
+    q = make_policy("fcfs")
+    reqs = [mk(100, t) for t in (5.0, 1.0, 3.0)]
+    for r in reqs:
+        q.add(r)
+    out = [q.pop().arrival_time for _ in range(3)]
+    assert out == [1.0, 3.0, 5.0]
+
+
+def test_sjf_is_shortest_first():
+    q = make_policy("sjf")
+    reqs = [mk(p, 0.0) for p in (300, 10, 150)]
+    for r in reqs:
+        q.add(r)
+    assert [q.pop().prompt_len for _ in range(3)] == [10, 150, 300]
+
+
+def test_aging_update_after_chunk_raises_priority():
+    """Eq. 2: receiving a chunk reduces remaining work -> higher key."""
+    q = make_policy("aging", alpha=1.0, beta=-0.1)
+    big = mk(1000, 0.0)
+    small = mk(400, 0.0)
+    q.add(big)
+    q.add(small)
+    assert q.peek() is small           # less remaining work wins
+    big.receive_chunk(900)             # big now has only 100 left
+    q.update(big)
+    assert q.peek() is big
+
+
+def test_aging_starvation_prevention():
+    """A long request eventually overtakes a stream of fresh short ones."""
+    alpha, beta = 1.0, -0.01
+    long_req = mk(5000, arrival=0.0)
+    # short request arriving at t: priority alpha*(t_now - t) + beta*50
+    # long request at t_now=60: 60*1 - 50 = +10; fresh short: 0 - 0.5
+    t_now = 60.0
+    p_long = aging_priority(long_req, t_now, alpha, beta)
+    fresh_short = mk(50, arrival=t_now)
+    p_short = aging_priority(fresh_short, t_now, alpha, beta)
+    assert p_long > p_short
+
+
+def test_heap_remove_and_contains():
+    q = make_policy("fcfs")
+    a, b = mk(10, 0.0), mk(10, 1.0)
+    q.add(a)
+    q.add(b)
+    assert a in q and b in q
+    q.remove(a)
+    assert a not in q
+    assert q.pop() is b
+    assert q.pop() is None
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(1, 1000), min_size=1, max_size=30))
+def test_heap_pop_is_total_and_unique(prompts):
+    q = make_policy("aging", alpha=2.0, beta=-0.5)
+    reqs = [mk(p, i * 0.1) for i, p in enumerate(prompts)]
+    for r in reqs:
+        q.add(r)
+    seen = set()
+    while True:
+        r = q.pop()
+        if r is None:
+            break
+        assert r.req_id not in seen
+        seen.add(r.req_id)
+    assert len(seen) == len(reqs)

@@ -1,0 +1,170 @@
+"""Integration + property tests for the full scheduling round (§3.1.3):
+decode-first, budget conservation, APC interaction, request lifecycle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.apc import APCConfig
+from repro.core.lprs import LPRSConfig
+from repro.core.predictor import AnalyticPredictor
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.simulator import run_policy
+from repro.engine.workload import WorkloadSpec, sharegpt_like
+
+
+def mk_sched(**kw):
+    return ChunkedPrefillScheduler(SchedulerConfig(**kw))
+
+
+# ---------------------------------------------------------------------------
+# invariants of one scheduling round
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    prompts=st.lists(st.integers(1, 900), min_size=1, max_size=30),
+    budget=st.integers(8, 1024),
+    max_seqs=st.integers(1, 64),
+    policy=st.sampled_from(["fcfs", "sjf", "aging"]),
+)
+def test_round_respects_budget_and_seqs(prompts, budget, max_seqs, policy):
+    sched = mk_sched(policy=policy, token_budget=budget, max_seqs=max_seqs)
+    for i, p in enumerate(prompts):
+        sched.submit(Request(prompt_len=p, max_new_tokens=4, arrival_time=i * 0.01))
+    batch = sched.schedule(now=10.0)
+    assert batch.total_tokens <= budget
+    assert batch.n_seqs <= max_seqs
+    for req, c in batch.prefill_chunks:
+        assert 1 <= c <= req.remaining_prefill
+
+
+def test_decode_first_reserves_budget():
+    """Ongoing decodes are admitted before any prefill (§3.1.3)."""
+    sched = mk_sched(policy="fcfs", token_budget=8, max_seqs=16)
+    # drive 6 requests through their full prefill so they decode
+    for i in range(6):
+        sched.submit(Request(prompt_len=4, max_new_tokens=8, arrival_time=0.0))
+    for _ in range(4):
+        b = sched.schedule(now=1.0)
+        sched.on_batch_done(b, now=1.0)
+    assert len(sched.decoding) > 0
+    n_decoding = len(sched.decoding)
+    sched.submit(Request(prompt_len=100, max_new_tokens=4, arrival_time=2.0))
+    batch = sched.schedule(now=2.0)
+    assert batch.decode_tokens == min(n_decoding, 8)
+    # prefill only gets the residual
+    assert batch.prefill_tokens <= 8 - batch.decode_tokens
+
+
+def test_request_lifecycle_to_completion():
+    sched = mk_sched(policy="aging", token_budget=64, max_seqs=4)
+    req = Request(prompt_len=150, max_new_tokens=3, arrival_time=0.0)
+    sched.submit(req)
+    now = 0.0
+    for _ in range(50):
+        if req.state == RequestState.FINISHED:
+            break
+        b = sched.schedule(now)
+        now += 0.01
+        sched.on_batch_done(b, now)
+    assert req.state == RequestState.FINISHED
+    assert req.prefill_done == 150
+    assert req.generated == 3
+    assert sum(req.chunks) == 150
+    assert req.ttft() is not None and req.e2e_latency() is not None
+    # chunked prefill: 150 tokens under a 64 budget takes >= 3 chunks
+    assert len(req.chunks) >= 3
+
+
+def test_unfinished_prefill_returns_to_queue_with_updated_priority():
+    sched = mk_sched(policy="aging", alpha=1.0, beta=-0.01,
+                     token_budget=64, max_seqs=4)
+    req = Request(prompt_len=500, max_new_tokens=2, arrival_time=0.0)
+    sched.submit(req)
+    b = sched.schedule(0.0)
+    assert b.prefill_chunks[0][0] is req
+    sched.on_batch_done(b, 0.1)
+    assert req.state == RequestState.PREFILLING
+    assert req in sched.queue
+    assert req.remaining_prefill == 500 - b.prefill_chunks[0][1]
+
+
+def test_apc_caps_active_prefills_per_round():
+    """With LPRS choosing small chunks (so the budget is NOT the binding
+    constraint), the activity cap limits concurrent unfinished prefills."""
+    pred = AnalyticPredictor(c0=2.0, c_prefill=0.05, c_decode=0.0)
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(
+            policy="fcfs", token_budget=4096, max_seqs=32,
+            lprs=LPRSConfig(target_latency_ms=10.0, search_delta=32),
+            apc=APCConfig(c_max=2, l_min=32),
+        ),
+        predictor=pred,
+    )
+    for i in range(10):
+        sched.submit(Request(prompt_len=2000, max_new_tokens=2, arrival_time=0.0))
+    b = sched.schedule(0.0)
+    # unfinished prefills in the batch never exceed the cap
+    active = sum(1 for req, c in b.prefill_chunks if req.remaining_prefill > c)
+    assert active <= 2
+    # once the round saturates the latency target, LPRS proposes fragment
+    # chunks and APC intervenes (Table 10's intervention counters)
+    st_ = sched.stats.apc
+    assert st_.blocked_by_cap + st_.blocked_by_min_chunk >= 1
+
+
+def test_lprs_scheduler_integration():
+    pred = AnalyticPredictor(c0=2.0, c_prefill=0.05, c_decode=0.1)
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="aging", token_budget=2048, max_seqs=8,
+                        lprs=LPRSConfig(target_latency_ms=20.0, search_delta=32)),
+        predictor=pred,
+    )
+    sched.submit(Request(prompt_len=4000, max_new_tokens=2, arrival_time=0.0))
+    b = sched.schedule(0.0)
+    assert len(b.prefill_chunks) == 1
+    c = b.prefill_chunks[0][1]
+    # analytic: 2 + 0.05c <= 20  =>  c <= 360
+    assert c <= 360
+    assert c >= 360 - 32 - 1
+
+
+def test_lprs_requires_predictor():
+    with pytest.raises(ValueError):
+        ChunkedPrefillScheduler(
+            SchedulerConfig(lprs=LPRSConfig()), predictor=None
+        )
+
+
+# ---------------------------------------------------------------------------
+# end-to-end conservation over the simulator
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    n=st.integers(5, 40),
+    policy=st.sampled_from(["fcfs", "sjf", "aging"]),
+    budget=st.sampled_from([64, 256, 1024]),
+)
+def test_all_requests_complete_and_conserve_tokens(n, policy, budget):
+    from repro.core.scheduler import SchedulerConfig
+
+    reqs = sharegpt_like(WorkloadSpec(n_requests=n, inter_arrival_s=0.01, seed=n))
+    res = run_policy(reqs, SchedulerConfig(policy=policy, token_budget=budget,
+                                           max_seqs=32))
+    assert res.report.n_finished == n
+    for r in reqs:
+        assert r.prefill_done == r.prompt_len
+        assert sum(r.chunks) == r.prompt_len
+        assert r.generated == r.max_new_tokens
+        assert r.finish_time >= r.arrival_time
+        # TTFT <= E2E, prefill time <= TTFT (first token == prefill done)
+        assert r.ttft() <= r.e2e_latency() + 1e-9
+        assert r.prefill_e2e() <= r.ttft() + 1e-9
+    # scheduler stats conserve scheduled tokens
+    st_ = res.scheduler_stats
+    assert st_.scheduled_prefill_tokens == sum(r.prompt_len for r in reqs)
+    assert st_.scheduled_decode_tokens == sum(r.max_new_tokens - 1 for r in reqs)

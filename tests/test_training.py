@@ -1,0 +1,116 @@
+"""Training substrate: loss decreases, grad-accum consistency, optimizer
+moment dtypes, checkpoint-restart determinism, data pipeline resume."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiny_config
+from repro.models.model import build_model
+from repro.training.data import DataConfig, SyntheticLM
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_step import (
+    TrainConfig, init_train_state, loss_and_grad, make_train_step,
+)
+
+
+def _setup(arch="qwen1.5-0.5b", n_micro=1, moment_dtype="float32"):
+    cfg = tiny_config(arch)
+    model = build_model(cfg)
+    tcfg = TrainConfig(
+        optimizer=AdamWConfig(lr=1e-3, weight_decay=0.01, grad_clip_norm=1.0),
+        n_microbatches=n_micro, moment_dtype=moment_dtype,
+    )
+    params, opt = init_train_state(model, jax.random.PRNGKey(0), tcfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, global_batch=4, seq_len=32))
+    return model, tcfg, params, opt, data
+
+
+def test_loss_decreases_over_steps():
+    model, tcfg, params, opt, data = _setup()
+    step = jax.jit(make_train_step(model, tcfg))
+    losses = []
+    for i in range(12):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(i).items()}
+        params, opt, m = step(params, opt, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_grad_accum_matches_single_batch():
+    """n_microbatches=4 must give (numerically close) grads to n=1."""
+    model, tcfg1, params, _, data = _setup(n_micro=1)
+    tcfg4 = TrainConfig(optimizer=tcfg1.optimizer, n_microbatches=4)
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    _, _, g1 = loss_and_grad(model, params, batch, tcfg1)
+    _, _, g4 = loss_and_grad(model, params, batch, tcfg4)
+    # not bit-identical (per-microbatch mean vs global token mean under the
+    # loss mask) but must be close
+    for a, b in zip(jax.tree.leaves(g1), jax.tree.leaves(g4)):
+        na = np.asarray(a, np.float32)
+        nb = np.asarray(b, np.float32)
+        denom = np.abs(na).max() + 1e-6
+        assert np.abs(na - nb).max() / denom < 0.05
+
+
+def test_bf16_moments_update_params():
+    model, tcfg, params, opt, data = _setup(moment_dtype="bfloat16")
+    assert all(m.dtype == jnp.bfloat16 for m in jax.tree.leaves(opt.mu))
+    step = jax.jit(make_train_step(model, tcfg))
+    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()}
+    p2, o2, m = step(params, opt, batch)
+    # params moved, moments stayed bf16
+    assert all(mm.dtype == jnp.bfloat16 for mm in jax.tree.leaves(o2.mu))
+    moved = any(
+        not np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p2))
+    )
+    assert moved
+
+
+def test_grad_clip_bounds_update():
+    cfg = AdamWConfig(lr=1.0, grad_clip_norm=1e-3)
+    params = {"w": jnp.ones((4,))}
+    opt = adamw_init(params)
+    grads = {"w": jnp.full((4,), 1e6)}
+    _, _, metrics = adamw_update(cfg, grads, opt, params)
+    assert float(metrics["grad_norm"]) == pytest.approx(2e6, rel=1e-3)
+
+
+def test_warmup_cosine_schedule():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100)
+    from repro.training.optimizer import _schedule
+    assert float(_schedule(cfg, jnp.float32(0))) == pytest.approx(0.1)
+    assert float(_schedule(cfg, jnp.float32(9))) == pytest.approx(1.0)
+    assert float(_schedule(cfg, jnp.float32(100))) < 1e-6 + 1e-3
+
+
+def test_data_pipeline_deterministic_resume():
+    d = SyntheticLM(DataConfig(vocab_size=1000, global_batch=2, seq_len=16, seed=3))
+    a = d.batch_at(17)
+    b = d.batch_at(17)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    it = d.iterate(start_step=17)
+    c = next(it)
+    np.testing.assert_array_equal(a["tokens"], c["tokens"])
+    # labels are next-token shifted
+    full = d.batch_at(5)
+    assert full["tokens"].shape == full["labels"].shape
+
+
+def test_train_driver_checkpoint_restart(tmp_path):
+    """launch/train.py end-to-end: a run killed at step 3 and resumed must
+    reproduce the uninterrupted run's losses (deterministic data + state)."""
+    from repro.launch.train import train
+    # ground truth: uninterrupted 6 steps
+    _, losses_full = train("qwen1.5-0.5b", steps=6, global_batch=2, seq_len=16,
+                           log_every=100)
+    # interrupted at 3, then resumed to 6
+    d = str(tmp_path / "ck")
+    train("qwen1.5-0.5b", steps=3, global_batch=2, seq_len=16,
+          ckpt_dir=d, ckpt_every=100, log_every=100)     # final save at 3
+    _, losses_tail = train("qwen1.5-0.5b", steps=6, global_batch=2, seq_len=16,
+                           ckpt_dir=d, ckpt_every=100, resume=True,
+                           log_every=100)
+    np.testing.assert_allclose(losses_full[3:], losses_tail, rtol=2e-2)
