@@ -16,7 +16,7 @@ The scheduler is execution-agnostic: it emits a ScheduledBatch; the engine
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import TYPE_CHECKING, List, Optional, Tuple
 
 import numpy as np
 
@@ -26,6 +26,10 @@ from repro.core.features import BatchState
 from repro.core.lprs import LPRSConfig, select_chunk
 from repro.core.policies import PrefillQueue, make_policy
 from repro.core.request import Request, RequestState
+
+if TYPE_CHECKING:  # imported lazily at runtime: tenancy itself imports core
+    from repro.tenancy import FairnessState
+    from repro.tenancy.tenants import FairnessConfig
 
 
 @dataclass(frozen=True)
@@ -37,6 +41,7 @@ class SchedulerConfig:
     max_seqs: int = 128               # S_max sequence slots
     lprs: Optional[LPRSConfig] = None # None = static token-budget chunking
     apc: Optional[APCConfig] = None   # None = APC off
+    fairness: Optional["FairnessConfig"] = None  # None = single-tenant queue
 
 
 @dataclass
@@ -103,15 +108,38 @@ class ChunkedPrefillScheduler:
         self.cfg = cfg
         self.predictor = predictor
         self.kv_pool = kv_pool
-        self.queue: PrefillQueue = make_policy(cfg.policy, alpha=cfg.alpha, beta=cfg.beta)
+        if cfg.fairness is not None:
+            from repro.tenancy import FairnessState
+
+            self.fairness: Optional["FairnessState"] = FairnessState(
+                cfg.fairness,
+                policy_factory=lambda: make_policy(
+                    cfg.policy, alpha=cfg.alpha, beta=cfg.beta
+                ),
+            )
+            self.queue = self.fairness.queue
+        else:
+            self.fairness = None
+            self.queue: PrefillQueue = make_policy(
+                cfg.policy, alpha=cfg.alpha, beta=cfg.beta
+            )
         self.decoding: List[Request] = []
         self.stats = SchedulerStats()
         self._round = 0
 
     # -- intake ------------------------------------------------------------
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request) -> bool:
+        """Enqueue a request; returns False if hard-quota admission
+        (``admission_policy="reject"``) refused it.  A rejected request is
+        marked FINISHED (with no completion timestamps, so latency metrics
+        ignore it) so serve loops terminate and callers can release any
+        slot/KV resources they reserved for it."""
         assert req.state == RequestState.WAITING
+        if self.fairness is not None and not self.fairness.admit(req):
+            req.state = RequestState.FINISHED
+            return False
         self.queue.add(req)
+        return True
 
     def has_work(self) -> bool:
         return len(self.queue) > 0 or len(self.decoding) > 0
@@ -122,6 +150,8 @@ class ChunkedPrefillScheduler:
         batch = ScheduledBatch(round_idx=self._round)
         self._round += 1
         self.stats.rounds += 1
+        if self.fairness is not None:
+            self.fairness.on_round(now)
 
         # 1. decode-first: reserve budget for ongoing decodes
         self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
@@ -241,3 +271,7 @@ class ChunkedPrefillScheduler:
         for req in batch.decode_reqs:
             req.receive_token(0, now)
         self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
+        if self.fairness is not None:
+            # charge the VTC for tokens actually executed this round and
+            # retire prefill-complete requests from the fair queue's books
+            self.fairness.on_batch_done(batch)

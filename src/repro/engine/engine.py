@@ -167,6 +167,15 @@ class ServeResult:
     outputs: Optional[Dict[int, List[int]]] = None
 
 
+def compress_idle_gap(pending: List[Request], next_i: int, now: float) -> None:
+    """Jump the idle gap to the next arrival by shifting ALL future arrivals
+    by the same constant, so inter-arrival gaps — and therefore arrival-order
+    and aging behavior — are preserved mid-run."""
+    offset = now - pending[next_i].arrival_time
+    for j in range(next_i, len(pending)):
+        pending[j].arrival_time += offset
+
+
 def serve(
     requests: List[Request],
     scheduler: ChunkedPrefillScheduler,
@@ -204,7 +213,10 @@ def serve(
                     break
                 kv_pool.allocate(req.req_id, req.prompt_len)
             engine.admit(req)
-            scheduler.submit(req)
+            if not scheduler.submit(req):      # admission-rejected: give back
+                engine.release(req)
+                if kv_pool is not None:
+                    kv_pool.release(req.req_id)
             next_i += 1
 
     while rounds < max_rounds:
@@ -216,10 +228,7 @@ def serve(
             if realtime_arrivals:
                 time.sleep(min(0.001, pending[next_i].arrival_time - now))
             else:
-                # compress idle time: jump the arrival clock forward
-                pending[next_i] = pending[next_i]
-                for j in range(next_i, len(pending)):
-                    pending[j].arrival_time = now
+                compress_idle_gap(pending, next_i, now)
             continue
 
         batch = scheduler.schedule(now)

@@ -83,3 +83,84 @@ def summarize(requests: Iterable[Request], makespan: Optional[float] = None) -> 
 def cdf_points(xs: Sequence[float], n: int = 100) -> List[tuple]:
     arr = np.sort(np.asarray(xs, np.float64))
     return [(float(arr[int(q * (len(arr) - 1))]), q) for q in np.linspace(0, 1, n)]
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant fairness metrics
+# ---------------------------------------------------------------------------
+
+
+def jain_index(xs: Iterable[float]) -> float:
+    """Jain's fairness index: (Σx)² / (n·Σx²).  1.0 = perfectly even,
+    1/n = one party gets everything.  Empty input → NaN (undefined);
+    a single party, or all-zero allocations, → 1.0 (trivially fair)."""
+    arr = np.asarray(list(xs), np.float64)
+    if arr.size == 0:
+        return float("nan")
+    ss = float((arr * arr).sum())
+    if ss == 0.0:
+        return 1.0
+    s = float(arr.sum())
+    return s * s / (arr.size * ss)
+
+
+@dataclass
+class FairnessReport:
+    """Per-tenant latency + service summary for one serving run.
+
+    ``service_tokens``: tokens actually delivered per tenant (prefill
+    progress + generated tokens).  ``normalized_service`` divides by the
+    tenant's weight — the quantity the VTC equalizes.  ``jain`` is Jain's
+    index over normalized service; ``max_service_delta`` is the worst-case
+    spread (max - min) of normalized service, the VTC paper's service-bound
+    metric.
+    """
+
+    per_tenant: Dict[str, LatencyReport]
+    service_tokens: Dict[str, float]
+    normalized_service: Dict[str, float]
+    jain: float
+    max_service_delta: float
+
+    def row(self) -> Dict[str, float]:
+        out = {"jain": self.jain, "max_service_delta": self.max_service_delta}
+        for t, rep in self.per_tenant.items():
+            out[f"{t}/p99_ttft"] = rep.ttft["p99"]
+            out[f"{t}/mean_e2e"] = rep.e2e["mean"]
+            out[f"{t}/service_tokens"] = self.service_tokens[t]
+        return out
+
+
+def request_service_tokens(req: Request) -> float:
+    """Tokens the engine actually delivered to one request so far."""
+    return float(req.prefill_done + req.generated)
+
+
+def summarize_by_tenant(
+    requests: Iterable[Request],
+    *,
+    weights: Optional[Dict[str, float]] = None,
+    makespan: Optional[float] = None,
+) -> FairnessReport:
+    reqs = list(requests)
+    by_tenant: Dict[str, List[Request]] = {}
+    for r in reqs:
+        by_tenant.setdefault(r.tenant, []).append(r)
+    per_tenant = {
+        t: summarize(rs, makespan=makespan) for t, rs in sorted(by_tenant.items())
+    }
+    service = {
+        t: sum(request_service_tokens(r) for r in rs)
+        for t, rs in sorted(by_tenant.items())
+    }
+    weights = weights or {}
+    normalized = {t: s / float(weights.get(t, 1.0)) for t, s in service.items()}
+    vals = list(normalized.values())
+    delta = (max(vals) - min(vals)) if vals else float("nan")
+    return FairnessReport(
+        per_tenant=per_tenant,
+        service_tokens=service,
+        normalized_service=normalized,
+        jain=jain_index(vals),
+        max_service_delta=delta,
+    )

@@ -26,7 +26,7 @@ from typing import Callable, Dict, List, Optional
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.costmodel import CostModel, CostModelConfig
-from repro.engine.metrics import summarize
+from repro.engine.metrics import FairnessReport, summarize, summarize_by_tenant
 from repro.engine.simulator import ServingSimulator
 
 
@@ -127,6 +127,13 @@ class Router:
             if r.state != RequestState.FINISHED
         )
 
+    def _tenant_outstanding(self, st: ReplicaState, tenant: str) -> int:
+        return sum(
+            r.remaining_prefill + (r.max_new_tokens - r.generated)
+            for r in st.assigned.values()
+            if r.tenant == tenant and r.state != RequestState.FINISHED
+        )
+
     def _healthy(self) -> List[ReplicaState]:
         return [s for s in self.replicas.values() if s.alive and not s.draining]
 
@@ -138,9 +145,23 @@ class Router:
         healthy = self._healthy()
         if not healthy:
             raise RuntimeError("no healthy replicas")
-        target = min(healthy, key=self._outstanding_work)
-        target.assigned[req.req_id] = req
-        target.scheduler.submit(req)
+        if self.cfg.scheduler.fairness is not None:
+            # tenant-aware: spread each tenant's work across replicas first
+            # (so one tenant's burst can't capture a whole replica), then
+            # least-loaded overall.  Replays keep the original tenant tag, so
+            # per-replica VTC accounting reconstructs after failover.
+            target = min(
+                healthy,
+                key=lambda s: (
+                    self._tenant_outstanding(s, req.tenant),
+                    self._outstanding_work(s),
+                    s.rid,
+                ),
+            )
+        else:
+            target = min(healthy, key=self._outstanding_work)
+        if target.scheduler.submit(req):
+            target.assigned[req.req_id] = req
 
     def _redistribute(self, st: ReplicaState, reason: str) -> None:
         """Replay a replica's unfinished requests elsewhere.
@@ -169,6 +190,30 @@ class Router:
                 f"t={self.clock:.3f} replayed {len(replay)} requests from "
                 f"replica {st.rid} ({reason})"
             )
+
+    # -- fairness aggregation ---------------------------------------------------
+    def tenant_service(self) -> Dict[str, float]:
+        """Actual tokens executed per tenant, summed across ALL replicas ever
+        (dead ones included: their executed tokens were real service, even if
+        the prefill progress itself was lost and replayed elsewhere)."""
+        out: Dict[str, float] = {}
+        for st in self.replicas.values():
+            fairness = st.scheduler.fairness
+            if fairness is None:
+                continue
+            for t, tokens in fairness.service_by_tenant().items():
+                out[t] = out.get(t, 0.0) + tokens
+        return out
+
+    def fairness_report(self) -> FairnessReport:
+        """Per-tenant latency/service summary over the request journal."""
+        weights = None
+        fairness_cfg = self.cfg.scheduler.fairness
+        if fairness_cfg is not None:
+            weights = {t.name: t.weight for t in fairness_cfg.tenants}
+        return summarize_by_tenant(
+            self.journal.values(), weights=weights, makespan=self.clock
+        )
 
     # -- health -----------------------------------------------------------------
     def _check_health(self) -> None:

@@ -51,6 +51,7 @@ class ServingSimulator:
         collect_samples: bool = False,
         idle_step_s: float = 0.001,
         max_rounds: int = 2_000_000,
+        horizon_s: Optional[float] = None,
     ):
         self.sched = scheduler
         self.cost = cost_model
@@ -58,6 +59,7 @@ class ServingSimulator:
         self.collect_samples = collect_samples
         self.idle_step_s = idle_step_s
         self.max_rounds = max_rounds
+        self.horizon_s = horizon_s    # stop mid-backlog at this sim time
 
     def run(self, requests: List[Request]) -> SimResult:
         pending = sorted(requests, key=lambda r: r.arrival_time)
@@ -76,10 +78,13 @@ class ServingSimulator:
                     if not self.kv_pool.can_allocate(req.req_id, req.prompt_len):
                         break
                     self.kv_pool.allocate(req.req_id, req.prompt_len)
-                self.sched.submit(req)
+                if not self.sched.submit(req) and self.kv_pool is not None:
+                    self.kv_pool.release(req.req_id)   # admission-rejected
                 next_arrival += 1
 
         while rounds < self.max_rounds:
+            if self.horizon_s is not None and now >= self.horizon_s:
+                break
             admit()
             if not self.sched.has_work():
                 if next_arrival >= len(pending):
@@ -135,6 +140,7 @@ def run_policy(
     predictor=None,
     kv_pool: Optional[KVBlockPool] = None,
     collect_samples: bool = False,
+    horizon_s: Optional[float] = None,
 ) -> SimResult:
     """Convenience wrapper: fresh scheduler + simulator over a request list.
 
@@ -142,6 +148,7 @@ def run_policy(
     """
     sched = ChunkedPrefillScheduler(scheduler_cfg, predictor=predictor, kv_pool=kv_pool)
     sim = ServingSimulator(
-        sched, cost_model or CostModel(), kv_pool=kv_pool, collect_samples=collect_samples
+        sched, cost_model or CostModel(), kv_pool=kv_pool,
+        collect_samples=collect_samples, horizon_s=horizon_s,
     )
     return sim.run(requests)

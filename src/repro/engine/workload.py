@@ -12,6 +12,7 @@ and capped at 512 per the paper.
 """
 from __future__ import annotations
 
+import dataclasses
 import math
 from dataclasses import dataclass
 from typing import List, Optional
@@ -108,6 +109,98 @@ def uniform_arrivals(
         reqs.append(
             Request(prompt_len=p, max_new_tokens=g, arrival_time=i * interval_s)
         )
+    return reqs
+
+
+@dataclass(frozen=True)
+class TenantTraffic:
+    """One tenant's arrival process for ``multi_tenant``.
+
+    ``kind`` picks sane defaults for unset fields:
+      * ``heavy``  — high rate, long prompts (the bully tenant)
+      * ``light``  — low rate, short prompts (interactive clients)
+      * ``bursty`` — light, but arrivals concentrate in on/off bursts
+    """
+
+    name: str
+    kind: str = "light"                    # heavy | light | bursty
+    rps: Optional[float] = None            # mean arrival rate (Poisson)
+    prompt_mean: Optional[float] = None    # log-normal median prompt length
+    prompt_sigma: float = 0.6
+    max_new_tokens: int = 64
+    burst_period_s: float = 5.0            # bursty only: on+off cycle length
+    burst_duty: float = 0.2                # bursty only: fraction of cycle "on"
+
+    _KIND_DEFAULTS = {
+        "heavy": {"rps": 8.0, "prompt_mean": 200.0},
+        "light": {"rps": 1.0, "prompt_mean": 30.0},
+        "bursty": {"rps": 1.0, "prompt_mean": 30.0},
+    }
+
+    def resolved(self) -> "TenantTraffic":
+        if self.kind not in self._KIND_DEFAULTS:
+            raise ValueError(f"unknown tenant traffic kind {self.kind!r}")
+        d = self._KIND_DEFAULTS[self.kind]
+        return dataclasses.replace(
+            self,
+            rps=self.rps if self.rps is not None else d["rps"],
+            prompt_mean=(
+                self.prompt_mean if self.prompt_mean is not None else d["prompt_mean"]
+            ),
+        )
+
+
+def default_tenant_mix(n_light: int = 4) -> List[TenantTraffic]:
+    """The bench's 1-heavy/N-light mix."""
+    return [TenantTraffic("heavy0", "heavy")] + [
+        TenantTraffic(f"light{i}", "light") for i in range(n_light)
+    ]
+
+
+def multi_tenant(
+    tenants: Optional[List[TenantTraffic]] = None,
+    *,
+    duration_s: float = 30.0,
+    max_context: int = 512,
+    seed: int = 0,
+) -> List[Request]:
+    """Merged multi-tenant arrival trace: independent Poisson (or on/off
+    burst) streams per tenant, tagged with ``Request.tenant``, sorted by
+    arrival time."""
+    tenants = [t.resolved() for t in (tenants or default_tenant_mix())]
+    rng = np.random.default_rng(seed)
+    reqs: List[Request] = []
+    for spec in tenants:
+        # random phase offset per tenant so bursty tenants don't synchronize
+        phase0 = float(rng.uniform(0.0, spec.burst_period_s))
+        # first arrival is one inter-arrival gap in (a true Poisson process —
+        # not a deterministic all-tenant collision at t=0)
+        if spec.kind == "bursty":
+            t = float(rng.exponential(spec.burst_duty / spec.rps))
+        else:
+            t = float(rng.exponential(1.0 / spec.rps))
+        while t < duration_s:
+            if spec.kind == "bursty":
+                phase = (t + phase0) % spec.burst_period_s
+                on_len = spec.burst_duty * spec.burst_period_s
+                if phase >= on_len:                 # in the off window: skip ahead
+                    t += spec.burst_period_s - phase
+                    continue
+                # compress the whole cycle's arrivals into the on window
+                gap = float(rng.exponential(spec.burst_duty / spec.rps))
+            else:
+                gap = float(rng.exponential(1.0 / spec.rps))
+            p = int(np.clip(
+                round(rng.lognormal(math.log(spec.prompt_mean), spec.prompt_sigma)),
+                1, max_context,
+            ))
+            g = int(rng.integers(max(1, spec.max_new_tokens // 4),
+                                 spec.max_new_tokens + 1))
+            reqs.append(Request(
+                prompt_len=p, max_new_tokens=g, arrival_time=t, tenant=spec.name,
+            ))
+            t += gap
+    reqs.sort(key=lambda r: r.arrival_time)
     return reqs
 
 

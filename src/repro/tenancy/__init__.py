@@ -1,0 +1,131 @@
+"""Multi-tenant fairness subsystem (layered above the paper's scheduler).
+
+Components:
+  * ``tenants``   — TenantSpec / TenantRegistry / FairnessConfig
+  * ``vtc``       — weighted Virtual Token Counter (per-tenant service)
+  * ``fair_queue``— two-level prefill queue (inter-tenant VTC, intra-tenant
+                    FCFS/SJF/Aging)
+  * ``admission`` — token-bucket admission with deprioritization penalties
+
+``FairnessState`` wires the four together for one scheduler instance; it is
+constructed by ``ChunkedPrefillScheduler`` when ``SchedulerConfig.fairness``
+is set and is a no-op import otherwise.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Set
+
+from repro.core.policies import PrefillQueue
+from repro.core.request import Request, RequestState
+from repro.tenancy.admission import AdmissionController, AdmissionDecision, TokenBucket
+from repro.tenancy.fair_queue import FairPrefillQueue
+from repro.tenancy.tenants import (
+    DEFAULT_TENANT, FairnessConfig, TenantRegistry, TenantSpec,
+)
+from repro.tenancy.vtc import TenantService, VirtualTokenCounter
+
+
+class FairnessState:
+    """Per-scheduler composition of registry + VTC + admission + fair queue.
+
+    The scheduler calls exactly three hooks, all guarded by
+    ``cfg.fairness is not None``:
+      * ``admit(req)``        at submit — token-bucket assessment
+      * ``on_round(now)``     at schedule — advance the penalty clock
+      * ``on_batch_done(b)``  post-execution — charge the VTC, retire
+                              completed prefills, track decoding tenants
+    """
+
+    def __init__(self, cfg: FairnessConfig, policy_factory: Callable[[], PrefillQueue]):
+        self.cfg = cfg
+        self.registry = TenantRegistry(cfg.tenants, auto_register=cfg.auto_register)
+        self.vtc = VirtualTokenCounter(
+            self.registry,
+            prefill_weight=cfg.prefill_charge_weight,
+            decode_weight=cfg.decode_charge_weight,
+        )
+        self.admission: Optional[AdmissionController] = (
+            AdmissionController(
+                self.registry,
+                policy=cfg.admission_policy,
+                penalty_window_s=cfg.penalty_window_s,
+            )
+            if cfg.admission
+            else None
+        )
+        self._decoding: Dict[str, Set[int]] = {}   # tenant -> decoding req_ids
+        self.queue = FairPrefillQueue(
+            policy_factory,
+            self.vtc,
+            admission=self.admission,
+            extra_active_fn=self._decoding_tenants,
+        )
+        self.rejected: List[Request] = []
+
+    def _decoding_tenants(self) -> List[str]:
+        return [t for t, ids in self._decoding.items() if ids]
+
+    # -- scheduler hooks -------------------------------------------------------
+    def admit(self, req: Request) -> bool:
+        if self.admission is None:
+            return True
+        decision = self.admission.assess(req)
+        if not decision.admitted:
+            self.rejected.append(req)
+        return decision.admitted
+
+    def on_round(self, now: float) -> None:
+        self.queue.set_now(now)
+
+    def on_batch_done(self, batch) -> None:
+        """Charge executed tokens and maintain activity bookkeeping.
+
+        Called AFTER the scheduler applied chunk/token deliveries, so request
+        states reflect the post-round world.
+        """
+        prefill: Dict[str, int] = {}
+        decode: Dict[str, int] = {}
+        for req, c in batch.prefill_chunks:
+            prefill[req.tenant] = prefill.get(req.tenant, 0) + int(c)
+            if req.state in (RequestState.DECODING, RequestState.FINISHED):
+                # the round that completes a prefill also delivers the first
+                # output token (Sarathi semantics) — charge it as decode so
+                # per-tenant service matches tokens delivered
+                decode[req.tenant] = decode.get(req.tenant, 0) + 1
+        for req in batch.decode_reqs:
+            decode[req.tenant] = decode.get(req.tenant, 0) + 1
+        for t in set(prefill) | set(decode):
+            self.vtc.charge(t, prefill.get(t, 0), decode.get(t, 0))
+
+        for req, _c in batch.prefill_chunks:
+            if req.state in (RequestState.DECODING, RequestState.FINISHED):
+                self.queue.retire(req)
+            if req.state == RequestState.DECODING:
+                self._decoding.setdefault(req.tenant, set()).add(req.req_id)
+        for req in batch.decode_reqs:
+            if req.state == RequestState.FINISHED:
+                ids = self._decoding.get(req.tenant)
+                if ids is not None:
+                    ids.discard(req.req_id)
+
+    # -- views ----------------------------------------------------------------
+    def service_by_tenant(self) -> Dict[str, int]:
+        return {t: self.vtc.actual_tokens(t) for t in self.vtc.tenants()}
+
+    def virtual_by_tenant(self) -> Dict[str, float]:
+        return {t: self.vtc.virtual_service(t) for t in self.vtc.tenants()}
+
+
+__all__ = [
+    "AdmissionController",
+    "AdmissionDecision",
+    "DEFAULT_TENANT",
+    "FairPrefillQueue",
+    "FairnessConfig",
+    "FairnessState",
+    "TenantRegistry",
+    "TenantService",
+    "TenantSpec",
+    "TokenBucket",
+    "VirtualTokenCounter",
+]

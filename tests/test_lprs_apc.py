@@ -2,7 +2,7 @@
 Eqs. 12-14)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.apc import APCConfig, APCStats, activity_cap, apply as apc_apply
 from repro.core.apc import min_effective_progress

@@ -2,7 +2,7 @@
 heap's O(k log n) ordering equivalence (Eq. 3/4), FCFS/SJF baselines."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.policies import (
     NaiveAgingQueue, PrefillQueue, aging_priority, make_policy,

@@ -2,7 +2,7 @@
 decode-first, budget conservation, APC interaction, request lifecycle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.apc import APCConfig
 from repro.core.lprs import LPRSConfig
