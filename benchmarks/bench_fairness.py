@@ -119,7 +119,10 @@ def run_isolated(seed: int) -> Dict[str, float]:
     return iso
 
 
-def main(seed: int = 0):
+def main(seed: int = 0, duration_s: float = None):
+    global DURATION_S
+    if duration_s is not None:
+        DURATION_S = duration_s     # CI smoke: tiny horizon, gates informational
     shared = run_shared(seed)
     iso = run_isolated(seed)
 
@@ -164,4 +167,11 @@ def main(seed: int = 0):
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--duration", type=float, default=None,
+                    help="override the 30 s workload horizon (CI smoke)")
+    args = ap.parse_args()
+    main(seed=args.seed, duration_s=args.duration)

@@ -43,6 +43,8 @@ class Request:
     # scheduling accounting
     rounds_scheduled: int = 0
     chunks: List[int] = field(default_factory=list)
+    preemptions: int = 0
+    folded_tokens: int = 0      # generated tokens folded into the prompt by preempt()
 
     @property
     def remaining_prefill(self) -> int:
@@ -50,7 +52,9 @@ class Request:
 
     @property
     def context_len(self) -> int:
-        return self.prefill_done + self.generated
+        # folded tokens live inside prefill_done after a preemption recompute;
+        # subtracting them keeps the physical KV length exact
+        return self.prefill_done + self.generated - self.folded_tokens
 
     @property
     def is_prefill(self) -> bool:
@@ -64,6 +68,27 @@ class Request:
         self.state = (
             RequestState.DECODING if self.remaining_prefill == 0 else RequestState.PREFILLING
         )
+
+    def preempt(self) -> None:
+        """Evicted under KV pressure: the request's blocks were freed, so its
+        context must be recomputed from scratch.  Tokens already generated
+        were delivered (streamed) and are folded into the prompt — recompute
+        re-prefills prompt + generated tokens (vLLM recompute semantics), so
+        decode resumes conditioned on the full delivered context."""
+        assert self.state in (
+            RequestState.WAITING, RequestState.PREFILLING, RequestState.DECODING,
+        ), self.state
+        unfolded = self.generated - self.folded_tokens
+        if unfolded > 0:
+            self.prompt_len += unfolded
+            if self.prompt_tokens is not None:
+                self.prompt_tokens = (
+                    list(self.prompt_tokens) + list(self.output_tokens[self.folded_tokens:])
+                )
+            self.folded_tokens = self.generated
+        self.state = RequestState.WAITING
+        self.prefill_done = 0
+        self.preemptions += 1
 
     def receive_token(self, tok: int = 0, now: float = 0.0) -> None:
         assert self.state == RequestState.DECODING

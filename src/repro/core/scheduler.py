@@ -50,6 +50,9 @@ class ScheduledBatch:
     decode_reqs: List[Request] = field(default_factory=list)
     prefill_chunks: List[Tuple[Request, int]] = field(default_factory=list)
     state: BatchState = field(default_factory=BatchState)
+    # requests evicted this round to make KV room (blocks freed, prefill
+    # re-enqueued for recompute) — the engine must reset their slot state
+    preempted: List[Request] = field(default_factory=list)
 
     @property
     def prefill_tokens(self) -> int:
@@ -77,6 +80,8 @@ class SchedulerStats:
     scheduled_prefill_seqs: int = 0     # Σ per-round count (Table 10)
     scheduled_prefill_tokens: int = 0
     scheduled_decode_tokens: int = 0
+    preemptions: int = 0                # KV-pressure evictions (recompute)
+    kv_deferrals: int = 0               # chunks deferred for lack of blocks
     apc: APCStats = field(default_factory=APCStats)
 
     @property
@@ -101,13 +106,15 @@ class ChunkedPrefillScheduler:
         cfg: SchedulerConfig,
         *,
         predictor=None,
-        kv_pool=None,           # optional: exposes used_mb/free_mb/allocated_mb/reserved_mb
+        kv_pool=None,           # optional KVBlockPool: memory features + booking
+        kv_booking: bool = True,  # False: legacy mode, pool is features-only
     ):
         if cfg.lprs is not None and predictor is None:
             raise ValueError("LPRS requires a latency predictor")
         self.cfg = cfg
         self.predictor = predictor
         self.kv_pool = kv_pool
+        self.kv_booking = kv_booking
         if cfg.fairness is not None:
             from repro.tenancy import FairnessState
 
@@ -126,6 +133,31 @@ class ChunkedPrefillScheduler:
         self.decoding: List[Request] = []
         self.stats = SchedulerStats()
         self._round = 0
+        if self._books():
+            self._apply_tenant_quotas()
+
+    # -- KV wiring ----------------------------------------------------------
+    def attach_kv_pool(self, kv_pool, *, booking: bool = True) -> None:
+        """Late-bind a pool (serve loops that construct the scheduler first).
+        Tenant quotas only apply when the scheduler books blocks — the legacy
+        features-only mode predates quotas and must not enforce them."""
+        self.kv_pool = kv_pool
+        self.kv_booking = booking
+        if self._books():
+            self._apply_tenant_quotas()
+
+    def _apply_tenant_quotas(self) -> None:
+        """Charge per-tenant KV quotas (TenantSpec.kv_quota_frac) into the pool."""
+        if self.fairness is None:
+            return
+        n_blocks = self.kv_pool.cfg.n_blocks
+        for spec in self.fairness.registry:
+            frac = getattr(spec, "kv_quota_frac", None)
+            if frac:
+                self.kv_pool.set_tenant_quota(spec.name, max(1, int(frac * n_blocks)))
+
+    def _books(self) -> bool:
+        return self.kv_pool is not None and self.kv_booking
 
     # -- intake ------------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -133,11 +165,18 @@ class ChunkedPrefillScheduler:
         (``admission_policy="reject"``) refused it.  A rejected request is
         marked FINISHED (with no completion timestamps, so latency metrics
         ignore it) so serve loops terminate and callers can release any
-        slot/KV resources they reserved for it."""
+        slot/KV resources they reserved for it.  Under the ``queue``
+        admission policy an over-budget request is parked in a delay pen and
+        enters the fair queue once its tenant's token bucket refills."""
         assert req.state == RequestState.WAITING
-        if self.fairness is not None and not self.fairness.admit(req):
-            req.state = RequestState.FINISHED
-            return False
+        if self.fairness is not None:
+            decision = self.fairness.admit(req)
+            if not decision.admitted:
+                req.state = RequestState.FINISHED
+                return False
+            if decision.delayed:
+                self.queue.add_delayed(req, decision.ready_at)
+                return True
         self.queue.add(req)
         return True
 
@@ -153,10 +192,21 @@ class ChunkedPrefillScheduler:
         if self.fairness is not None:
             self.fairness.on_round(now)
 
-        # 1. decode-first: reserve budget for ongoing decodes
+        # 1. decode-first: reserve budget for ongoing decodes.  With a booked
+        # KV pool every decode token gets its block here (preempting the
+        # youngest block-holder under pressure) — a decode is never executed
+        # with unbooked memory.
         self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
-        n_decode = min(len(self.decoding), cfg.max_seqs, cfg.token_budget)
-        batch.decode_reqs = self.decoding[:n_decode]
+        decode_candidates = self.decoding[: min(len(self.decoding), cfg.max_seqs,
+                                                cfg.token_budget)]
+        scheduled_ids: set = set()      # committed this round: preemption-immune
+        if self._books():
+            batch.decode_reqs = self._book_decode_blocks(
+                decode_candidates, batch, scheduled_ids
+            )
+        else:
+            batch.decode_reqs = decode_candidates
+        n_decode = len(batch.decode_reqs)
         committed = n_decode
 
         st = BatchState(
@@ -226,6 +276,19 @@ class ChunkedPrefillScheduler:
                     cap=cap,
                 )
 
+            # KV gate: shrink the chunk to what the pool (and the tenant's
+            # quota) can actually back RIGHT NOW — chunk-granular allocation.
+            # A huge prompt takes whatever blocks are available this round and
+            # defers the rest instead of memory-blocking every later arrival.
+            if self._books() and c > 0:
+                fit = self.kv_pool.max_new_tokens(req.req_id, tenant=req.tenant)
+                if fit <= 0 and self._make_room(req, batch, scheduled_ids):
+                    fit = self.kv_pool.max_new_tokens(req.req_id, tenant=req.tenant)
+                if fit < c:
+                    c = min(int(c), int(fit))
+                    if c < h_i:
+                        self.stats.kv_deferrals += 1
+
             if c <= 0:
                 deferred.append(req)
                 blocks += 1
@@ -237,6 +300,9 @@ class ChunkedPrefillScheduler:
                 continue
             blocks = 0
 
+            if self._books():
+                self.kv_pool.allocate(req.req_id, int(c), tenant=req.tenant)
+                scheduled_ids.add(req.req_id)
             batch.prefill_chunks.append((req, int(c)))
             st = st.with_extra_prefill(int(c), req.prefill_done)
             committed += int(c)
@@ -252,6 +318,87 @@ class ChunkedPrefillScheduler:
         self.stats.scheduled_prefill_tokens += batch.prefill_tokens
         self.stats.scheduled_decode_tokens += batch.decode_tokens
         return batch
+
+    # -- KV booking / preemption ---------------------------------------------
+    def _book_decode_blocks(
+        self, candidates: List[Request], batch: ScheduledBatch, scheduled_ids: set
+    ) -> List[Request]:
+        """Allocate one token of KV per decode candidate, evicting the
+        youngest block-holder when the pool (or the tenant quota) is out of
+        blocks.  A candidate that cannot be backed is deferred to the next
+        round rather than executed unbooked."""
+        kept: List[Request] = []
+        for r in candidates:
+            if r.state != RequestState.DECODING:       # preempted this round
+                continue
+            if self.kv_pool.can_allocate(r.req_id, 1, tenant=r.tenant) or (
+                self._make_room(r, batch, scheduled_ids)
+            ):
+                self.kv_pool.allocate(r.req_id, 1, tenant=r.tenant)
+                kept.append(r)
+                scheduled_ids.add(r.req_id)
+        return kept
+
+    def _make_room(
+        self, req: Request, batch: ScheduledBatch, scheduled_ids: set
+    ) -> bool:
+        """Preempt strictly-younger block-holders until ``req`` can allocate
+        one more token (True) or no eligible victim remains (False).  When the
+        tenant quota — not pool space — is the binding limit, only same-tenant
+        victims can help."""
+        pool = self.kv_pool
+        while not pool.can_allocate(req.req_id, 1, tenant=req.tenant):
+            same_tenant = pool.quota_blocked(req.req_id, 1, tenant=req.tenant)
+            victim = self._pick_victim(
+                req, scheduled_ids, tenant=req.tenant if same_tenant else None
+            )
+            if victim is None:
+                return False
+            self._preempt(victim, batch)
+        return True
+
+    def _pick_victim(
+        self, requester: Request, scheduled_ids: set, tenant: Optional[str] = None
+    ) -> Optional[Request]:
+        """Lowest-priority block-holder: the youngest arrival among decoding
+        requests and queued (partially prefilled) requests, excluding anything
+        already committed to this round's batch.  Only a STRICTLY younger
+        victim is eligible — an older request is never preempted for a newer
+        one, which makes eviction thrash-free (total order on arrivals)."""
+        pool = self.kv_pool
+        best: Optional[Request] = None
+        for r in list(self.decoding) + list(self.queue.requests()):
+            if r.req_id == requester.req_id or r.req_id in scheduled_ids:
+                continue
+            if tenant is not None and r.tenant != tenant:
+                continue
+            if not pool.tables.get(r.req_id):
+                continue
+            if (r.arrival_time, r.req_id) <= (requester.arrival_time, requester.req_id):
+                continue
+            if best is None or (r.arrival_time, r.req_id) > (best.arrival_time,
+                                                             best.req_id):
+                best = r
+        return best
+
+    def _preempt(self, victim: Request, batch: ScheduledBatch) -> None:
+        """Free the victim's blocks and send its prefill back for recompute."""
+        was_decoding = victim.state == RequestState.DECODING
+        in_queue = victim in self.queue
+        is_delayed = getattr(self.queue, "is_delayed", None)
+        self.kv_pool.release(victim.req_id, keep_registration=True)
+        victim.preempt()
+        self.stats.preemptions += 1
+        batch.preempted.append(victim)
+        if was_decoding:
+            self.decoding = [r for r in self.decoding if r.req_id != victim.req_id]
+            self.queue.add(victim)
+            if self.fairness is not None:
+                self.fairness.on_preempt(victim)
+        elif is_delayed is not None and is_delayed(victim):
+            pass    # still rate-limit parked: released at its ready time
+        elif in_queue:
+            self.queue.update(victim)   # remaining_prefill changed: re-key
 
     # -- post-execution updates ---------------------------------------------
     def on_batch_done(self, batch: ScheduledBatch, now: float) -> None:
@@ -271,6 +418,12 @@ class ChunkedPrefillScheduler:
         for req in batch.decode_reqs:
             req.receive_token(0, now)
         self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
+        if self._books():
+            # the pool's lifecycle ends here: finished requests' blocks drop
+            # their references (hashed blocks stay cached for prefix reuse)
+            for req in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
+                if req.state == RequestState.FINISHED:
+                    self.kv_pool.release(req.req_id)
         if self.fairness is not None:
             # charge the VTC for tokens actually executed this round and
             # retire prefill-complete requests from the fair queue's books

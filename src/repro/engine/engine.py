@@ -27,7 +27,7 @@ from repro.configs.base import ModelConfig
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch
 from repro.engine.kv_cache import KVBlockPool, pool_for_model
-from repro.engine.metrics import LatencyReport, summarize
+from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
 from repro.engine.sampler import SamplerConfig, sample_tokens
 from repro.models.model import Model, build_model
 
@@ -107,8 +107,51 @@ class JAXEngine:
         if slot is not None:
             self.free_slots.append(slot)
 
+    def reset_slot(self, req: Request) -> None:
+        """KV-preempted request: its blocks were freed, so the slot's cache
+        contents are dead — recompute restarts the prefill at position 0."""
+        slot = self.slot_of.get(req.req_id)
+        if slot is not None:
+            self.lens = self.lens.at[slot].set(0)
+
     def has_capacity(self) -> bool:
         return len(self.free_slots) > 0
+
+    # -- prefix-cache payloads -------------------------------------------------
+    def restore_prefix(self, req: Request, kv_pool: KVBlockPool) -> None:
+        """Write a prefix-cache hit's stored K/V payloads into the request's
+        slot so the skipped prefill positions hold numerically identical
+        state (causal attention: prefix KV depends only on prefix tokens)."""
+        slot = self.slot_of[req.req_id]
+        bs = kv_pool.cfg.block_size
+        table = kv_pool.tables.get(req.req_id, [])
+        n_matched = kv_pool.lens.get(req.req_id, 0) // bs
+        ks, vs = [], []
+        for bid in table[:n_matched]:
+            payload = kv_pool.payload(bid)
+            assert payload is not None, "engine prefix match requires payloads"
+            ks.append(payload[0])
+            vs.append(payload[1])
+        if ks:
+            # one functional update per cache tensor, not one per block
+            self.cache["k"] = (
+                self.cache["k"].at[:, slot, : n_matched * bs].set(jnp.concatenate(ks, axis=1))
+            )
+            self.cache["v"] = (
+                self.cache["v"].at[:, slot, : n_matched * bs].set(jnp.concatenate(vs, axis=1))
+            )
+        self.lens = self.lens.at[slot].set(n_matched * bs)
+
+    def capture_sealed(self, req: Request, kv_pool: KVBlockPool) -> None:
+        """Park newly sealed (full, content-addressed) prompt blocks' K/V
+        host-side so future prefix hits can restore them."""
+        slot = self.slot_of.get(req.req_id)
+        if slot is None:
+            return
+        for _idx, bid, s, e in kv_pool.take_newly_sealed(req.req_id):
+            k_blk = jnp.asarray(self.cache["k"][:, slot, s:e])
+            v_blk = jnp.asarray(self.cache["v"][:, slot, s:e])
+            kv_pool.store_payload(bid, (k_blk, v_blk))
 
     # -- one round ---------------------------------------------------------------
     def _bucket(self, c: int) -> int:
@@ -165,6 +208,7 @@ class ServeResult:
     wall_s: float
     samples: Optional[Tuple[np.ndarray, np.ndarray]] = None
     outputs: Optional[Dict[int, List[int]]] = None
+    memory: Optional[MemoryReport] = None     # KV pool lifecycle summary
 
 
 def compress_idle_gap(pending: List[Request], next_i: int, now: float) -> None:
@@ -201,6 +245,9 @@ def serve(
     rounds = 0
     feats, lats = [], []
     outputs: Dict[int, List[int]] = {}
+    if kv_pool is not None and scheduler.kv_pool is None:
+        # the scheduler books blocks chunk-granularly inside schedule()
+        scheduler.attach_kv_pool(kv_pool)
 
     def admit(now_s: float):
         nonlocal next_i
@@ -208,11 +255,14 @@ def serve(
             req = pending[next_i]
             if not engine.has_capacity():
                 break
+            matched = 0
             if kv_pool is not None:
-                if not kv_pool.can_allocate(req.req_id, req.prompt_len):
-                    break
-                kv_pool.allocate(req.req_id, req.prompt_len)
+                # prefix-cache match: only blocks with stored payloads count —
+                # the engine must restore real K/V for every skipped position
+                matched = kv_pool.submit_request(req, require_payload=True)
             engine.admit(req)
+            if matched > 0:
+                engine.restore_prefix(req, kv_pool)
             if not scheduler.submit(req):      # admission-rejected: give back
                 engine.release(req)
                 if kv_pool is not None:
@@ -232,31 +282,30 @@ def serve(
             continue
 
         batch = scheduler.schedule(now)
+        for r in batch.preempted:
+            engine.reset_slot(r)               # blocks freed: slot KV is dead
         if batch.is_empty():
             time.sleep(0.0005)
             continue
 
-        if kv_pool is not None:
-            for r in batch.decode_reqs:
-                if kv_pool.can_allocate(r.req_id, 1):
-                    kv_pool.allocate(r.req_id, 1)
-
         wall_ms = engine.execute(batch)
+        if kv_pool is not None:
+            # park newly sealed (full, hashed) prompt blocks' K/V host-side
+            for r, _c in batch.prefill_chunks:
+                engine.capture_sealed(r, kv_pool)
         if collect_samples:
             feats.append(batch.state.features())
             lats.append(wall_ms)
         rounds += 1
 
         now = time.perf_counter() - t_start
-        scheduler.on_batch_done(batch, now)
+        scheduler.on_batch_done(batch, now)    # releases finished KV refs
 
         for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
             outputs.setdefault(r.req_id, [])
             if r.state == RequestState.FINISHED:
                 outputs[r.req_id] = list(r.output_tokens)
                 engine.release(r)
-                if kv_pool is not None:
-                    kv_pool.release(r.req_id)
 
     samples = (np.stack(feats), np.asarray(lats)) if collect_samples and feats else None
     return ServeResult(
@@ -266,4 +315,7 @@ def serve(
         wall_s=now,
         samples=samples,
         outputs=outputs,
+        memory=(
+            summarize_memory(kv_pool, scheduler.stats) if kv_pool is not None else None
+        ),
     )

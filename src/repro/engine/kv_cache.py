@@ -1,16 +1,47 @@
-"""Paged KV-cache block pool (vLLM-style block accounting).
+"""Paged KV-cache memory subsystem (vLLM-style block lifecycle).
 
 The pool manages fixed-size token blocks per request; on TPU the backing
 store is a preallocated HBM tensor, here the accounting layer is shared by
 the simulator (features + admission control) and the CPU engine (which backs
 requests with per-request arrays but books blocks through the same pool, so
 LPRS sees identical memory features in both modes).
+
+Beyond flat accounting, the pool implements the full KV lifecycle:
+
+* **Refcounted blocks** — a physical block may back several requests at once
+  (prefix sharing); it returns to circulation only when the last reference
+  drops.
+* **Hash-based prefix cache** — full *prompt* blocks are content-addressed by
+  a chained hash ``h_i = H(h_{i-1}, tokens_i)`` (so a block's identity pins
+  the entire prefix before it, not just its own tokens).  When the last
+  reference to a hashed block drops the block is parked in an LRU of
+  *evictable* cached blocks instead of the free list: a later request whose
+  prompt shares the block-aligned prefix re-acquires it with
+  ``match_prefix`` and skips the corresponding prefill compute.
+* **Per-tenant quotas** — each tenant may be capped to a block budget;
+  allocation and prefix acquisition charge the requesting tenant, release
+  refunds it.  A shared physical block is charged to every request holding a
+  reference (conservative logical accounting: quotas bound what a tenant can
+  *pin*, not a fair-division of physical residency).
+* **Payload store** — the real engine parks the actual K/V arrays of sealed
+  blocks host-side so a prefix hit restores numerically identical KV state
+  into a fresh slot (causal attention: prefix KV depends only on the prefix).
+
+Invariant (``check_invariants``):  ``free + evictable + referenced ==
+n_blocks``; refcounts are never negative; every table entry references a
+live block; tenant charges sum to the table sizes.
 """
 from __future__ import annotations
 
 import math
+from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
+
+
+class KVQuotaExceeded(MemoryError):
+    """Allocation refused because the tenant's KV block quota is exhausted
+    (the pool itself may still have free blocks)."""
 
 
 @dataclass
@@ -20,6 +51,35 @@ class KVPoolConfig:
     bytes_per_token: int = 0          # 2 * L * H_kv * hd * dtype_bytes
     hbm_capacity_mb: float = 16 * 1024.0
     param_mb: float = 0.0
+    enable_prefix_cache: bool = False
+
+
+@dataclass
+class KVPoolStats:
+    lookups: int = 0                  # match_prefix calls
+    hit_blocks: int = 0               # cached blocks re-acquired
+    miss_blocks: int = 0              # full prompt blocks that missed
+    hit_tokens: int = 0               # prefill tokens skipped via the cache
+    evictions: int = 0                # cached blocks reclaimed for new allocs
+    sealed_blocks: int = 0            # blocks that became cache-addressable
+
+    @property
+    def hit_rate(self) -> float:
+        """Block-level cache hit rate over all prefix lookups."""
+        total = self.hit_blocks + self.miss_blocks
+        return self.hit_blocks / total if total else 0.0
+
+
+@dataclass
+class _Registration:
+    """Submit-time metadata the prefix cache needs for one request."""
+
+    tenant: str = "default"
+    prompt_len: int = 0
+    block_hashes: List[int] = field(default_factory=list)  # full prompt blocks
+    sealed: int = 0                   # prompt blocks already content-addressed
+    newly_sealed: List[Tuple[int, int, int, int]] = field(default_factory=list)
+    # (block_index, block_id, start_token, end_token) since last take_newly_sealed
 
 
 class KVBlockPool:
@@ -28,6 +88,135 @@ class KVBlockPool:
         self.free_blocks: List[int] = list(range(cfg.n_blocks - 1, -1, -1))
         self.tables: Dict[int, List[int]] = {}     # req_id -> block ids
         self.lens: Dict[int, int] = {}             # req_id -> tokens stored
+        # block metadata (only for non-free blocks)
+        self._ref: Dict[int, int] = {}             # block_id -> refcount
+        self._hash_of: Dict[int, int] = {}         # block_id -> content hash
+        self._payload: Dict[int, object] = {}      # block_id -> engine KV arrays
+        # prefix cache: content hash -> block id; LRU over refcount-0 members
+        self._cache_index: Dict[int, int] = {}
+        self._evictable: "OrderedDict[int, int]" = OrderedDict()  # block_id -> hash
+        # per-request registration + per-tenant accounting
+        self._reg: Dict[int, _Registration] = {}
+        self._tenant_used: Dict[str, int] = {}     # tenant -> charged blocks
+        self._tenant_quota: Dict[str, int] = {}    # tenant -> max blocks (absent = inf)
+        self.stats = KVPoolStats()
+
+    # -- registration / prefix cache ------------------------------------------
+    @staticmethod
+    def _chain_hashes(tokens, block_size: int) -> List[int]:
+        """Chained content hashes over the full (block-aligned) prompt blocks."""
+        hashes: List[int] = []
+        prev = 0
+        for i in range(len(tokens) // block_size):
+            prev = hash((prev, tuple(tokens[i * block_size : (i + 1) * block_size])))
+            hashes.append(prev)
+        return hashes
+
+    def register_request(
+        self,
+        req_id: int,
+        *,
+        tenant: str = "default",
+        prompt_tokens=None,
+        prompt_len: int = 0,
+    ) -> None:
+        """Record submit-time metadata (tenant for quota charging; prompt
+        block hashes for the prefix cache).  Idempotent per request."""
+        reg = self._reg.get(req_id)
+        if reg is None:
+            reg = _Registration(tenant=tenant, prompt_len=prompt_len)
+            self._reg[req_id] = reg
+        reg.tenant = tenant
+        if prompt_len:
+            reg.prompt_len = prompt_len
+        if self.cfg.enable_prefix_cache and prompt_tokens is not None:
+            reg.prompt_len = reg.prompt_len or len(prompt_tokens)
+            reg.block_hashes = self._chain_hashes(prompt_tokens, self.cfg.block_size)
+
+    def tenant_of(self, req_id: int) -> str:
+        reg = self._reg.get(req_id)
+        return reg.tenant if reg is not None else "default"
+
+    def match_prefix(self, req_id: int, *, require_payload: bool = False) -> int:
+        """Acquire the longest cached chain of the request's prompt blocks.
+
+        Matched blocks are refcounted into the request's table and the
+        request's stored length jumps past them — the caller then skips the
+        corresponding prefill compute.  Always leaves at least one token of
+        prompt uncached (the final-token logits must be computed to start
+        decoding).  Returns the number of prompt tokens covered.
+        """
+        reg = self._reg.get(req_id)
+        if reg is None or not reg.block_hashes or self.tables.get(req_id):
+            return 0
+        self.stats.lookups += 1
+        bs = self.cfg.block_size
+        matched: List[int] = []
+        for h in reg.block_hashes:
+            bid = self._cache_index.get(h)
+            if bid is None or (require_payload and bid not in self._payload):
+                break
+            matched.append(bid)
+        # never cover the whole prompt: the last token's logits start decode
+        while matched and len(matched) * bs >= reg.prompt_len:
+            matched.pop()
+        # quota: matched blocks pin memory for this tenant too
+        quota = self._tenant_quota.get(reg.tenant)
+        if quota is not None:
+            headroom = max(0, quota - self._tenant_used.get(reg.tenant, 0))
+            matched = matched[:headroom]
+        self.stats.hit_blocks += len(matched)
+        self.stats.miss_blocks += len(reg.block_hashes) - len(matched)
+        if not matched:
+            return 0
+        for bid in matched:
+            self._ref[bid] = self._ref.get(bid, 0) + 1
+            self._evictable.pop(bid, None)      # referenced again: not evictable
+        self.tables[req_id] = list(matched)
+        self.lens[req_id] = len(matched) * bs
+        reg.sealed = len(matched)               # shared blocks are already sealed
+        self._tenant_used[reg.tenant] = (
+            self._tenant_used.get(reg.tenant, 0) + len(matched)
+        )
+        self.stats.hit_tokens += len(matched) * bs
+        return len(matched) * bs
+
+    def submit_request(self, req, *, require_payload: bool = False) -> int:
+        """Admission hook: register + prefix-match one ``Request``; on a hit
+        the request's ``prefill_done`` jumps past the cached tokens so the
+        scheduler only sees the residual prefill work."""
+        self.register_request(
+            req.req_id,
+            tenant=req.tenant,
+            prompt_tokens=req.prompt_tokens,
+            prompt_len=req.prompt_len,
+        )
+        matched = self.match_prefix(req.req_id, require_payload=require_payload)
+        if matched > 0:
+            req.prefill_done = matched
+        return matched
+
+    # -- quotas ---------------------------------------------------------------
+    def set_tenant_quota(self, tenant: str, max_blocks: Optional[int]) -> None:
+        if max_blocks is None:
+            self._tenant_quota.pop(tenant, None)
+        else:
+            self._tenant_quota[tenant] = int(max_blocks)
+
+    def tenant_quota(self, tenant: str) -> Optional[int]:
+        return self._tenant_quota.get(tenant)
+
+    def tenant_used_blocks(self, tenant: str) -> int:
+        return self._tenant_used.get(tenant, 0)
+
+    def blocks_by_tenant(self) -> Dict[str, int]:
+        return {t: n for t, n in self._tenant_used.items() if n > 0}
+
+    def quota_headroom_blocks(self, tenant: str) -> float:
+        quota = self._tenant_quota.get(tenant)
+        if quota is None:
+            return math.inf
+        return max(0, quota - self._tenant_used.get(tenant, 0))
 
     # -- alloc/free -----------------------------------------------------------
     def blocks_needed(self, req_id: int, new_tokens: int) -> int:
@@ -36,29 +225,168 @@ class KVBlockPool:
         need = math.ceil((cur + new_tokens) / self.cfg.block_size)
         return max(0, need - have)
 
-    def can_allocate(self, req_id: int, new_tokens: int) -> bool:
-        return self.blocks_needed(req_id, new_tokens) <= len(self.free_blocks)
+    def allocatable_blocks(self) -> int:
+        """Free blocks plus cached blocks nobody references (reclaimable)."""
+        return len(self.free_blocks) + len(self._evictable)
 
-    def allocate(self, req_id: int, new_tokens: int) -> List[int]:
+    def can_allocate(self, req_id: int, new_tokens: int,
+                     tenant: Optional[str] = None) -> bool:
         need = self.blocks_needed(req_id, new_tokens)
-        if need > len(self.free_blocks):
+        if need > self.allocatable_blocks():
+            return False
+        return need <= self.quota_headroom_blocks(tenant or self.tenant_of(req_id))
+
+    def quota_blocked(self, req_id: int, new_tokens: int,
+                      tenant: Optional[str] = None) -> bool:
+        """True when the tenant quota (not pool space) is the binding limit."""
+        need = self.blocks_needed(req_id, new_tokens)
+        return need > self.quota_headroom_blocks(tenant or self.tenant_of(req_id))
+
+    def max_new_tokens(self, req_id: int, tenant: Optional[str] = None) -> int:
+        """How many new tokens this request could allocate right now, given
+        pool space, reclaimable cache, and its tenant's quota headroom."""
+        bs = self.cfg.block_size
+        cur = self.lens.get(req_id, 0)
+        have = len(self.tables.get(req_id, []))
+        slack = have * bs - cur
+        headroom = min(
+            self.allocatable_blocks(),
+            self.quota_headroom_blocks(tenant or self.tenant_of(req_id)),
+        )
+        return int(slack + headroom * bs)
+
+    def _evict_one(self) -> None:
+        bid, h = self._evictable.popitem(last=False)    # LRU
+        self._cache_index.pop(h, None)
+        self._hash_of.pop(bid, None)
+        self._payload.pop(bid, None)
+        self._ref.pop(bid, None)
+        self.free_blocks.append(bid)
+        self.stats.evictions += 1
+
+    def _pop_block(self) -> int:
+        if not self.free_blocks:
+            self._evict_one()
+        return self.free_blocks.pop()
+
+    def allocate(self, req_id: int, new_tokens: int,
+                 tenant: Optional[str] = None) -> List[int]:
+        t = tenant if tenant is not None else self.tenant_of(req_id)
+        if req_id not in self._reg:
+            self._reg[req_id] = _Registration(tenant=t)
+        need = self.blocks_needed(req_id, new_tokens)
+        if need > self.allocatable_blocks():
             raise MemoryError(
-                f"KV pool exhausted: need {need} blocks, have {len(self.free_blocks)}"
+                f"KV pool exhausted: need {need} blocks, have "
+                f"{self.allocatable_blocks()} (free {len(self.free_blocks)} "
+                f"+ evictable {len(self._evictable)})"
             )
-        got = [self.free_blocks.pop() for _ in range(need)]
+        if need > self.quota_headroom_blocks(t):
+            raise KVQuotaExceeded(
+                f"tenant {t!r} KV quota exhausted: need {need} blocks, quota "
+                f"{self._tenant_quota.get(t)}, used {self._tenant_used.get(t, 0)}"
+            )
+        got = [self._pop_block() for _ in range(need)]
+        for bid in got:
+            self._ref[bid] = 1
         self.tables.setdefault(req_id, []).extend(got)
         self.lens[req_id] = self.lens.get(req_id, 0) + new_tokens
+        if need:
+            self._tenant_used[t] = self._tenant_used.get(t, 0) + need
+        self._seal(req_id)
         return got
 
-    def release(self, req_id: int) -> None:
+    def _seal(self, req_id: int) -> None:
+        """Content-address prompt blocks that just became full, making them
+        matchable by future requests (while still referenced)."""
+        if not self.cfg.enable_prefix_cache:
+            return
+        reg = self._reg.get(req_id)
+        if reg is None or not reg.block_hashes:
+            return
+        bs = self.cfg.block_size
+        table = self.tables.get(req_id, [])
+        filled = self.lens.get(req_id, 0)
+        n_sealable = min(len(reg.block_hashes), filled // bs, len(table))
+        for i in range(reg.sealed, n_sealable):
+            bid, h = table[i], reg.block_hashes[i]
+            if h in self._cache_index:
+                # identical content already addressable (shared or duplicate):
+                # leave the index pointing at the first copy
+                reg.sealed = i + 1
+                continue
+            self._cache_index[h] = bid
+            self._hash_of[bid] = h
+            reg.sealed = i + 1
+            reg.newly_sealed.append((i, bid, i * bs, (i + 1) * bs))
+            self.stats.sealed_blocks += 1
+
+    def take_newly_sealed(self, req_id: int) -> List[Tuple[int, int, int, int]]:
+        """Drain (block_index, block_id, start_tok, end_tok) records for
+        blocks sealed since the last call — the engine captures their KV
+        payloads from its slot cache."""
+        reg = self._reg.get(req_id)
+        if reg is None or not reg.newly_sealed:
+            return []
+        out, reg.newly_sealed = reg.newly_sealed, []
+        return out
+
+    # -- payloads (real-engine KV reuse) ---------------------------------------
+    def store_payload(self, block_id: int, payload: object) -> None:
+        if block_id in self._hash_of:      # only cache-addressable blocks
+            self._payload[block_id] = payload
+
+    def payload(self, block_id: int) -> Optional[object]:
+        return self._payload.get(block_id)
+
+    def release(self, req_id: int, *, keep_registration: bool = False) -> None:
+        """Drop all of a request's references.  Idempotent.  Cached (hashed)
+        blocks whose refcount reaches zero are parked in the eviction LRU;
+        unhashed blocks return to the free list.  ``keep_registration=True``
+        (preemption) retains tenant + prompt hashes for the recompute pass."""
         blocks = self.tables.pop(req_id, [])
-        self.free_blocks.extend(blocks)
         self.lens.pop(req_id, None)
+        reg = self._reg.get(req_id)
+        if blocks and reg is not None:
+            used = self._tenant_used.get(reg.tenant, 0) - len(blocks)
+            if used > 0:
+                self._tenant_used[reg.tenant] = used
+            else:
+                self._tenant_used.pop(reg.tenant, None)
+        for bid in blocks:
+            ref = self._ref.get(bid, 0) - 1
+            assert ref >= 0, f"double-free of block {bid}"
+            if ref > 0:
+                self._ref[bid] = ref
+                continue
+            h = self._hash_of.get(bid)
+            if h is not None and self.cfg.enable_prefix_cache:
+                self._ref[bid] = 0
+                self._evictable[bid] = h       # most-recently used end
+                self._evictable.move_to_end(bid)
+            else:
+                self._ref.pop(bid, None)
+                self._hash_of.pop(bid, None)
+                self._payload.pop(bid, None)
+                self.free_blocks.append(bid)
+        if reg is not None:
+            if keep_registration:
+                reg.sealed = 0
+                reg.newly_sealed = []
+            else:
+                self._reg.pop(req_id, None)
 
     # -- accounting (LPRS features) --------------------------------------------
     @property
     def used_blocks(self) -> int:
-        return self.cfg.n_blocks - len(self.free_blocks)
+        """Blocks pinned by live references (evictable cache not counted:
+        it is reclaimable on demand, like the free list)."""
+        return self.cfg.n_blocks - len(self.free_blocks) - len(self._evictable)
+
+    @property
+    def cached_blocks(self) -> int:
+        """Refcount-0 blocks retained only by the prefix cache."""
+        return len(self._evictable)
 
     @property
     def used_mb(self) -> float:
@@ -66,7 +394,7 @@ class KVBlockPool:
 
     @property
     def free_mb(self) -> float:
-        return len(self.free_blocks) * self.cfg.block_size * self.cfg.bytes_per_token / 2**20
+        return self.allocatable_blocks() * self.cfg.block_size * self.cfg.bytes_per_token / 2**20
 
     @property
     def allocated_mb(self) -> float:
@@ -79,9 +407,37 @@ class KVBlockPool:
     def utilization(self) -> float:
         return self.used_blocks / max(self.cfg.n_blocks, 1)
 
+    # -- invariants (property tests) -------------------------------------------
+    def check_invariants(self) -> None:
+        referenced = {bid for t in self.tables.values() for bid in t}
+        assert referenced.isdisjoint(self.free_blocks), "table entry on free list"
+        assert referenced.isdisjoint(self._evictable), "table entry marked evictable"
+        n_accounted = len(self.free_blocks) + len(self._evictable) + len(referenced)
+        assert n_accounted == self.cfg.n_blocks, (
+            f"block conservation violated: free {len(self.free_blocks)} + "
+            f"evictable {len(self._evictable)} + referenced {len(referenced)} "
+            f"!= {self.cfg.n_blocks}"
+        )
+        for bid, ref in self._ref.items():
+            assert ref >= 0, f"negative refcount on block {bid}"
+        for bid in referenced:
+            holders = sum(1 for t in self.tables.values() if bid in t)
+            assert self._ref.get(bid, 0) == holders, (
+                f"block {bid}: refcount {self._ref.get(bid, 0)} != holders {holders}"
+            )
+        by_tenant: Dict[str, int] = {}
+        for req_id, table in self.tables.items():
+            t = self.tenant_of(req_id)
+            by_tenant[t] = by_tenant.get(t, 0) + len(table)
+        for t, n in by_tenant.items():
+            assert self._tenant_used.get(t, 0) == n, (
+                f"tenant {t!r} charge {self._tenant_used.get(t, 0)} != held {n}"
+            )
+
 
 def pool_for_model(cfg_model, *, n_blocks: int = 8192, block_size: int = 16,
-                   hbm_mb: float = 16 * 1024.0) -> KVBlockPool:
+                   hbm_mb: float = 16 * 1024.0,
+                   enable_prefix_cache: bool = False) -> KVBlockPool:
     """Size bytes_per_token from a ModelConfig (attention layers only)."""
     hd = cfg_model.resolved_head_dim
     if cfg_model.attn_every:
@@ -99,5 +455,6 @@ def pool_for_model(cfg_model, *, n_blocks: int = 8192, block_size: int = 16,
             bytes_per_token=max(bpt, 2),
             hbm_capacity_mb=hbm_mb,
             param_mb=param_mb,
+            enable_prefix_cache=enable_prefix_cache,
         )
     )

@@ -86,6 +86,62 @@ def cdf_points(xs: Sequence[float], n: int = 100) -> List[tuple]:
 
 
 # ---------------------------------------------------------------------------
+# KV memory-subsystem metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MemoryReport:
+    """One serving run's KV lifecycle summary: prefix-cache effectiveness,
+    eviction/preemption pressure, and per-tenant block occupancy."""
+
+    cache_lookups: int
+    cache_hit_blocks: int
+    cache_miss_blocks: int
+    cache_hit_rate: float            # block-level, over all prefix lookups
+    cache_hit_tokens: int            # prefill tokens skipped via the cache
+    evictions: int                   # cached blocks reclaimed for new allocs
+    preemptions: int                 # requests evicted for KV pressure
+    kv_deferrals: int                # chunks shrunk/deferred for lack of blocks
+    used_blocks: int                 # referenced blocks at end of run
+    cached_blocks: int               # refcount-0 blocks held by the cache
+    free_blocks: int
+    utilization: float
+    blocks_by_tenant: Dict[str, int]
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "cache_hit_rate": self.cache_hit_rate,
+            "cache_hit_tokens": float(self.cache_hit_tokens),
+            "evictions": float(self.evictions),
+            "preemptions": float(self.preemptions),
+            "kv_deferrals": float(self.kv_deferrals),
+            "kv_utilization": self.utilization,
+        }
+
+
+def summarize_memory(pool, scheduler_stats=None) -> MemoryReport:
+    """Build a MemoryReport from a ``KVBlockPool`` (and optionally the
+    scheduler's stats, which own the preemption/deferral counters)."""
+    s = pool.stats
+    return MemoryReport(
+        cache_lookups=s.lookups,
+        cache_hit_blocks=s.hit_blocks,
+        cache_miss_blocks=s.miss_blocks,
+        cache_hit_rate=s.hit_rate,
+        cache_hit_tokens=s.hit_tokens,
+        evictions=s.evictions,
+        preemptions=getattr(scheduler_stats, "preemptions", 0),
+        kv_deferrals=getattr(scheduler_stats, "kv_deferrals", 0),
+        used_blocks=pool.used_blocks,
+        cached_blocks=pool.cached_blocks,
+        free_blocks=len(pool.free_blocks),
+        utilization=pool.utilization(),
+        blocks_by_tenant=pool.blocks_by_tenant(),
+    )
+
+
+# ---------------------------------------------------------------------------
 # multi-tenant fairness metrics
 # ---------------------------------------------------------------------------
 
@@ -132,8 +188,10 @@ class FairnessReport:
 
 
 def request_service_tokens(req: Request) -> float:
-    """Tokens the engine actually delivered to one request so far."""
-    return float(req.prefill_done + req.generated)
+    """Tokens the engine actually delivered to one request so far.
+    ``context_len`` nets out tokens a preemption folded into the prompt, so
+    recompute work is never double-counted as delivered service."""
+    return float(req.context_len)
 
 
 def summarize_by_tenant(

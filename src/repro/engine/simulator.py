@@ -7,11 +7,20 @@ Aging/LPRS/APC gains are queueing/ordering effects, with model execution time
 unchanged.
 
 Event loop per round:
-  1. admit arrivals with arrival_time <= now (KV admission-checked),
-  2. scheduler.schedule(now) -> batch,
+  1. admit arrivals with arrival_time <= now (prefix-cache matched at submit:
+     cached prompt blocks are acquired and the request's remaining prefill
+     shrinks before it ever enters the queue),
+  2. scheduler.schedule(now) -> batch (the scheduler books KV blocks
+     chunk-granularly and preempts under pressure),
   3. advance clock by the cost model's batch latency (or to the next arrival
      when idle),
-  4. scheduler.on_batch_done(batch, now); release finished requests' KV.
+  4. scheduler.on_batch_done(batch, now) — also releases finished requests'
+     KV references back to the pool/prefix cache.
+
+``legacy_eager_kv=True`` restores the pre-refactor behavior (whole-prompt
+allocation at admission, head-of-line blocking when the pool is full, decode
+tokens silently unbooked under pressure) for A/B comparison in
+``benchmarks/bench_prefix_cache.py``.
 
 Also emits (features, latency) training samples for the LPRS predictor — the
 paper's offline profiling pipeline (§3.2.1 step 3).
@@ -28,7 +37,7 @@ from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch, SchedulerConfig
 from repro.engine.costmodel import CostModel
 from repro.engine.kv_cache import KVBlockPool
-from repro.engine.metrics import LatencyReport, summarize
+from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
 
 
 @dataclass
@@ -39,6 +48,7 @@ class SimResult:
     sim_time_s: float
     samples: Optional[Tuple[np.ndarray, np.ndarray]] = None  # (features, latency_ms)
     scheduler_stats: Optional[object] = None
+    memory: Optional[MemoryReport] = None     # KV pool lifecycle summary
 
 
 class ServingSimulator:
@@ -52,6 +62,7 @@ class ServingSimulator:
         idle_step_s: float = 0.001,
         max_rounds: int = 2_000_000,
         horizon_s: Optional[float] = None,
+        legacy_eager_kv: bool = False,
     ):
         self.sched = scheduler
         self.cost = cost_model
@@ -60,6 +71,11 @@ class ServingSimulator:
         self.idle_step_s = idle_step_s
         self.max_rounds = max_rounds
         self.horizon_s = horizon_s    # stop mid-backlog at this sim time
+        self.legacy_eager_kv = legacy_eager_kv
+        if kv_pool is not None:
+            # the scheduler owns block booking (unless running the legacy
+            # eager-admission baseline, where the pool is features-only)
+            scheduler.attach_kv_pool(kv_pool, booking=not legacy_eager_kv)
 
     def run(self, requests: List[Request]) -> SimResult:
         pending = sorted(requests, key=lambda r: r.arrival_time)
@@ -74,10 +90,18 @@ class ServingSimulator:
             while next_arrival < len(pending) and pending[next_arrival].arrival_time <= now:
                 req = pending[next_arrival]
                 if self.kv_pool is not None:
-                    # admission control: prompt + headroom must fit the pool
-                    if not self.kv_pool.can_allocate(req.req_id, req.prompt_len):
-                        break
-                    self.kv_pool.allocate(req.req_id, req.prompt_len)
+                    if self.legacy_eager_kv:
+                        # legacy admission: the ENTIRE prompt must fit the
+                        # pool up front or nobody behind this request enters
+                        if not self.kv_pool.can_allocate(req.req_id, req.prompt_len,
+                                                         tenant=req.tenant):
+                            break
+                        self.kv_pool.allocate(req.req_id, req.prompt_len,
+                                              tenant=req.tenant)
+                    else:
+                        # register tenant + prompt hashes; a prefix-cache hit
+                        # skips the matched prefill work at submit
+                        self.kv_pool.submit_request(req)
                 if not self.sched.submit(req) and self.kv_pool is not None:
                     self.kv_pool.release(req.req_id)   # admission-rejected
                 next_arrival += 1
@@ -106,15 +130,16 @@ class ServingSimulator:
             now += latency_ms / 1000.0
             rounds += 1
 
-            # decode tokens grow the KV footprint by one token per request
-            if self.kv_pool is not None:
+            if self.kv_pool is not None and self.legacy_eager_kv:
+                # legacy decode accounting (the bug the refactor fixes: a full
+                # pool silently generates tokens with no blocks booked)
                 for r in batch.decode_reqs:
                     if self.kv_pool.can_allocate(r.req_id, 1):
-                        self.kv_pool.allocate(r.req_id, 1)
+                        self.kv_pool.allocate(r.req_id, 1, tenant=r.tenant)
 
             self.sched.on_batch_done(batch, now)
 
-            if self.kv_pool is not None:
+            if self.kv_pool is not None and self.legacy_eager_kv:
                 for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
                     if r.state == RequestState.FINISHED:
                         self.kv_pool.release(r.req_id)
@@ -129,6 +154,10 @@ class ServingSimulator:
             sim_time_s=now,
             samples=samples,
             scheduler_stats=self.sched.stats,
+            memory=(
+                summarize_memory(self.kv_pool, self.sched.stats)
+                if self.kv_pool is not None else None
+            ),
         )
 
 
@@ -141,14 +170,19 @@ def run_policy(
     kv_pool: Optional[KVBlockPool] = None,
     collect_samples: bool = False,
     horizon_s: Optional[float] = None,
+    legacy_eager_kv: bool = False,
 ) -> SimResult:
     """Convenience wrapper: fresh scheduler + simulator over a request list.
 
     NOTE: Request objects are stateful; pass freshly-generated requests.
     """
-    sched = ChunkedPrefillScheduler(scheduler_cfg, predictor=predictor, kv_pool=kv_pool)
+    sched = ChunkedPrefillScheduler(
+        scheduler_cfg, predictor=predictor, kv_pool=kv_pool,
+        kv_booking=not legacy_eager_kv,
+    )
     sim = ServingSimulator(
         sched, cost_model or CostModel(), kv_pool=kv_pool,
         collect_samples=collect_samples, horizon_s=horizon_s,
+        legacy_eager_kv=legacy_eager_kv,
     )
     return sim.run(requests)

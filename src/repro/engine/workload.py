@@ -112,6 +112,44 @@ def uniform_arrivals(
     return reqs
 
 
+def shared_prefix(
+    n_requests: int = 200,
+    *,
+    n_prefixes: int = 4,
+    prefix_len: int = 128,
+    suffix_range=(16, 64),
+    max_new_tokens: int = 32,
+    inter_arrival_s: float = 0.05,
+    vocab_size: int = 32000,
+    tenants: Optional[List[str]] = None,
+    seed: int = 0,
+) -> List[Request]:
+    """Prefix-cache workload: every prompt is one of ``n_prefixes`` shared
+    system prompts (``prefix_len`` tokens) followed by a unique user suffix —
+    the RAG/chat-template pattern prefix caching exists for.  Requests carry
+    real ``prompt_tokens`` so the block-hash prefix cache works in both the
+    simulator and the engine; with caching on, every repeat of a prefix skips
+    ``block_size``-aligned prefill work."""
+    rng = np.random.default_rng(seed)
+    prefixes = [
+        rng.integers(1, vocab_size, prefix_len).tolist() for _ in range(n_prefixes)
+    ]
+    reqs: List[Request] = []
+    for i in range(n_requests):
+        prefix = prefixes[int(rng.integers(0, n_prefixes))]
+        suffix_len = int(rng.integers(suffix_range[0], suffix_range[1] + 1))
+        tokens = prefix + rng.integers(1, vocab_size, suffix_len).tolist()
+        reqs.append(Request(
+            prompt_len=len(tokens),
+            max_new_tokens=int(rng.integers(max(1, max_new_tokens // 2),
+                                            max_new_tokens + 1)),
+            arrival_time=i * inter_arrival_s,
+            prompt_tokens=tokens,
+            tenant=tenants[i % len(tenants)] if tenants else "default",
+        ))
+    return reqs
+
+
 @dataclass(frozen=True)
 class TenantTraffic:
     """One tenant's arrival process for ``multi_tenant``.

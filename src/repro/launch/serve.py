@@ -66,6 +66,11 @@ def main(argv=None):
     ap.add_argument("--apc", action="store_true")
     ap.add_argument("--pallas", action="store_true",
                     help="run the Pallas kernels (interpret mode on CPU)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable the hash-based KV prefix cache (block-aligned "
+                         "prompt reuse; hits skip the matched prefill compute)")
+    ap.add_argument("--kv-blocks", type=int, default=2048,
+                    help="KV pool size in blocks")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
@@ -99,20 +104,27 @@ def main(argv=None):
         max_context=256, max_new_tokens=48, seed=1,
     ))
     attach_prompt_tokens(reqs, model_cfg.vocab_size, seed=1)
-    kv_pool = pool_for_model(model_cfg, n_blocks=2048)
+    kv_pool = pool_for_model(model_cfg, n_blocks=args.kv_blocks,
+                             enable_prefix_cache=args.prefix_cache)
     res = serve(reqs, sched, engine, kv_pool=kv_pool, collect_samples=False)
 
     row = res.report.row()
     print(f"\n=== {args.arch} | policy={args.policy} lprs={args.lprs} "
-          f"apc={args.apc} pallas={args.pallas} ===")
+          f"apc={args.apc} pallas={args.pallas} prefix_cache={args.prefix_cache} ===")
     print(f"finished {res.report.n_finished}/{res.report.n_total} "
           f"in {res.wall_s:.2f}s  ({res.rounds} rounds)")
     for k, v in row.items():
         print(f"  {k:16s} {v*1e3 if 'e2e' in k or 'ttft' in k or 'prefill' in k or 'tpot' in k else v:10.2f}"
               + (" ms" if any(t in k for t in ("e2e", "ttft", "prefill", "tpot")) else ""))
+    mem = res.memory
+    if mem is not None:
+        print(f"  kv: hit_rate={mem.cache_hit_rate:.2%} "
+              f"hit_tokens={mem.cache_hit_tokens} evictions={mem.evictions} "
+              f"preemptions={mem.preemptions} cached_blocks={mem.cached_blocks}")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({"report": row, "rounds": res.rounds, "wall_s": res.wall_s}, f)
+            json.dump({"report": row, "rounds": res.rounds, "wall_s": res.wall_s,
+                       "memory": mem.row() if mem is not None else None}, f)
 
 
 if __name__ == "__main__":

@@ -66,13 +66,25 @@ class FairnessState:
         return [t for t, ids in self._decoding.items() if ids]
 
     # -- scheduler hooks -------------------------------------------------------
-    def admit(self, req: Request) -> bool:
+    def admit(self, req: Request) -> AdmissionDecision:
+        """Token-bucket assessment.  Returns the full decision: the scheduler
+        routes ``delayed`` requests into the fair queue's holding pen and
+        drops rejected ones."""
         if self.admission is None:
-            return True
+            return AdmissionDecision(tenant=req.tenant, admitted=True,
+                                     penalized=False)
         decision = self.admission.assess(req)
         if not decision.admitted:
             self.rejected.append(req)
-        return decision.admitted
+        return decision
+
+    def on_preempt(self, req: Request) -> None:
+        """A decoding request was evicted under KV pressure: it re-enters the
+        prefill queue, so it must stop counting as decode-active (the queue
+        re-``add`` restored its prefill ownership already)."""
+        ids = self._decoding.get(req.tenant)
+        if ids is not None:
+            ids.discard(req.req_id)
 
     def on_round(self, now: float) -> None:
         self.queue.set_now(now)

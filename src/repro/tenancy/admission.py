@@ -10,6 +10,10 @@ Two-stage design (cf. the llmserve fairshare exemplar):
          tenants only when no unpenalized tenant has work.  Non-blocking,
          work-conserving, and self-healing once the bucket refills.
        * ``reject`` — the request is refused outright (hard quota).
+       * ``queue`` — the request is admitted but DELAYED: the bucket is
+         charged into debt and the request only becomes schedulable at the
+         time the debt clears, so a tenant's queued work drains at exactly
+         its contracted token rate (no loss, no priority inversion).
   2. The penalty expires on its own (``penalty_window_s`` after the last
      violation); ``is_penalized(tenant, now)`` is the query the fair queue
      uses at pop time.
@@ -49,6 +53,17 @@ class TokenBucket:
         self.tokens -= take
         return cost - take
 
+    def consume_debt(self, cost: float, now: float) -> float:
+        """Charge ``cost`` unconditionally (the fill may go negative) and
+        return the time the bucket is back at zero — the earliest moment the
+        charged work is within budget.  Successive debts stack, so queued
+        requests drain at exactly the contracted rate."""
+        self.refill(now)
+        self.tokens -= cost
+        if self.tokens >= 0:
+            return now
+        return now + (-self.tokens) / self.rate
+
 
 @dataclass(frozen=True)
 class AdmissionDecision:
@@ -57,6 +72,8 @@ class AdmissionDecision:
     penalized: bool
     deficit: float = 0.0
     penalty_expires_at: float = 0.0
+    delayed: bool = False       # queue policy: hold until ready_at
+    ready_at: float = 0.0
 
 
 @dataclass
@@ -65,6 +82,7 @@ class AdmissionStats:
     admitted: int = 0
     rejected: int = 0
     penalties: int = 0          # violations that opened/extended a window
+    queued: int = 0             # requests delayed until bucket refill
 
 
 class AdmissionController:
@@ -75,7 +93,7 @@ class AdmissionController:
         policy: str = "deprioritize",
         penalty_window_s: float = 2.0,
     ):
-        if policy not in ("deprioritize", "reject"):
+        if policy not in ("deprioritize", "reject", "queue"):
             raise ValueError(f"unknown admission policy {policy!r}")
         self.registry = registry
         self.policy = policy
@@ -112,6 +130,21 @@ class AdmissionController:
             return AdmissionDecision(tenant=req.tenant, admitted=True, penalized=False)
 
         bucket = self._bucket(spec, now)
+        if self.policy == "queue":
+            # delay-until-refill: charge the bucket into debt; the request is
+            # admitted but only becomes schedulable once the debt clears
+            ready_at = bucket.consume_debt(self.request_cost(req), now)
+            self.stats.admitted += 1
+            if ready_at <= now:
+                return AdmissionDecision(
+                    tenant=req.tenant, admitted=True, penalized=False
+                )
+            self.stats.queued += 1
+            return AdmissionDecision(
+                tenant=req.tenant, admitted=True, penalized=False,
+                delayed=True, ready_at=ready_at,
+            )
+
         deficit = bucket.consume(self.request_cost(req), now)
         if deficit <= 0:
             self.stats.admitted += 1

@@ -23,7 +23,8 @@ re-``add``/``update``) never re-triggers it.
 """
 from __future__ import annotations
 
-from typing import Callable, Dict, Iterable, List, Optional
+import heapq
+from typing import Callable, Dict, Iterable, List, Optional, Tuple
 
 from repro.core.policies import PrefillQueue
 from repro.core.request import Request
@@ -47,11 +48,43 @@ class FairPrefillQueue:
         self._queues: Dict[str, PrefillQueue] = {}
         self._owned: Dict[int, str] = {}        # req_id -> tenant (queued or mid-prefill)
         self._inflight: Dict[str, int] = {}     # tenant -> owned request count
+        # ``queue`` admission policy holding pen: (ready_at, req_id, req)
+        self._delayed: List[Tuple[float, int, Request]] = []
         self.now = 0.0                          # scheduler clock (penalty expiry)
 
     # -- clock ----------------------------------------------------------------
     def set_now(self, now: float) -> None:
         self.now = now
+        while self._delayed and self._delayed[0][0] <= now:
+            _, _, req = heapq.heappop(self._delayed)
+            self._subqueue(req.tenant).add(req)
+
+    # -- delayed admission (queue policy) --------------------------------------
+    def add_delayed(self, req: Request, ready_at: float) -> None:
+        """Park an over-budget request until its tenant's bucket refills.
+        Ownership starts immediately (the tenant counts as active — rate-
+        limited work must not bank idle credit), but the request only enters
+        its subqueue once ``set_now`` passes ``ready_at``."""
+        if ready_at <= self.now:
+            self.add(req)
+            return
+        t = req.tenant
+        if req.req_id not in self._owned:
+            active = self._active_tenants()
+            if t not in active:
+                self.vtc.on_activate(t, active)
+            self._owned[req.req_id] = t
+            self._inflight[t] = self._inflight.get(t, 0) + 1
+        heapq.heappush(self._delayed, (ready_at, req.req_id, req))
+
+    def delayed_count(self) -> int:
+        return len(self._delayed)
+
+    def is_delayed(self, req: Request) -> bool:
+        return any(rid == req.req_id for _, rid, _ in self._delayed)
+
+    def next_ready_at(self) -> Optional[float]:
+        return self._delayed[0][0] if self._delayed else None
 
     # -- helpers --------------------------------------------------------------
     def _subqueue(self, tenant: str) -> PrefillQueue:
@@ -85,11 +118,18 @@ class FairPrefillQueue:
 
     # -- PrefillQueue interface ------------------------------------------------
     def __len__(self) -> int:
-        return sum(len(q) for q in self._queues.values())
+        # delayed requests count as queued work (has_work must stay true while
+        # the pen drains) even though pop() skips them until they are ready
+        return sum(len(q) for q in self._queues.values()) + len(self._delayed)
 
     def __contains__(self, req: Request) -> bool:
         t = self._owned.get(req.req_id)
-        return t is not None and req in self._queues[t]
+        if t is None:
+            return False
+        q = self._queues.get(t)     # absent if the tenant's first request is
+        return (q is not None and req in q) or any(  # still in the delay pen
+            r.req_id == req.req_id for _, _, r in self._delayed
+        )
 
     def add(self, req: Request) -> None:
         t = req.tenant
@@ -111,7 +151,10 @@ class FairPrefillQueue:
         t = self._owned.get(req.req_id)
         if t is None:
             return
-        self._queues[t].remove(req)
+        if t in self._queues:
+            self._queues[t].remove(req)
+        self._delayed = [e for e in self._delayed if e[1] != req.req_id]
+        heapq.heapify(self._delayed)
         self.retire(req)
 
     def retire(self, req: Request) -> None:
@@ -145,6 +188,7 @@ class FairPrefillQueue:
         out: List[Request] = []
         for q in self._queues.values():
             out.extend(q.requests())
+        out.extend(r for _, _, r in self._delayed)
         return out
 
     # -- introspection ---------------------------------------------------------

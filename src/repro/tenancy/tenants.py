@@ -27,12 +27,21 @@ class TenantSpec:
     rate_tokens_per_s: float = 0.0         # token-bucket rate; 0 = unlimited
     burst_tokens: float = 0.0              # bucket depth; 0 = 2x rate
     ttft_slo_s: Optional[float] = None     # reporting-only SLO target
+    # KV-cache quota as a fraction of the block pool this tenant may PIN at
+    # once (None = unlimited).  Enforced by KVBlockPool at allocation and at
+    # prefix-cache acquisition; over-quota chunks are deferred or trigger
+    # same-tenant preemption, never other tenants'.
+    kv_quota_frac: Optional[float] = None
 
     def __post_init__(self):
         if self.weight <= 0:
             raise ValueError(f"tenant {self.name!r}: weight must be > 0")
         if self.rate_tokens_per_s < 0 or self.burst_tokens < 0:
             raise ValueError(f"tenant {self.name!r}: negative rate/burst")
+        if self.kv_quota_frac is not None and not (0.0 < self.kv_quota_frac <= 1.0):
+            raise ValueError(
+                f"tenant {self.name!r}: kv_quota_frac must be in (0, 1]"
+            )
 
     @property
     def effective_burst(self) -> float:
@@ -57,13 +66,17 @@ class FairnessConfig:
     # (w_p, w_q) = (1, 2) default.
     prefill_charge_weight: float = 1.0
     decode_charge_weight: float = 2.0
-    # token-bucket admission control
+    # token-bucket admission control:
+    #   * deprioritize — admit, but serve the tenant last until the window ends
+    #   * reject       — refuse over-budget requests outright (hard quota)
+    #   * queue        — delay the request until the bucket refills (the
+    #                    ROADMAP's "delay instead of deprioritize/reject")
     admission: bool = True
-    admission_policy: str = "deprioritize"  # "deprioritize" | "reject"
+    admission_policy: str = "deprioritize"  # "deprioritize" | "reject" | "queue"
     penalty_window_s: float = 2.0           # deprioritization window length
 
     def __post_init__(self):
-        if self.admission_policy not in ("deprioritize", "reject"):
+        if self.admission_policy not in ("deprioritize", "reject", "queue"):
             raise ValueError(f"unknown admission_policy {self.admission_policy!r}")
         names = [t.name for t in self.tenants]
         if len(names) != len(set(names)):

@@ -1,0 +1,344 @@
+"""KV memory subsystem: refcounted block pool, prefix cache, quotas,
+chunk-granular booking, and preemption.
+
+Property tests (via the ``_hyp`` shim) drive random operation sequences and
+assert the pool's conservation invariants; deterministic tests pin the
+specific lifecycle behaviors the scheduler relies on.
+"""
+import numpy as np
+import pytest
+
+from _hyp import given, settings, st
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.kv_cache import (
+    KVBlockPool, KVPoolConfig, KVQuotaExceeded, pool_for_model,
+)
+from repro.engine.simulator import run_policy
+from repro.engine.workload import shared_prefix
+
+
+def mk_pool(n_blocks=32, block_size=16, cache=False):
+    return KVBlockPool(KVPoolConfig(
+        n_blocks=n_blocks, block_size=block_size, bytes_per_token=4,
+        enable_prefix_cache=cache,
+    ))
+
+
+# ---------------------------------------------------------------------------
+# refcounting and conservation
+# ---------------------------------------------------------------------------
+
+
+def test_release_is_idempotent():
+    pool = mk_pool()
+    pool.allocate(1, 100)
+    pool.release(1)
+    pool.release(1)                      # second release: no-op, no underflow
+    assert pool.used_blocks == 0
+    pool.check_invariants()
+
+
+def test_shared_block_freed_only_at_last_reference():
+    pool = mk_pool(cache=True)
+    toks = list(range(32))
+    pool.register_request(1, prompt_tokens=toks, prompt_len=33)
+    pool.allocate(1, 33)
+    pool.release(1)                      # both full blocks parked in the cache
+    assert pool.cached_blocks == 2
+
+    pool.register_request(2, prompt_tokens=toks, prompt_len=33)
+    pool.register_request(3, prompt_tokens=toks, prompt_len=33)
+    assert pool.match_prefix(2) == 32
+    assert pool.match_prefix(3) == 32
+    shared = pool.tables[2][0]
+    assert pool.tables[3][0] == shared   # same physical block
+    pool.release(2)
+    assert shared not in pool.free_blocks  # req 3 still holds it
+    pool.check_invariants()
+    pool.release(3)
+    assert pool.cached_blocks == 2       # back to evictable, not free
+    pool.check_invariants()
+
+
+def test_prefix_hit_returns_identical_block_ids():
+    pool = mk_pool(cache=True)
+    toks = list(range(48))
+    pool.register_request(1, prompt_tokens=toks, prompt_len=48)
+    pool.allocate(1, 48)
+    original = list(pool.tables[1][:2])  # full blocks (3rd is the uncacheable tail)
+    pool.release(1)
+    pool.register_request(2, prompt_tokens=toks, prompt_len=48)
+    assert pool.match_prefix(2) == 32    # never covers the whole prompt
+    assert pool.tables[2] == original
+
+
+def test_match_never_covers_whole_prompt():
+    """Even a perfectly block-aligned fully-cached prompt keeps >= 1 token of
+    prefill (the final token's logits start decoding)."""
+    pool = mk_pool(cache=True)
+    toks = list(range(32))               # exactly 2 blocks
+    pool.register_request(1, prompt_tokens=toks, prompt_len=32)
+    pool.allocate(1, 32)
+    pool.release(1)
+    pool.register_request(2, prompt_tokens=toks, prompt_len=32)
+    assert pool.match_prefix(2) == 16    # only the first block
+
+
+def test_chained_hash_distinguishes_same_block_different_prefix():
+    pool = mk_pool(cache=True)
+    a = list(range(32))
+    b = list(range(100, 116)) + list(range(16, 32))  # same 2nd block tokens
+    pool.register_request(1, prompt_tokens=a, prompt_len=33)
+    pool.allocate(1, 33)
+    pool.release(1)
+    pool.register_request(2, prompt_tokens=b, prompt_len=33)
+    assert pool.match_prefix(2) == 0     # first block differs -> chain breaks
+
+
+def test_lru_eviction_reclaims_oldest_cached_block():
+    pool = mk_pool(n_blocks=4, cache=True)
+    for rid, base in ((1, 0), (2, 1000)):
+        toks = list(range(base, base + 16))
+        pool.register_request(rid, prompt_tokens=toks, prompt_len=17)
+        pool.allocate(rid, 17)           # 2 blocks each (16 + 1 tail)
+        pool.release(rid)                # full block cached, tail freed
+    assert pool.cached_blocks == 2
+    # allocating 3 blocks must evict the LRU cached block (req 1's)
+    pool.allocate(9, 48)
+    assert pool.stats.evictions >= 1
+    pool.register_request(10, prompt_tokens=list(range(16)), prompt_len=17)
+    assert pool.match_prefix(10) == 0    # req 1's block is gone
+    pool.check_invariants()
+
+
+def test_exhaustion_still_raises():
+    pool = KVBlockPool(KVPoolConfig(n_blocks=2, block_size=16))
+    with pytest.raises(MemoryError):
+        pool.allocate(1, 100)
+
+
+# ---------------------------------------------------------------------------
+# per-tenant quotas
+# ---------------------------------------------------------------------------
+
+
+def test_quota_blocks_allocation_not_pool_space():
+    pool = mk_pool(n_blocks=32)
+    pool.set_tenant_quota("t", 4)
+    pool.allocate(1, 64, tenant="t")     # exactly 4 blocks
+    assert not pool.can_allocate(2, 16, tenant="t")
+    assert pool.quota_blocked(2, 16, tenant="t")
+    assert pool.can_allocate(3, 16, tenant="other")
+    with pytest.raises(KVQuotaExceeded):
+        pool.allocate(2, 16, tenant="t")
+    pool.release(1)
+    assert pool.can_allocate(2, 16, tenant="t")
+    pool.check_invariants()
+
+
+def test_quota_charged_on_prefix_match_and_refunded_on_release():
+    pool = mk_pool(cache=True)
+    toks = list(range(48))
+    pool.register_request(1, tenant="t", prompt_tokens=toks, prompt_len=48)
+    pool.allocate(1, 48, tenant="t")
+    assert pool.tenant_used_blocks("t") == 3
+    pool.release(1)
+    assert pool.tenant_used_blocks("t") == 0
+    pool.register_request(2, tenant="t", prompt_tokens=toks, prompt_len=48)
+    pool.match_prefix(2)
+    assert pool.tenant_used_blocks("t") == 2   # matched blocks pin quota too
+    pool.check_invariants()
+
+
+def test_max_new_tokens_respects_quota_and_slack():
+    pool = mk_pool(n_blocks=32, block_size=16)
+    pool.set_tenant_quota("t", 3)
+    pool.allocate(1, 10, tenant="t")     # 1 block, 6 tokens slack
+    assert pool.max_new_tokens(1, tenant="t") == 6 + 2 * 16
+
+
+# ---------------------------------------------------------------------------
+# scheduler integration: chunk-granular booking + preemption
+# ---------------------------------------------------------------------------
+
+
+def _drain(sched, max_rounds=500):
+    now = 0.0
+    rounds = 0
+    while sched.has_work() and rounds < max_rounds:
+        batch = sched.schedule(now)
+        now += 0.01
+        rounds += 1
+        if batch.is_empty():
+            continue
+        sched.on_batch_done(batch, now)
+    return rounds
+
+
+def test_scheduler_books_exactly_what_it_schedules():
+    pool = mk_pool(n_blocks=64)
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=32, max_seqs=4), kv_pool=pool
+    )
+    req = Request(prompt_len=100, max_new_tokens=4)
+    sched.submit(req)
+    batch = sched.schedule(0.0)
+    assert batch.prefill_chunks == [(req, 32)]
+    assert pool.lens[req.req_id] == 32   # chunk booked, not the whole prompt
+    sched.on_batch_done(batch, 0.01)
+    _drain(sched)
+    assert req.state == RequestState.FINISHED
+    assert req.req_id not in pool.tables  # released on finish
+    pool.check_invariants()
+
+
+def test_chunk_shrinks_to_allocatable_blocks():
+    pool = mk_pool(n_blocks=2, block_size=16)   # 32 tokens of KV, total
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=1024, max_seqs=4), kv_pool=pool
+    )
+    req = Request(prompt_len=500, max_new_tokens=1)
+    sched.submit(req)
+    batch = sched.schedule(0.0)
+    assert batch.prefill_chunks[0][1] == 32     # gated by memory, not budget
+    assert sched.stats.kv_deferrals == 1
+
+
+def test_decode_preempts_youngest_to_make_room():
+    pool = mk_pool(n_blocks=4, block_size=16)
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=64, max_seqs=4), kv_pool=pool
+    )
+    # each fits alone (32 + 24 = 56 tokens = 4 blocks) but the pool cannot
+    # hold both contexts at completion
+    old = Request(prompt_len=32, max_new_tokens=24, arrival_time=0.0)
+    young = Request(prompt_len=32, max_new_tokens=24, arrival_time=1.0)
+    sched.submit(old)
+    sched.submit(young)
+    rounds = 0
+    now = 0.0
+    while old.state != RequestState.FINISHED and rounds < 200:
+        batch = sched.schedule(now)
+        now += 0.01
+        rounds += 1
+        if not batch.is_empty():
+            sched.on_batch_done(batch, now)
+    # the pool (64 tokens) cannot hold both contexts to completion: the
+    # younger request must have been evicted at least once, never the older
+    assert old.state == RequestState.FINISHED
+    assert sched.stats.preemptions >= 1
+    assert young.preemptions >= 1 and old.preemptions == 0
+    pool.check_invariants()
+
+
+def test_preempted_request_recomputes_and_finishes():
+    reqs = shared_prefix(n_requests=16, n_prefixes=2, prefix_len=48,
+                         suffix_range=(8, 16), max_new_tokens=24,
+                         inter_arrival_s=0.002, seed=5)
+    pool = mk_pool(n_blocks=20, block_size=16)
+    res = run_policy(
+        reqs, SchedulerConfig(policy="aging", token_budget=128, max_seqs=16),
+        kv_pool=pool,
+    )
+    assert res.report.n_finished == 16
+    assert res.scheduler_stats.preemptions > 0
+    pool.check_invariants()
+    assert pool.used_blocks == 0         # everything returned
+
+
+def test_legacy_eager_mode_head_of_line_blocks():
+    """The A/B baseline: eager whole-prompt admission blocks short requests
+    behind a long prompt; chunk-granular admission does not."""
+    def wl():
+        longs = [Request(prompt_len=600, max_new_tokens=12, arrival_time=0.001 * i)
+                 for i in range(3)]
+        shorts = [Request(prompt_len=30, max_new_tokens=6,
+                          arrival_time=0.01 + 0.005 * i) for i in range(20)]
+        return longs + shorts
+
+    cfg = SchedulerConfig(policy="aging", token_budget=256, max_seqs=64)
+    eager = run_policy(wl(), cfg, kv_pool=mk_pool(n_blocks=64),
+                       legacy_eager_kv=True)
+    chunked = run_policy(wl(), cfg, kv_pool=mk_pool(n_blocks=64))
+    mean_ttft = lambda res: float(np.mean(
+        [r.ttft() for r in res.requests if r.prompt_len == 30]))
+    assert chunked.report.n_finished == 23
+    assert mean_ttft(chunked) < mean_ttft(eager)
+
+
+def test_kv_none_paths_unchanged():
+    """Without a pool the scheduler never touches KV machinery."""
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=64, max_seqs=4)
+    )
+    req = Request(prompt_len=100, max_new_tokens=2)
+    sched.submit(req)
+    _drain(sched)
+    assert req.state == RequestState.FINISHED
+    assert sched.stats.preemptions == 0
+
+
+# ---------------------------------------------------------------------------
+# property tests: pool invariants under random op sequences
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=80, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["alloc", "release", "match"]),
+            st.integers(min_value=0, max_value=7),     # req id
+            st.integers(min_value=1, max_value=40),    # token count
+        ),
+        max_size=60,
+    ),
+    cache=st.booleans(),
+)
+def test_pool_invariants_hold_under_random_ops(ops, cache):
+    pool = KVBlockPool(KVPoolConfig(
+        n_blocks=16, block_size=8, bytes_per_token=4, enable_prefix_cache=cache,
+    ))
+    prompts = {rid: list(range(rid * 100, rid * 100 + 40)) for rid in range(8)}
+    for op, rid, n in ops:
+        if op == "alloc":
+            if pool.can_allocate(rid, n):
+                pool.allocate(rid, n)
+        elif op == "release":
+            pool.release(rid)
+        else:
+            if rid not in pool.tables:
+                pool.register_request(rid, prompt_tokens=prompts[rid],
+                                      prompt_len=40)
+                pool.match_prefix(rid)
+        pool.check_invariants()
+        assert pool.used_blocks + pool.cached_blocks + len(pool.free_blocks) \
+            == pool.cfg.n_blocks
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    seq=st.lists(st.integers(min_value=1, max_value=30), min_size=1, max_size=20),
+)
+def test_alloc_release_cycle_conserves_blocks(seq):
+    pool = mk_pool(n_blocks=64, block_size=16)
+    total = 0
+    for i, n in enumerate(seq):
+        if pool.can_allocate(i, n):
+            pool.allocate(i, n)
+            total += n
+    for i in range(len(seq)):
+        pool.release(i)
+        pool.release(i)                  # double release must be harmless
+    assert pool.used_blocks == 0
+    assert len(pool.free_blocks) == 64
+    pool.check_invariants()
+
+
+def test_pool_for_model_prefix_cache_flag():
+    from repro.configs import tiny_config
+    pool = pool_for_model(tiny_config("qwen1.5-0.5b"), n_blocks=64,
+                          enable_prefix_cache=True)
+    assert pool.cfg.enable_prefix_cache
+    assert pool.cfg.bytes_per_token > 0
