@@ -29,7 +29,7 @@ import numpy as np
 
 from benchmarks.common import fmt_table, save_json
 from repro.core.request import Request
-from repro.core.scheduler import SchedulerConfig
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.costmodel import CostModel, CostModelConfig
 from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
 from repro.engine.simulator import run_policy
@@ -82,6 +82,47 @@ def run_prefix_experiment(n_requests: int, seed: int):
 
 
 # ---------------------------------------------------------------------------
+# A': real-engine smoke on the PAGED path (zero-copy prefix restores)
+# ---------------------------------------------------------------------------
+
+
+def run_engine_paged_smoke(n_requests: int, seed: int):
+    """Experiment A on the real JAXEngine with the paged block-table KV
+    layout: prefix hits restore by pointing block tables at still-resident
+    pages (no payload copy).  Tiny model on CPU — gate is correctness +
+    positive hit rate, not absolute latency."""
+    from repro.configs import tiny_config
+    from repro.engine.engine import EngineConfig, JAXEngine, serve
+    from repro.engine.workload import shared_prefix as _shared
+    from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+
+    model_cfg = tiny_config("qwen1.5-0.5b")
+    out = {}
+    for label, cache in (("cache off", False), ("cache on", True)):
+        engine = JAXEngine(model_cfg, EngineConfig(n_slots=8, max_context=256))
+        reqs = _shared(n_requests=n_requests, n_prefixes=2, prefix_len=64,
+                       suffix_range=(8, 24), max_new_tokens=8,
+                       inter_arrival_s=0.02, vocab_size=model_cfg.vocab_size,
+                       seed=seed)
+        res = serve(
+            reqs,
+            ChunkedPrefillScheduler(sched_cfg(budget=128, max_seqs=8)),
+            engine,
+            kv_pool=KVBlockPool(KVPoolConfig(
+                n_blocks=512, block_size=16, bytes_per_token=64,
+                enable_prefix_cache=cache,
+            )),
+        )
+        out[label] = {
+            "finished": res.report.n_finished,
+            "hit_rate": res.memory.cache_hit_rate,
+            "hit_tokens": res.memory.cache_hit_tokens,
+            "mean_ttft": res.report.ttft["mean"],
+        }
+    return out
+
+
+# ---------------------------------------------------------------------------
 # B: long-prompt adversary, eager vs chunk-granular allocation
 # ---------------------------------------------------------------------------
 
@@ -126,6 +167,9 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="tiny settings for CI smoke")
+    ap.add_argument("--engine", action="store_true",
+                    help="also run the real-engine smoke on the paged "
+                         "block-table KV path (zero-copy prefix restores)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     n_req = 60 if args.quick else 300
@@ -133,6 +177,10 @@ def main(argv=None):
 
     prefix = run_prefix_experiment(n_req, args.seed)
     hol = run_hol_experiment(n_short, args.seed)
+    engine_smoke = (
+        run_engine_paged_smoke(12 if args.quick else 32, args.seed)
+        if args.engine else None
+    )
 
     rows = [
         [label,
@@ -164,12 +212,30 @@ def main(argv=None):
         rows,
     ))
 
+    if engine_smoke is not None:
+        rows = [
+            [label, f"{r['finished']}", f"{r['hit_rate']:.1%}",
+             f"{r['hit_tokens']:.0f}", f"{r['mean_ttft'] * 1e3:.1f}ms"]
+            for label, r in engine_smoke.items()
+        ]
+        print()
+        print(fmt_table(
+            "Real engine (paged KV, zero-copy prefix restore)",
+            ["Config", "Finished", "Hit rate", "Hit tokens", "Mean TTFT"],
+            rows,
+        ))
+
     # -- acceptance gates ----------------------------------------------------
     on, off = prefix["cache on"], prefix["cache off"]
     gate_a1 = on["hit_rate"] > 0
     gate_a2 = on["mean_ttft"] < off["mean_ttft"]
     gate_b1 = (hol["chunk-granular"]["short_mean_ttft"]
                < hol["eager (legacy)"]["short_mean_ttft"])
+    gate_c1 = True
+    if engine_smoke is not None:
+        gate_c1 = (engine_smoke["cache on"]["hit_rate"] > 0
+                   and all(r["finished"] == engine_smoke["cache off"]["finished"]
+                           for r in engine_smoke.values()))
     print(f"\n  gate A1 [{'PASS' if gate_a1 else 'FAIL'}] "
           f"block cache hit rate {on['hit_rate']:.1%} > 0")
     print(f"  gate A2 [{'PASS' if gate_a2 else 'FAIL'}] "
@@ -178,12 +244,18 @@ def main(argv=None):
     print(f"  gate B1 [{'PASS' if gate_b1 else 'FAIL'}] short mean TTFT "
           f"{hol['eager (legacy)']['short_mean_ttft'] * 1e3:.1f}ms (eager) -> "
           f"{hol['chunk-granular']['short_mean_ttft'] * 1e3:.1f}ms (chunked)")
+    if engine_smoke is not None:
+        print(f"  gate C1 [{'PASS' if gate_c1 else 'FAIL'}] paged engine: "
+              f"hit rate {engine_smoke['cache on']['hit_rate']:.1%} > 0, "
+              f"all requests finished")
 
     save_json("bench_prefix_cache.json", {
         "seed": args.seed, "prefix": prefix, "hol": hol,
+        "engine_paged": engine_smoke,
         "gates": {"hit_rate_positive": bool(gate_a1),
                   "ttft_improves_with_cache": bool(gate_a2),
-                  "chunked_beats_eager_hol": bool(gate_b1)},
+                  "chunked_beats_eager_hol": bool(gate_b1),
+                  "paged_engine_smoke": bool(gate_c1)},
     })
     return prefix, hol
 

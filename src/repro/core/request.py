@@ -45,6 +45,11 @@ class Request:
     chunks: List[int] = field(default_factory=list)
     preemptions: int = 0
     folded_tokens: int = 0      # generated tokens folded into the prompt by preempt()
+    # token id the executor sampled this round, delivered by the next
+    # receive_token (real engine sets it; the simulator leaves 0 — it has no
+    # token values).  Matters beyond reporting: preempt() folds delivered
+    # tokens into the prompt, so recompute must re-prefill the REAL ids.
+    next_token: int = 0
 
     @property
     def remaining_prefill(self) -> int:

@@ -133,6 +133,9 @@ class ChunkedPrefillScheduler:
         self.decoding: List[Request] = []
         self.stats = SchedulerStats()
         self._round = 0
+        self._slot_binder = None
+        self._slot_releaser = None
+        self._bound_slots: set = set()   # req_ids currently holding a slot
         if self._books():
             self._apply_tenant_quotas()
 
@@ -158,6 +161,18 @@ class ChunkedPrefillScheduler:
 
     def _books(self) -> bool:
         return self.kv_pool is not None and self.kv_booking
+
+    # -- engine slot wiring (late binding) -----------------------------------
+    def attach_slot_binder(self, binder, releaser=None) -> None:
+        """Late engine-slot binding: ``binder(req) -> bool`` is consulted
+        before the first chunk of a not-yet-started request is committed —
+        True means the request holds an execution slot (bound now or
+        earlier); False defers the candidate to a later round.  Queued or
+        admission-delayed requests therefore never pin slots.  ``releaser``
+        (optional) is told about preemptions so the victim's slot frees
+        immediately."""
+        self._slot_binder = binder
+        self._slot_releaser = releaser
 
     # -- intake ------------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -191,6 +206,10 @@ class ChunkedPrefillScheduler:
         self.stats.rounds += 1
         if self.fairness is not None:
             self.fairness.on_round(now)
+        if self.kv_pool is not None:
+            # pool time only moves at scheduling points: TTL'd cache blocks
+            # expire here, before this round's bookings
+            self.kv_pool.advance_clock(now)
 
         # 1. decode-first: reserve budget for ongoing decodes.  With a booked
         # KV pool every decode token gets its block here (preempting the
@@ -240,11 +259,34 @@ class ChunkedPrefillScheduler:
         deferred: List[Request] = []
         seq_slots = cfg.max_seqs - n_decode
         blocks = 0
+        # slot-exhaustion scan state: once the binder misses, only requests
+        # ALREADY holding a slot can still be scheduled this round — scan on
+        # until every queued slot-holder has been seen, then stop (never
+        # starve a slot-holder, but don't walk a 10k-request backlog either).
+        slots_missed = False
+        decoding_ids = {r.req_id for r in self.decoding}
+        bound_left = len(self._bound_slots - decoding_ids)
         MAX_BLOCK_SCAN = 8  # bounded lookahead after APC blocks: keeps O(k log n)
         while committed < cfg.token_budget and seq_slots > 0 and blocks < MAX_BLOCK_SCAN:
             req = self.queue.pop()
             if req is None:
                 break
+
+            # engine-slot gate (late binding): bind BEFORE sizing the chunk —
+            # binding may consume a prefix-cache hit, which shrinks
+            # remaining_prefill.
+            if self._slot_binder is not None:
+                if req.req_id in self._bound_slots:
+                    bound_left -= 1
+                elif slots_missed or not self._slot_binder(req):
+                    slots_missed = True
+                    deferred.append(req)
+                    if bound_left <= 0:
+                        break          # no schedulable candidate remains
+                    continue
+                else:
+                    self._bound_slots.add(req.req_id)
+
             h_i = min(req.remaining_prefill, cfg.token_budget - committed)
             if h_i <= 0:
                 deferred.append(req)
@@ -290,6 +332,16 @@ class ChunkedPrefillScheduler:
                         self.stats.kv_deferrals += 1
 
             if c <= 0:
+                # zero-progress deferral: a request with no prefill done and
+                # no blocks held must not pin its freshly bound slot while
+                # blocked (e.g. quota-starved) — unbind, re-bind when it can
+                # actually run
+                if (self._slot_releaser is not None
+                        and req.prefill_done == 0
+                        and not (self.kv_pool is not None
+                                 and self.kv_pool.tables.get(req.req_id))):
+                    self._slot_releaser(req)
+                    self._bound_slots.discard(req.req_id)
                 deferred.append(req)
                 blocks += 1
                 # cap blocks are global to the round — no later candidate can
@@ -388,6 +440,9 @@ class ChunkedPrefillScheduler:
         is_delayed = getattr(self.queue, "is_delayed", None)
         self.kv_pool.release(victim.req_id, keep_registration=True)
         victim.preempt()
+        if self._slot_releaser is not None:
+            self._slot_releaser(victim)    # slot frees for this very round
+        self._bound_slots.discard(victim.req_id)
         self.stats.preemptions += 1
         batch.preempted.append(victim)
         if was_decoding:
@@ -409,20 +464,27 @@ class ChunkedPrefillScheduler:
                 # Sarathi semantics: the round that finishes the prefill also
                 # produces the first output token (TTFT = prefill completion).
                 req.prefill_end_time = now
-                req.receive_token(0, now)
+                req.receive_token(req.next_token, now)
                 if req.state == RequestState.DECODING:
                     self.decoding.append(req)
             else:
                 # back to the queue with updated priority (O(log n))
                 self.queue.update(req)
         for req in batch.decode_reqs:
-            req.receive_token(0, now)
+            req.receive_token(req.next_token, now)
         self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
-        if self._books():
-            # the pool's lifecycle ends here: finished requests' blocks drop
-            # their references (hashed blocks stay cached for prefix reuse)
-            for req in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
-                if req.state == RequestState.FINISHED:
+        for req in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
+            if req.state == RequestState.FINISHED:
+                self._bound_slots.discard(req.req_id)
+                if self._slot_releaser is not None:
+                    # release here too (idempotent): callers driving the
+                    # scheduler directly — not through serve() — must not
+                    # leak finished requests' slots
+                    self._slot_releaser(req)
+                if self._books():
+                    # the pool's lifecycle ends here: finished requests'
+                    # blocks drop their references (hashed blocks stay
+                    # cached for prefix reuse)
                     self.kv_pool.release(req.req_id)
         if self.fairness is not None:
             # charge the VTC for tokens actually executed this round and

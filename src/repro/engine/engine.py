@@ -2,19 +2,30 @@
 actual JAX forward passes (tiny models on CPU; the identical program compiles
 for TPU).
 
-Slot-based continuous batching (vLLM/Sarathi style):
-  * ``n_slots`` fixed sequence slots; requests map to slots on admission.
-  * One jitted ``chunked_step`` per scheduling round executes the ENTIRE
-    mixed batch — decode slots advance by 1 token, prefill slots by their
-    scheduled chunk, idle slots by 0 — under static bucketed shapes
-    (chunk dim padded to a power-of-two bucket) to bound recompilation.
+Continuous batching with PAGED KV storage (vLLM layout, the default):
+  * ``n_slots`` fixed *batch rows*; a request binds a slot at its FIRST
+    scheduled chunk (late binding — queued or admission-delayed backlog pins
+    nothing) and keeps it until it finishes or is preempted.
+  * K/V live in a physical page pool ``(layers, n_blocks + 1, block_size,
+    kv_heads, head_dim)`` whose page ids are exactly the ``KVBlockPool``'s
+    block ids, addressed through per-slot block tables.  Capacity scales with
+    resident tokens, not ``n_slots x max_context``; prefix-cache hits need no
+    payload copy (the matched blocks' pages are still resident); the last
+    page is a write sink for padding lanes.
+  * One jitted ``chunked_step_paged`` per scheduling round executes the
+    ENTIRE mixed batch — decode slots advance by 1 token (via the paged
+    flash-decode kernel when the round is a pure single-token bucket),
+    prefill slots by their scheduled chunk (paged chunked-prefill kernel),
+    idle slots by 0 — under static bucketed shapes.
+  * ``EngineConfig(paged_kv=False)`` keeps the dense slot cache
+    ``(layers, n_slots, max_context + 1, ...)`` for A/B: greedy-sampled
+    outputs are identical between the two layouts.
   * The scheduler under test is the real ``repro.core`` code; latencies are
-    wall-clock, so the LPRS predictor can be trained on real measurements
-    (the paper's offline profiling pipeline, with CPU standing in for the
-    accelerator).
+    wall-clock, so the LPRS predictor can be trained on real measurements.
 """
 from __future__ import annotations
 
+import math
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
@@ -26,7 +37,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch
-from repro.engine.kv_cache import KVBlockPool, pool_for_model
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig, PAGED_RESIDENT
 from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
 from repro.engine.sampler import SamplerConfig, sample_tokens
 from repro.models.model import Model, build_model
@@ -38,6 +49,8 @@ class EngineConfig:
     max_context: int = 1024
     chunk_buckets: Tuple[int, ...] = (1, 16, 32, 64, 128, 256)
     use_pallas: bool = False          # True: Pallas kernels (interpret on CPU)
+    paged_kv: bool = True             # block-table pages; False = dense slots
+    kv_block_size: int = 16           # page size when the engine owns its pool
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     seed: int = 0
 
@@ -46,7 +59,7 @@ class JAXEngine:
     """Executes ScheduledBatches with real forward passes."""
 
     def __init__(self, model_cfg: ModelConfig, cfg: Optional[EngineConfig] = None,
-                 params=None):
+                 params=None, kv_pool: Optional[KVBlockPool] = None):
         self.cfg = cfg or EngineConfig()
         self.model_cfg = model_cfg
         self.model: Model = build_model(model_cfg)
@@ -54,29 +67,78 @@ class JAXEngine:
         self.params = params if params is not None else self.model.init(rng)
         self._rng = jax.random.PRNGKey(self.cfg.seed + 1)
 
-        B, S = self.cfg.n_slots, self.cfg.max_context
-        hd = model_cfg.resolved_head_dim
-        kv_shape = (model_cfg.n_layers, B, S + 1, model_cfg.n_kv_heads, hd)
-        dt = jnp.dtype(model_cfg.param_dtype)
-        self.cache = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
-        self.lens = jnp.zeros((B,), jnp.int32)
-
+        B = self.cfg.n_slots
         self.slot_of: Dict[int, int] = {}          # req_id -> slot
         self.free_slots = list(range(B - 1, -1, -1))
         self.last_token = np.zeros((B,), np.int64)
 
+        self.kv_pool: Optional[KVBlockPool] = kv_pool
+        # the engine books blocks itself only while it owns a private pool;
+        # an externally bound pool is booked by the scheduler
+        self._owns_pool = False
+        if self.cfg.paged_kv and self.kv_pool is None:
+            bs = self.cfg.kv_block_size
+            per_slot = math.ceil(self.cfg.max_context / bs) + 1
+            self.kv_pool = KVBlockPool(KVPoolConfig(
+                n_blocks=B * per_slot, block_size=bs,
+            ))
+            self._owns_pool = True
+        self._build_state()
+
+    # -- physical KV layout ----------------------------------------------------
+    def _build_state(self) -> None:
+        cfg, model_cfg = self.cfg, self.model_cfg
+        B, S = cfg.n_slots, cfg.max_context
+        hd = model_cfg.resolved_head_dim
+        dt = jnp.dtype(model_cfg.param_dtype)
         impl = self.model.impl
-        use_pallas = self.cfg.use_pallas
+        use_pallas = cfg.use_pallas
 
-        def step(params, tokens, cache, lens, chunk_lens, rng):
-            logits, cache = impl.chunked_step(
-                params, tokens, cache, lens, chunk_lens, use_pallas=use_pallas
-            )
-            toks = sample_tokens(logits, rng, self.cfg.sampler)
-            return toks, cache
+        if cfg.paged_kv:
+            bs = self.kv_pool.cfg.block_size
+            # physical pages = pool blocks + 1 trailing sink page (padding
+            # lanes scatter there; block tables also pad with it)
+            self._n_phys = self.kv_pool.cfg.n_blocks + 1
+            self._sink = self.kv_pool.cfg.n_blocks
+            self.max_pages = math.ceil(S / bs) + 1
+            kv_shape = (model_cfg.n_layers, self._n_phys, bs,
+                        model_cfg.n_kv_heads, hd)
+            self.block_tables = np.full((B, self.max_pages), self._sink, np.int32)
 
-        self._step = jax.jit(step, donate_argnums=(2,),
-                             static_argnames=())
+            def step(params, tokens, cache, lens, chunk_lens, block_tables, rng):
+                logits, cache = impl.chunked_step_paged(
+                    params, tokens, cache, lens, chunk_lens, block_tables,
+                    use_pallas=use_pallas,
+                )
+                toks = sample_tokens(logits, rng, self.cfg.sampler)
+                return toks, cache
+        else:
+            kv_shape = (model_cfg.n_layers, B, S + 1, model_cfg.n_kv_heads, hd)
+            self.block_tables = None
+
+            def step(params, tokens, cache, lens, chunk_lens, rng):
+                logits, cache = impl.chunked_step(
+                    params, tokens, cache, lens, chunk_lens, use_pallas=use_pallas
+                )
+                toks = sample_tokens(logits, rng, self.cfg.sampler)
+                return toks, cache
+
+        self.cache = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
+        self.lens = jnp.zeros((B,), jnp.int32)
+        self._step = jax.jit(step, donate_argnums=(2,))
+
+    def bind_kv_pool(self, kv_pool: Optional[KVBlockPool]) -> None:
+        """Adopt the serve loop's shared pool: the physical page array is
+        rebuilt so page ids == the pool's block ids (the scheduler books
+        blocks; the engine just follows the tables).  Must happen before any
+        request is in flight."""
+        if kv_pool is None or kv_pool is self.kv_pool:
+            return
+        assert not self.slot_of, "cannot rebind the KV pool mid-flight"
+        self.kv_pool = kv_pool
+        self._owns_pool = False
+        if self.cfg.paged_kv:
+            self._build_state()
 
     def warmup(self) -> None:
         """Compile every bucket shape once so profiling sees steady-state
@@ -86,50 +148,78 @@ class JAXEngine:
             tokens = jnp.ones((B, C), jnp.int32)
             chunk_lens = jnp.zeros((B,), jnp.int32).at[0].set(1)
             self._rng, sub = jax.random.split(self._rng)
-            toks, self.cache = self._step(
-                self.params, tokens, self.cache, self.lens, chunk_lens, sub
-            )
+            args = (self.params, tokens, self.cache, self.lens, chunk_lens)
+            if self.cfg.paged_kv:
+                args += (jnp.asarray(self.block_tables),)
+            toks, self.cache = self._step(*args, sub)
             jax.block_until_ready(toks)
-        # reset cache/lens state touched by the dummy rounds
+        # reset cache/lens state touched by the dummy rounds (paged writes all
+        # land in the sink page, which is never read back)
         self.lens = jnp.zeros((B,), jnp.int32)
 
     # -- slot management -------------------------------------------------------
-    def admit(self, req: Request) -> bool:
+    def acquire_slot(self, req: Request) -> bool:
+        """Late slot binding: called by the scheduler when it first commits a
+        chunk for ``req`` (NOT at admission — queued or rate-limit-delayed
+        backlog pins no slot).  Returns True when the request holds a slot
+        after the call.
+
+        The prefix-cache lookup also happens HERE, not at admission: a
+        parked backlog must not pin cached blocks (refcounts) or tenant
+        quota it cannot use yet.  Only restorable blocks count — host-side
+        payloads (dense) or still-resident pages (paged).  On a hit the
+        dense layout copies the matched payloads into the fresh slot; the
+        paged layout's matched pages are already resident (zero-copy)."""
+        if req.req_id in self.slot_of:
+            return True
         if not self.free_slots:
             return False
         slot = self.free_slots.pop()
         self.slot_of[req.req_id] = slot
-        self.lens = self.lens.at[slot].set(0)
+        self.last_token[slot] = 0
+        if (self.kv_pool is not None and req.prefill_done == 0
+                and not self.kv_pool.tables.get(req.req_id)):
+            matched = self.kv_pool.match_prefix(req.req_id, require_payload=True)
+            if matched > 0:
+                req.prefill_done = matched
+        self.lens = self.lens.at[slot].set(req.prefill_done)
+        if self.cfg.paged_kv:
+            self.block_tables[slot, :] = self._sink
+        elif req.prefill_done > 0 and self.kv_pool is not None:
+            self._restore_prefix_dense(req, slot)
         return True
 
     def release(self, req: Request) -> None:
+        """Drop the request's slot (finish or preemption).  Idempotent.  With
+        an engine-owned pool the request's blocks go back too."""
         slot = self.slot_of.pop(req.req_id, None)
         if slot is not None:
             self.free_slots.append(slot)
-
-    def reset_slot(self, req: Request) -> None:
-        """KV-preempted request: its blocks were freed, so the slot's cache
-        contents are dead — recompute restarts the prefill at position 0."""
-        slot = self.slot_of.get(req.req_id)
-        if slot is not None:
-            self.lens = self.lens.at[slot].set(0)
+            if self.cfg.paged_kv:
+                self.block_tables[slot, :] = self._sink
+        if self._owns_pool:
+            self.kv_pool.release(req.req_id)
 
     def has_capacity(self) -> bool:
         return len(self.free_slots) > 0
 
     # -- prefix-cache payloads -------------------------------------------------
-    def restore_prefix(self, req: Request, kv_pool: KVBlockPool) -> None:
-        """Write a prefix-cache hit's stored K/V payloads into the request's
-        slot so the skipped prefill positions hold numerically identical
-        state (causal attention: prefix KV depends only on prefix tokens)."""
-        slot = self.slot_of[req.req_id]
+    def _restore_prefix_dense(self, req: Request, slot: int) -> None:
+        """Dense layout only: copy a prefix-cache hit's stored K/V payloads
+        into the request's slot so the skipped prefill positions hold
+        numerically identical state (causal attention: prefix KV depends only
+        on prefix tokens).  At bind time ``prefill_done`` is exactly the
+        matched token count."""
+        kv_pool = self.kv_pool
         bs = kv_pool.cfg.block_size
         table = kv_pool.tables.get(req.req_id, [])
-        n_matched = kv_pool.lens.get(req.req_id, 0) // bs
+        n_matched = req.prefill_done // bs
         ks, vs = [], []
         for bid in table[:n_matched]:
             payload = kv_pool.payload(bid)
-            assert payload is not None, "engine prefix match requires payloads"
+            assert payload is not None and payload is not PAGED_RESIDENT, (
+                "dense engine prefix match requires host-side payloads"
+            )
             ks.append(payload[0])
             vs.append(payload[1])
         if ks:
@@ -140,11 +230,19 @@ class JAXEngine:
             self.cache["v"] = (
                 self.cache["v"].at[:, slot, : n_matched * bs].set(jnp.concatenate(vs, axis=1))
             )
-        self.lens = self.lens.at[slot].set(n_matched * bs)
 
-    def capture_sealed(self, req: Request, kv_pool: KVBlockPool) -> None:
-        """Park newly sealed (full, content-addressed) prompt blocks' K/V
-        host-side so future prefix hits can restore them."""
+    def capture_sealed(self, req: Request) -> None:
+        """Make newly sealed (full, content-addressed) prompt blocks
+        restorable by future prefix hits.  Dense layout: park the K/V arrays
+        host-side.  Paged layout: the data already lives at the block's
+        physical page — a residency marker suffices, no copy."""
+        kv_pool = self.kv_pool
+        if kv_pool is None:
+            return
+        if self.cfg.paged_kv:
+            for _idx, bid, _s, _e in kv_pool.take_newly_sealed(req.req_id):
+                kv_pool.store_payload(bid, PAGED_RESIDENT)
+            return
         slot = self.slot_of.get(req.req_id)
         if slot is None:
             return
@@ -159,6 +257,26 @@ class JAXEngine:
             if c <= b:
                 return b
         return self.cfg.chunk_buckets[-1]
+
+    def _sync_block_tables(self, batch: ScheduledBatch) -> None:
+        """Refresh each scheduled request's device block-table row from the
+        pool (the scheduler — or the engine itself when it owns the pool —
+        booked this round's blocks before execution)."""
+        pool = self.kv_pool
+        if self._owns_pool:
+            for r, c in batch.prefill_chunks:
+                pool.allocate(r.req_id, int(c))
+            for r in batch.decode_reqs:
+                pool.allocate(r.req_id, 1)
+        for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
+            slot = self.slot_of[r.req_id]
+            table = pool.tables.get(r.req_id, [])
+            assert len(table) <= self.max_pages, (
+                f"req {r.req_id}: {len(table)} blocks > {self.max_pages} pages"
+            )
+            row = self.block_tables[slot]
+            row[: len(table)] = table
+            row[len(table):] = self._sink
 
     def execute(self, batch: ScheduledBatch) -> float:
         """Run one mixed round; returns wall latency in ms."""
@@ -180,23 +298,30 @@ class JAXEngine:
             tokens[slot, : len(chunk)] = chunk
             chunk_lens[slot] = len(chunk)
 
+        args = (self.params, jnp.asarray(tokens), self.cache, self.lens,
+                jnp.asarray(chunk_lens))
+        if self.cfg.paged_kv:
+            self._sync_block_tables(batch)
+            args += (jnp.asarray(self.block_tables),)
+
         self._rng, sub = jax.random.split(self._rng)
         t0 = time.perf_counter()
-        toks, self.cache = self._step(
-            self.params, jnp.asarray(tokens), self.cache, self.lens,
-            jnp.asarray(chunk_lens), sub,
-        )
+        toks, self.cache = self._step(*args, sub)
         toks = np.asarray(jax.block_until_ready(toks))
         wall_ms = (time.perf_counter() - t0) * 1e3
 
         self.lens = self.lens + jnp.asarray(chunk_lens)
+        # next_token carries the sampled id into receive_token so delivered
+        # outputs — and any preemption fold — hold the REAL token values
         for req in batch.decode_reqs:
             slot = self.slot_of[req.req_id]
             self.last_token[slot] = toks[slot]
+            req.next_token = int(toks[slot])
         for req, c in batch.prefill_chunks:
             slot = self.slot_of[req.req_id]
             if req.remaining_prefill - c <= 0:     # prefill completes this round
                 self.last_token[slot] = toks[slot]
+                req.next_token = int(toks[slot])
         return wall_ms
 
 
@@ -232,6 +357,11 @@ def serve(
 ) -> ServeResult:
     """Continuous-batching serve loop over real execution.
 
+    Admission hands requests straight to the scheduler — an engine slot is
+    bound only when the scheduler first commits a chunk (late binding, via
+    the slot-binder hook), so queued or admission-delayed backlog can never
+    pin slots.
+
     realtime_arrivals=False (default) admits requests by the engine's own
     clock (wall time since start), compressing idle gaps — deterministic and
     fast for tests; True sleeps to honor arrival times.
@@ -245,26 +375,27 @@ def serve(
     rounds = 0
     feats, lats = [], []
     outputs: Dict[int, List[int]] = {}
-    if kv_pool is not None and scheduler.kv_pool is None:
-        # the scheduler books blocks chunk-granularly inside schedule()
-        scheduler.attach_kv_pool(kv_pool)
+    if kv_pool is not None:
+        if scheduler.kv_pool is None:
+            # the scheduler books blocks chunk-granularly inside schedule()
+            scheduler.attach_kv_pool(kv_pool)
+        engine.bind_kv_pool(kv_pool)
+    # slots bind at first schedule and free at preemption, not admission
+    scheduler.attach_slot_binder(engine.acquire_slot, releaser=engine.release)
 
     def admit(now_s: float):
         nonlocal next_i
         while next_i < len(pending) and pending[next_i].arrival_time <= now_s:
             req = pending[next_i]
-            if not engine.has_capacity():
-                break
-            matched = 0
             if kv_pool is not None:
-                # prefix-cache match: only blocks with stored payloads count —
-                # the engine must restore real K/V for every skipped position
-                matched = kv_pool.submit_request(req, require_payload=True)
-            engine.admit(req)
-            if matched > 0:
-                engine.restore_prefix(req, kv_pool)
+                # registration only (tenant + prompt block hashes): the
+                # prefix-cache MATCH waits for first slot bind, so a parked
+                # backlog pins no cached blocks and no tenant quota
+                kv_pool.register_request(
+                    req.req_id, tenant=req.tenant,
+                    prompt_tokens=req.prompt_tokens, prompt_len=req.prompt_len,
+                )
             if not scheduler.submit(req):      # admission-rejected: give back
-                engine.release(req)
                 if kv_pool is not None:
                     kv_pool.release(req.req_id)
             next_i += 1
@@ -281,18 +412,19 @@ def serve(
                 compress_idle_gap(pending, next_i, now)
             continue
 
+        # preemption victims' slots were already freed inside schedule() (the
+        # releaser hook) — a victim may even have re-bound a fresh slot and
+        # been rescheduled within the same round, so do NOT release here.
         batch = scheduler.schedule(now)
-        for r in batch.preempted:
-            engine.reset_slot(r)               # blocks freed: slot KV is dead
         if batch.is_empty():
             time.sleep(0.0005)
             continue
 
         wall_ms = engine.execute(batch)
         if kv_pool is not None:
-            # park newly sealed (full, hashed) prompt blocks' K/V host-side
+            # newly sealed (full, hashed) prompt blocks become restorable
             for r, _c in batch.prefill_chunks:
-                engine.capture_sealed(r, kv_pool)
+                engine.capture_sealed(r)
         if collect_samples:
             feats.append(batch.state.features())
             lats.append(wall_ms)

@@ -44,6 +44,14 @@ class KVQuotaExceeded(MemoryError):
     (the pool itself may still have free blocks)."""
 
 
+# Payload sentinel for the paged engine: the sealed block's K/V still live in
+# the engine's physical page at this block id, so a prefix hit needs no
+# host-side copy — the marker only proves residency to ``require_payload``
+# matches.  (A block id is recycled only after eviction removes its hash, so
+# a matchable block's page content is always intact.)
+PAGED_RESIDENT = "paged-resident"
+
+
 @dataclass
 class KVPoolConfig:
     n_blocks: int = 4096
@@ -52,6 +60,10 @@ class KVPoolConfig:
     hbm_capacity_mb: float = 16 * 1024.0
     param_mb: float = 0.0
     enable_prefix_cache: bool = False
+    # bounds on the *evictable* prefix-cache LRU (refcount-0 cached blocks):
+    # None = unbounded (cache grows until demand reclaims it)
+    cache_max_blocks: Optional[int] = None   # capacity cap on parked blocks
+    cache_ttl_s: Optional[float] = None      # evict blocks idle longer than this
 
 
 @dataclass
@@ -60,7 +72,10 @@ class KVPoolStats:
     hit_blocks: int = 0               # cached blocks re-acquired
     miss_blocks: int = 0              # full prompt blocks that missed
     hit_tokens: int = 0               # prefill tokens skipped via the cache
-    evictions: int = 0                # cached blocks reclaimed for new allocs
+    evictions: int = 0                # cached blocks evicted, all causes
+    demand_evictions: int = 0         # ... reclaimed for new allocations
+    capacity_evictions: int = 0       # ... trimmed by cache_max_blocks
+    ttl_evictions: int = 0            # ... expired by cache_ttl_s
     sealed_blocks: int = 0            # blocks that became cache-addressable
 
     @property
@@ -95,6 +110,8 @@ class KVBlockPool:
         # prefix cache: content hash -> block id; LRU over refcount-0 members
         self._cache_index: Dict[int, int] = {}
         self._evictable: "OrderedDict[int, int]" = OrderedDict()  # block_id -> hash
+        self._parked_at: Dict[int, float] = {}     # block_id -> park clock (TTL)
+        self._now = 0.0                            # advanced by the scheduler
         # per-request registration + per-tenant accounting
         self._reg: Dict[int, _Registration] = {}
         self._tenant_used: Dict[str, int] = {}     # tenant -> charged blocks
@@ -172,6 +189,7 @@ class KVBlockPool:
         for bid in matched:
             self._ref[bid] = self._ref.get(bid, 0) + 1
             self._evictable.pop(bid, None)      # referenced again: not evictable
+            self._parked_at.pop(bid, None)
         self.tables[req_id] = list(matched)
         self.lens[req_id] = len(matched) * bs
         reg.sealed = len(matched)               # shared blocks are already sealed
@@ -255,14 +273,40 @@ class KVBlockPool:
         )
         return int(slack + headroom * bs)
 
-    def _evict_one(self) -> None:
+    def _evict_one(self, reason: str = "demand") -> None:
         bid, h = self._evictable.popitem(last=False)    # LRU
+        self._parked_at.pop(bid, None)
         self._cache_index.pop(h, None)
         self._hash_of.pop(bid, None)
         self._payload.pop(bid, None)
         self._ref.pop(bid, None)
         self.free_blocks.append(bid)
         self.stats.evictions += 1
+        setattr(self.stats, f"{reason}_evictions",
+                getattr(self.stats, f"{reason}_evictions") + 1)
+
+    # -- cache bounds (TTL / capacity) ----------------------------------------
+    def advance_clock(self, now: float) -> None:
+        """Move the pool's clock forward (the scheduler calls this every
+        round) and expire cached blocks older than ``cache_ttl_s``.  The LRU
+        order equals park-time order, so expiry walks the front only."""
+        if now > self._now:
+            self._now = now
+        ttl = self.cfg.cache_ttl_s
+        if ttl is None:
+            return
+        while self._evictable:
+            oldest = next(iter(self._evictable))
+            if self._now - self._parked_at.get(oldest, self._now) <= ttl:
+                break
+            self._evict_one(reason="ttl")
+
+    def _enforce_cache_capacity(self) -> None:
+        cap = self.cfg.cache_max_blocks
+        if cap is None:
+            return
+        while len(self._evictable) > cap:
+            self._evict_one(reason="capacity")
 
     def _pop_block(self) -> int:
         if not self.free_blocks:
@@ -364,6 +408,8 @@ class KVBlockPool:
                 self._ref[bid] = 0
                 self._evictable[bid] = h       # most-recently used end
                 self._evictable.move_to_end(bid)
+                self._parked_at[bid] = self._now
+                self._enforce_cache_capacity()
             else:
                 self._ref.pop(bid, None)
                 self._hash_of.pop(bid, None)
@@ -425,6 +471,31 @@ class KVBlockPool:
             assert self._ref.get(bid, 0) == holders, (
                 f"block {bid}: refcount {self._ref.get(bid, 0)} != holders {holders}"
             )
+        # block-table invariants (the paged engine addresses physical pages
+        # straight through these tables):
+        bs = self.cfg.block_size
+        for req_id, table in self.tables.items():
+            # every live token maps into exactly one physical block slot
+            assert self.lens.get(req_id, 0) <= len(table) * bs, (
+                f"req {req_id}: {self.lens.get(req_id, 0)} tokens live in "
+                f"{len(table)} blocks of {bs}"
+            )
+            # a table never references the same physical block twice
+            assert len(set(table)) == len(table), (
+                f"req {req_id}: duplicate physical block in table {table}"
+            )
+        for bid in referenced:
+            # a physical block appears in multiple live tables only while
+            # sealed (content-addressed prefix sharing); private blocks are
+            # exclusively owned
+            if self._ref.get(bid, 0) > 1:
+                assert bid in self._hash_of, (
+                    f"block {bid} shared by {self._ref[bid]} tables but not sealed"
+                )
+        # cache-bound invariants: parked set == evictable set; capacity holds
+        assert set(self._parked_at) == set(self._evictable), "stamp/LRU drift"
+        if self.cfg.cache_max_blocks is not None:
+            assert len(self._evictable) <= self.cfg.cache_max_blocks
         by_tenant: Dict[str, int] = {}
         for req_id, table in self.tables.items():
             t = self.tenant_of(req_id)
@@ -437,7 +508,9 @@ class KVBlockPool:
 
 def pool_for_model(cfg_model, *, n_blocks: int = 8192, block_size: int = 16,
                    hbm_mb: float = 16 * 1024.0,
-                   enable_prefix_cache: bool = False) -> KVBlockPool:
+                   enable_prefix_cache: bool = False,
+                   cache_max_blocks: Optional[int] = None,
+                   cache_ttl_s: Optional[float] = None) -> KVBlockPool:
     """Size bytes_per_token from a ModelConfig (attention layers only)."""
     hd = cfg_model.resolved_head_dim
     if cfg_model.attn_every:
@@ -456,5 +529,7 @@ def pool_for_model(cfg_model, *, n_blocks: int = 8192, block_size: int = 16,
             hbm_capacity_mb=hbm_mb,
             param_mb=param_mb,
             enable_prefix_cache=enable_prefix_cache,
+            cache_max_blocks=cache_max_blocks,
+            cache_ttl_s=cache_ttl_s,
         )
     )

@@ -13,6 +13,8 @@ from repro.kernels import ref
 from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.fused_swiglu import fused_swiglu
+from repro.kernels.paged_decode_attention import paged_decode_attention
+from repro.kernels.paged_prefill_attention import paged_prefill_attention
 
 _ON_TPU = None
 
@@ -43,6 +45,31 @@ def flash_decode_attention(q, k_cache, v_cache, kv_lens, *,
         return ref.decode_attention_ref(q, k_cache, v_cache, kv_lens)
     return decode_attention(
         q, k_cache, v_cache, kv_lens, block_k=block_k, interpret=not on_tpu()
+    )
+
+
+def paged_prefill_chunk_attention(q, k_pages, v_pages, block_tables, kv_lens,
+                                  q_offset, *, use_pallas: bool = True,
+                                  block_q: int = 128):
+    """(B, Sq, Hq, hd) chunk vs a (n_pages, ps, Hkv, hd) physical page pool
+    addressed through per-sequence block tables, with causal offset."""
+    if not use_pallas:
+        return ref.paged_prefill_attention_ref(
+            q, k_pages, v_pages, block_tables, kv_lens, q_offset)
+    return paged_prefill_attention(
+        q, k_pages, v_pages, block_tables, kv_lens, q_offset,
+        block_q=block_q, interpret=not on_tpu(),
+    )
+
+
+def paged_flash_decode_attention(q, k_pages, v_pages, block_tables, kv_lens, *,
+                                 use_pallas: bool = True):
+    """(B, Hq, hd) single-token decode vs a paged pool + block tables."""
+    if not use_pallas:
+        return ref.paged_decode_attention_ref(
+            q, k_pages, v_pages, block_tables, kv_lens)
+    return paged_decode_attention(
+        q, k_pages, v_pages, block_tables, kv_lens, interpret=not on_tpu()
     )
 
 

@@ -1,0 +1,148 @@
+"""Pallas TPU kernel: paged flash-decode attention (block-table K/V gather).
+
+The physical KV cache is a pool of fixed-size pages shared by all sequences
+(vLLM layout): ``k_pages/v_pages: (n_pages, page_size, Hkv, hd)``.  Each
+sequence owns a *block table* — the ordered list of physical page ids backing
+its logical token positions — so capacity scales with tokens actually
+resident, not ``n_slots x max_context``.
+
+Indirection rides scalar prefetch: the block table and per-sequence kv
+lengths land in SMEM before the kernel body runs, and the K/V BlockSpec
+index maps read ``block_tables[b, page_i]`` to steer each grid step's DMA at
+the right physical page.  The kernel body is the same online-softmax
+(m, l, acc) scratch structure as the dense ``decode_attention`` kernel — one
+HBM pass over the *live* pages only (pages past ``kv_len`` are skipped).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_decode_kernel(
+    block_tables_ref,   # (B, max_pages) scalar prefetch (steers K/V index maps)
+    kv_len_ref,         # (B,) scalar prefetch
+    q_ref,              # (group, hd)
+    k_ref,              # (page_size, hd) — one physical page of this KV head
+    v_ref,              # (page_size, hd)
+    o_ref,              # (group, hd)
+    m_ref,              # (group,) f32
+    l_ref,              # (group,) f32
+    acc_ref,            # (group, hd) f32
+    *,
+    page_size: int,
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    page_i = pl.program_id(2)
+    n_pages = pl.num_programs(2)
+
+    @pl.when(page_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kv_len_ref[b]
+    k_pos = page_i * page_size + jax.lax.iota(jnp.int32, page_size)
+
+    # whole-page skip: logical pages past the valid length cost nothing
+    @pl.when(k_pos[0] < kv_len)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * sm_scale         # (g, hd)
+        k = k_ref[...].astype(jnp.float32)                    # (ps, hd)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                     # (g, ps)
+        mask = k_pos[None, :] < kv_len
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(page_i == n_pages - 1)
+    def _finish():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_decode_attention(
+    q,              # (B, Hq, hd) one token per sequence
+    k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
+    v_pages,        # (n_pages, page_size, Hkv, hd)
+    block_tables,   # (B, max_pages) int32 physical page ids (pad: any valid id)
+    kv_lens,        # (B,) int32 valid token counts
+    *,
+    interpret: bool = True,
+):
+    B, Hq, hd = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    max_pages = block_tables.shape[1]
+
+    grid = (B, Hkv, max_pages)
+    kernel = functools.partial(
+        _paged_decode_kernel, page_size=page_size,
+        sm_scale=1.0 / math.sqrt(hd),
+    )
+
+    q_g = q.reshape(B, Hkv, group, hd)
+    # pages laid out (n_pages, Hkv, page_size, hd): contiguous (ps, hd) tiles
+    k_t = k_pages.transpose(0, 2, 1, 3)
+    v_t = v_pages.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (None, None, group, hd),
+                    lambda b, h, pi, *_: (b, h, 0, 0),
+                ),
+                # the physical page index comes from the prefetched table
+                pl.BlockSpec(
+                    (None, None, page_size, hd),
+                    lambda b, h, pi, bt, kl: (bt[b, pi], h, 0, 0),
+                ),
+                pl.BlockSpec(
+                    (None, None, page_size, hd),
+                    lambda b, h, pi, bt, kl: (bt[b, pi], h, 0, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (None, None, group, hd),
+                lambda b, h, pi, *_: (b, h, 0, 0),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((group,), jnp.float32),
+                pltpu.VMEM((group,), jnp.float32),
+                pltpu.VMEM((group, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), kv_lens.astype(jnp.int32), q_g, k_t, v_t)
+
+    return out.reshape(B, Hq, hd)

@@ -1,0 +1,168 @@
+"""Pallas TPU kernel: paged chunked-prefill attention.
+
+The chunked-prefill engine's hot op against a *paged* KV cache: a chunk of Q
+tokens (one scheduling round) attends to its sequence's prefix KV plus its
+own keys with a causal offset, where K/V live in a shared physical page pool
+``(n_pages, page_size, Hkv, hd)`` addressed through a per-sequence block
+table (same layout as ``paged_decode_attention``).
+
+Grid: ``(B, Hq, Sq // block_q, max_pages)`` — the innermost dimension walks
+the sequence's block table; the prefetched table steers each step's K/V DMA
+to the right physical page, and the online-softmax (m, l, acc) scratch
+carries across pages exactly as the dense kernel carries across KV tiles.
+Pages entirely above the causal diagonal or past ``kv_len`` are skipped, so
+work stays ~O(prefix + chunk^2/2) per sequence regardless of pool size.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+
+NEG_INF = -1e30
+
+
+def _paged_prefill_kernel(
+    # prefetched scalars
+    block_tables_ref,   # (B, max_pages)
+    kv_len_ref,         # (B,) valid kv length (prefix + chunk)
+    q_offset_ref,       # (B,) absolute position of q[:, 0]
+    # blocked operands
+    q_ref,              # (blk_q, hd)
+    k_ref,              # (page_size, hd) — one physical page
+    v_ref,              # (page_size, hd)
+    # blocked output
+    o_ref,              # (blk_q, hd)
+    # scratch
+    m_ref,              # (blk_q,) f32
+    l_ref,              # (blk_q,) f32
+    acc_ref,            # (blk_q, hd) f32
+    *,
+    block_q: int,
+    page_size: int,
+    sm_scale: float,
+):
+    b = pl.program_id(0)
+    page_i = pl.program_id(3)
+    n_pages = pl.num_programs(3)
+
+    @pl.when(page_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = kv_len_ref[b]
+    q_off = q_offset_ref[b]
+
+    q_i = pl.program_id(2)
+    q_pos = q_off + q_i * block_q + jax.lax.iota(jnp.int32, block_q)
+    k_pos = page_i * page_size + jax.lax.iota(jnp.int32, page_size)
+
+    # whole-page skip: above the causal diagonal or past the valid length
+    page_live = (k_pos[0] <= q_pos[-1]) & (k_pos[0] < kv_len)
+
+    @pl.when(page_live)
+    def _compute():
+        q = q_ref[...].astype(jnp.float32) * sm_scale
+        k = k_ref[...].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                   # (blk_q, ps)
+        mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(page_i == n_pages - 1)
+    def _finish():
+        l = l_ref[...]
+        safe_l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[...] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+def paged_prefill_attention(
+    q,              # (B, Sq, Hq, hd) the prefill chunk's queries
+    k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
+    v_pages,        # (n_pages, page_size, Hkv, hd)
+    block_tables,   # (B, max_pages) int32 physical page ids
+    kv_lens,        # (B,) int32 valid KV length (prefix + chunk)
+    q_offset,       # (B,) int32 absolute position of q[:, 0]
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    interpret: bool = True,
+):
+    B, Sq, Hq, hd = q.shape
+    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    max_pages = block_tables.shape[1]
+
+    block_q = min(block_q, Sq)
+    assert Sq % block_q == 0, (Sq, block_q)
+
+    grid = (B, Hq, Sq // block_q, max_pages)
+    kernel = functools.partial(
+        _paged_prefill_kernel, block_q=block_q, page_size=page_size,
+        sm_scale=1.0 / math.sqrt(hd),
+    )
+
+    q_t = q.transpose(0, 2, 1, 3)          # (B, Hq, Sq, hd)
+    k_t = k_pages.transpose(0, 2, 1, 3)    # (n_pages, Hkv, ps, hd)
+    v_t = v_pages.transpose(0, 2, 1, 3)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (None, None, block_q, hd),
+                    lambda b, h, qi, pi, *_: (b, h, qi, 0),
+                ),
+                pl.BlockSpec(
+                    (None, None, page_size, hd),
+                    lambda b, h, qi, pi, bt, kl, qo, g=group: (bt[b, pi], h // g, 0, 0),
+                ),
+                pl.BlockSpec(
+                    (None, None, page_size, hd),
+                    lambda b, h, qi, pi, bt, kl, qo, g=group: (bt[b, pi], h // g, 0, 0),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (None, None, block_q, hd),
+                lambda b, h, qi, pi, *_: (b, h, qi, 0),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q,), jnp.float32),
+                pltpu.VMEM((block_q, hd), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
+        interpret=interpret,
+    )(
+        block_tables.astype(jnp.int32), kv_lens.astype(jnp.int32),
+        q_offset.astype(jnp.int32), q_t, k_t, v_t,
+    )
+
+    return out.transpose(0, 2, 1, 3)       # (B, Sq, Hq, hd)

@@ -63,6 +63,49 @@ def decode_attention_ref(
     return out.reshape(B, Hq, hd).astype(q.dtype)
 
 
+def gather_pages(pages, block_tables):
+    """Materialize per-sequence dense K/V from a physical page pool.
+
+    pages: (n_pages, page_size, H, hd); block_tables: (B, max_pages) int32
+    -> (B, max_pages * page_size, H, hd).  Padding table entries may point at
+    any valid page: positions past ``kv_lens`` are masked by the caller.
+    """
+    B, P = block_tables.shape
+    g = pages[block_tables]                      # (B, P, ps, H, hd)
+    return g.reshape(B, P * pages.shape[1], *pages.shape[2:])
+
+
+def paged_prefill_attention_ref(
+    q,              # (B, Sq, Hq, hd)
+    k_pages,        # (n_pages, page_size, Hkv, hd)
+    v_pages,        # (n_pages, page_size, Hkv, hd)
+    block_tables,   # (B, max_pages) int32
+    kv_lens,        # (B,) valid KV length (prefix + chunk)
+    q_offset,       # (B,) absolute position of q[:, 0]
+):
+    """Paged chunked-prefill oracle: gather the block table into a dense
+    cache, then the exact dense computation (page indirection must be pure
+    data movement — the math is identical)."""
+    return chunked_prefill_attention_ref(
+        q, gather_pages(k_pages, block_tables), gather_pages(v_pages, block_tables),
+        kv_lens, q_offset,
+    )
+
+
+def paged_decode_attention_ref(
+    q,              # (B, Hq, hd)
+    k_pages,        # (n_pages, page_size, Hkv, hd)
+    v_pages,        # (n_pages, page_size, Hkv, hd)
+    block_tables,   # (B, max_pages) int32
+    kv_lens,        # (B,)
+):
+    """Paged flash-decode oracle via dense gather."""
+    return decode_attention_ref(
+        q, gather_pages(k_pages, block_tables), gather_pages(v_pages, block_tables),
+        kv_lens,
+    )
+
+
 def fused_swiglu_ref(x, w_gate, w_up, w_down):
     """x: (M, D); w_gate/w_up: (D, F); w_down: (F, D) -> (M, D), f32 math."""
     xf = x.astype(jnp.float32)

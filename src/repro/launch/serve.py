@@ -66,6 +66,10 @@ def main(argv=None):
     ap.add_argument("--apc", action="store_true")
     ap.add_argument("--pallas", action="store_true",
                     help="run the Pallas kernels (interpret mode on CPU)")
+    ap.add_argument("--dense-kv", action="store_true",
+                    help="dense slot-indexed KV cache instead of the paged "
+                         "block-table layout (A/B baseline; outputs are "
+                         "identical under greedy sampling)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="enable the hash-based KV prefix cache (block-aligned "
                          "prompt reuse; hits skip the matched prefill compute)")
@@ -78,6 +82,7 @@ def main(argv=None):
     model_cfg = get_config(args.arch) if args.full else tiny_config(args.arch)
     engine = JAXEngine(model_cfg, EngineConfig(
         n_slots=16, max_context=512, use_pallas=args.pallas,
+        paged_kv=not args.dense_kv,
     ))
 
     predictor = None
@@ -110,7 +115,9 @@ def main(argv=None):
 
     row = res.report.row()
     print(f"\n=== {args.arch} | policy={args.policy} lprs={args.lprs} "
-          f"apc={args.apc} pallas={args.pallas} prefix_cache={args.prefix_cache} ===")
+          f"apc={args.apc} pallas={args.pallas} "
+          f"kv={'dense' if args.dense_kv else 'paged'} "
+          f"prefix_cache={args.prefix_cache} ===")
     print(f"finished {res.report.n_finished}/{res.report.n_total} "
           f"in {res.wall_s:.2f}s  ({res.rounds} rounds)")
     for k, v in row.items():

@@ -290,6 +290,79 @@ class TransformerLM:
         logits = self._unembed(params, x_last)
         return constrain(logits, ("batch", "vocab")), {"k": nk, "v": nv}
 
+    def chunked_step_paged(self, params, tokens, kv_pages, lens, chunk_lens,
+                           block_tables, *, use_pallas: bool = False):
+        """``chunked_step`` against a *paged* KV cache (vLLM layout).
+
+        Same Sarathi round semantics and bit-level math as the dense path, but
+        K/V live in a shared physical page pool ``(L, n_pages, page_size,
+        Hkv, hd)`` addressed through per-slot block tables ``(B, max_pages)``
+        instead of a ``(L, B, S+1, ...)`` slot-dense tensor.  New K/V for
+        position ``p`` of slot ``b`` scatters to flat physical row
+        ``block_tables[b, p // ps] * ps + p % ps``; padding positions scatter
+        into the last physical page (the sink, which block tables also use as
+        their pad value) and are never read back (``kv_lens`` masks them).
+
+        Attention is the paged chunked-prefill kernel (or the paged flash-
+        decode kernel when the bucket is a pure single-token round) with a
+        pure-jnp gather oracle behind the same ``use_pallas`` flag.
+        """
+        from repro.kernels import ops as kops
+
+        cfg = self.cfg
+        assert not cfg.sliding_window, "engine demo path supports linear caches"
+        B, C = tokens.shape
+        n_phys, ps = kv_pages["k"].shape[1], kv_pages["k"].shape[2]
+        positions = lens[:, None] + jnp.arange(C)[None, :]
+        write_mask = jnp.arange(C)[None, :] < chunk_lens[:, None]
+        bidx = jnp.arange(B)
+        # logical position -> physical flat row via the block table
+        page_of = block_tables[bidx[:, None], positions // ps]     # (B, C)
+        flat_pos = page_of * ps + positions % ps
+        # padding positions scatter into the sink page (last physical page)
+        write_pos = jnp.where(write_mask, flat_pos, (n_phys - 1) * ps)
+        kv_lens = lens + chunk_lens
+
+        x = params["embed"][tokens]
+        x = constrain(x, ("batch", "seq", "embed"))
+
+        def body(carry, xs):
+            lp, ck, cv = xs                     # (n_phys, ps, Hkv, hd)
+            h = L.rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = L.qkv_project(lp["attn"], h, cfg, positions)
+            # masked lanes land in the SHARED sink page: write zeros, never
+            # lane values — idle rows carry NaN (all-masked softmax, same as
+            # the dense path) and a NaN parked in shared storage would
+            # poison other rows' masked-position 0*V products downstream
+            k_new = jnp.where(write_mask[:, :, None, None], k_new, 0)
+            v_new = jnp.where(write_mask[:, :, None, None], v_new, 0)
+            ck = ck.reshape(n_phys * ps, *ck.shape[2:]).at[write_pos].set(
+                k_new).reshape(ck.shape)
+            cv = cv.reshape(n_phys * ps, *cv.shape[2:]).at[write_pos].set(
+                v_new).reshape(cv.shape)
+            if C == 1:
+                attn = kops.paged_flash_decode_attention(
+                    q[:, 0], ck, cv, block_tables, kv_lens,
+                    use_pallas=use_pallas,
+                )[:, None]
+            else:
+                attn = kops.paged_prefill_chunk_attention(
+                    q, ck, cv, block_tables, kv_lens, lens,
+                    use_pallas=use_pallas,
+                )
+            y = carry + L.attn_output(lp["attn"], attn, cfg)
+            y = _block_ffn(lp, y, cfg)
+            return y, (ck, cv)
+
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["layers"], kv_pages["k"], kv_pages["v"])
+        )
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        last = jnp.maximum(chunk_lens - 1, 0)
+        x_last = x[bidx, last]                       # (B, D)
+        logits = self._unembed(params, x_last)
+        return constrain(logits, ("batch", "vocab")), {"k": nk, "v": nv}
+
     # -- cache/spec helpers ---------------------------------------------------
     def cache_struct(self, batch: int, seq_len: int):
         cfg = self.cfg

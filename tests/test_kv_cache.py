@@ -280,6 +280,101 @@ def test_kv_none_paths_unchanged():
 
 
 # ---------------------------------------------------------------------------
+# evictable-cache bounds: capacity cap + TTL
+# ---------------------------------------------------------------------------
+
+
+def _park_prefix(pool, rid, base, n_tokens=17):
+    """Allocate-and-release one request whose full blocks become cached."""
+    toks = list(range(base, base + n_tokens))
+    pool.register_request(rid, prompt_tokens=toks, prompt_len=n_tokens)
+    pool.allocate(rid, n_tokens)
+    pool.release(rid)
+
+
+def test_cache_capacity_bound_trims_lru():
+    pool = KVBlockPool(KVPoolConfig(
+        n_blocks=32, block_size=16, enable_prefix_cache=True, cache_max_blocks=2,
+    ))
+    for rid in range(4):
+        _park_prefix(pool, rid, base=1000 * rid)     # one cached block each
+    assert pool.cached_blocks == 2                   # bound holds
+    assert pool.stats.capacity_evictions == 2
+    assert pool.stats.evictions == 2
+    # the two OLDEST parked prefixes were trimmed, the two newest match
+    for rid, want in ((0, 0), (1, 0), (2, 16), (3, 16)):
+        pool.register_request(10 + rid, prompt_tokens=list(range(1000 * rid, 1000 * rid + 17)),
+                              prompt_len=17)
+        assert pool.match_prefix(10 + rid) == want, rid
+        pool.release(10 + rid)
+    pool.check_invariants()
+
+
+def test_cache_ttl_expires_idle_blocks():
+    pool = KVBlockPool(KVPoolConfig(
+        n_blocks=32, block_size=16, enable_prefix_cache=True, cache_ttl_s=1.0,
+    ))
+    pool.advance_clock(0.0)
+    _park_prefix(pool, 1, base=0)                    # parked at t=0
+    pool.advance_clock(0.5)
+    _park_prefix(pool, 2, base=500)                  # parked at t=0.5
+    assert pool.cached_blocks == 2
+    pool.advance_clock(1.2)                          # only req 1's expired
+    assert pool.cached_blocks == 1
+    assert pool.stats.ttl_evictions == 1
+    pool.register_request(11, prompt_tokens=list(range(17)), prompt_len=17)
+    assert pool.match_prefix(11) == 0                # expired: gone
+    pool.register_request(12, prompt_tokens=list(range(500, 517)), prompt_len=17)
+    assert pool.match_prefix(12) == 16               # fresh: still cached
+    pool.release(12)
+    pool.advance_clock(10.0)                         # everything expires
+    assert pool.cached_blocks == 0
+    assert pool.stats.evictions == pool.stats.ttl_evictions == 2
+    pool.check_invariants()
+
+
+def test_reacquired_block_resets_its_ttl():
+    """A cache hit un-parks the block; re-release re-stamps it, so hot
+    prefixes survive a TTL that would have expired their first parking."""
+    pool = KVBlockPool(KVPoolConfig(
+        n_blocks=32, block_size=16, enable_prefix_cache=True, cache_ttl_s=1.0,
+    ))
+    pool.advance_clock(0.0)
+    _park_prefix(pool, 1, base=0)
+    pool.advance_clock(0.9)
+    pool.register_request(2, prompt_tokens=list(range(17)), prompt_len=17)
+    assert pool.match_prefix(2) == 16                # re-referenced at 0.9
+    pool.release(2)                                  # re-parked at 0.9
+    pool.advance_clock(1.5)                          # 0.6 idle < ttl
+    pool.register_request(3, prompt_tokens=list(range(17)), prompt_len=17)
+    assert pool.match_prefix(3) == 16
+    pool.release(3)
+    pool.check_invariants()
+
+
+def test_eviction_counters_stay_consistent():
+    """Total evictions always equals the sum of the per-cause counters, and
+    the eviction order is LRU across causes."""
+    pool = KVBlockPool(KVPoolConfig(
+        n_blocks=8, block_size=16, enable_prefix_cache=True,
+        cache_max_blocks=3, cache_ttl_s=5.0,
+    ))
+    pool.advance_clock(0.0)
+    for rid in range(4):                             # 4 parks, cap 3 -> 1 trim
+        _park_prefix(pool, rid, base=1000 * rid)
+    assert (pool.stats.capacity_evictions, pool.cached_blocks) == (1, 3)
+    pool.advance_clock(6.0)                          # all 3 expire
+    assert pool.stats.ttl_evictions == 3
+    _park_prefix(pool, 7, base=7000)                 # re-park one block
+    pool.allocate(8, 8 * 16)                         # needs all 8: demand-evict it
+    assert pool.stats.demand_evictions == 1
+    s = pool.stats
+    assert s.evictions == s.demand_evictions + s.capacity_evictions + s.ttl_evictions == 5
+    pool.release(8)
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # property tests: pool invariants under random op sequences
 # ---------------------------------------------------------------------------
 
@@ -334,6 +429,62 @@ def test_alloc_release_cycle_conserves_blocks(seq):
     assert pool.used_blocks == 0
     assert len(pool.free_blocks) == 64
     pool.check_invariants()
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["alloc", "release", "match", "tick"]),
+            st.integers(min_value=0, max_value=7),     # req id
+            st.integers(min_value=1, max_value=40),    # token count / ticks
+        ),
+        max_size=60,
+    ),
+    cache_max=st.one_of(st.none(), st.integers(min_value=0, max_value=6)),
+    ttl=st.one_of(st.none(), st.floats(min_value=0.1, max_value=2.0)),
+)
+def test_block_table_invariants_under_random_ops(ops, cache_max, ttl):
+    """The paged engine addresses physical pages straight through the pool's
+    tables, so the block-table invariants are load-bearing: every live token
+    maps into exactly one block slot, no block is referenced by two live
+    tables unless it is sealed (prefix-shared), tables never alias a block
+    twice, and the bounded cache never exceeds its cap.  Shared prompts are
+    deliberately drawn from TWO prefix families so matches collide."""
+    pool = KVBlockPool(KVPoolConfig(
+        n_blocks=24, block_size=8, bytes_per_token=4, enable_prefix_cache=True,
+        cache_max_blocks=cache_max, cache_ttl_s=ttl,
+    ))
+    # two shared prefix families -> rids 0-3 and 4-7 can share blocks
+    prompts = {rid: list(range((rid // 4) * 1000, (rid // 4) * 1000 + 40))
+               for rid in range(8)}
+    now = 0.0
+    for op, rid, n in ops:
+        if op == "alloc":
+            if rid not in pool._reg:
+                pool.register_request(rid, prompt_tokens=prompts[rid], prompt_len=40)
+            if pool.can_allocate(rid, n):
+                pool.allocate(rid, n)
+        elif op == "release":
+            pool.release(rid)
+        elif op == "tick":
+            now += n * 0.05
+            pool.advance_clock(now)
+        else:
+            if rid not in pool.tables:
+                pool.register_request(rid, prompt_tokens=prompts[rid], prompt_len=40)
+                pool.match_prefix(rid)
+        pool.check_invariants()
+        # explicit restatement of the paged-engine contract (check_invariants
+        # also asserts these; keep the load-bearing ones visible here)
+        holders = {}
+        for req_id, table in pool.tables.items():
+            assert len(set(table)) == len(table)
+            for bid in table:
+                holders.setdefault(bid, []).append(req_id)
+        for bid, hs in holders.items():
+            if len(hs) > 1:
+                assert bid in pool._hash_of, (bid, hs)   # shared => sealed
 
 
 def test_pool_for_model_prefix_cache_flag():
