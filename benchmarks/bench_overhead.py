@@ -1,6 +1,8 @@
 """§3.1.4 scheduling-overhead claim: the static-key max-heap is O(k log n)
 per round vs the naive full-recompute O(n) pop — measured wall time across
-queue depths."""
+queue depths.  Also measures the full scheduler round's Python overhead
+(schedule + on_batch_done, no execution) across decode-population sizes —
+the cost that sits inside the serve loop's host bubble every round."""
 from __future__ import annotations
 
 import time
@@ -10,6 +12,7 @@ import numpy as np
 from benchmarks.common import fmt_table, save_json
 from repro.core.policies import NaiveAgingQueue, make_policy
 from repro.core.request import Request
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 
 
 def bench_queue(n: int, k: int, reps: int = 5):
@@ -51,6 +54,35 @@ def bench_queue(n: int, k: int, reps: int = 5):
     return min(heap_t) * 1e6, min(naive_t) * 1e6   # us per round
 
 
+def bench_scheduler_round(n_decoding: int, rounds: int = 50, reps: int = 3):
+    """Per-round schedule() + on_batch_done() wall time with ``n_decoding``
+    ongoing decode requests (the steady-state serving population; budget and
+    max_seqs scale with it, as in a large-batch decode regime).  No
+    execution — this is pure scheduler bookkeeping, i.e. host-bubble time."""
+    best = float("inf")
+    for _ in range(reps):
+        sched = ChunkedPrefillScheduler(SchedulerConfig(
+            policy="fcfs", token_budget=n_decoding + 64,
+            max_seqs=n_decoding + 64,
+        ))
+        reqs = [
+            Request(prompt_len=1, max_new_tokens=10**9, arrival_time=float(i))
+            for i in range(n_decoding)
+        ]
+        for r in reqs:
+            sched.submit(r)
+        # one round drains every 1-token prefill: population is all-decoding
+        b = sched.schedule(0.0)
+        sched.on_batch_done(b, 0.0)
+        assert len(sched.decoding) == n_decoding
+        t0 = time.perf_counter()
+        for i in range(rounds):
+            b = sched.schedule(float(i))
+            sched.on_batch_done(b, float(i))
+        best = min(best, (time.perf_counter() - t0) / rounds)
+    return best * 1e6    # us per round
+
+
 def main(quick: bool = False):
     rows = []
     out = {}
@@ -70,7 +102,21 @@ def main(quick: bool = False):
     print(f"  heap per-round cost grew {growth:.1f}x for a "
           f"{ns[-1] // ns[0]}x deeper queue (log-like), naive grew "
           f"{out[ns[-1]]['naive_us'] / out[ns[0]]['naive_us']:.1f}x (linear)")
-    save_json("bench_overhead.json", {str(k): v for k, v in out.items()})
+    round_rows = []
+    round_out = {}
+    round_sizes = (1_000, 10_000) if quick else (1_000, 10_000, 100_000)
+    for n in round_sizes:
+        us = bench_scheduler_round(n, rounds=20 if n >= 100_000 else 50)
+        round_out[n] = us
+        round_rows.append([f"{n:,}", f"{us:,.1f}"])
+    print(fmt_table(
+        "Scheduler round overhead — schedule()+on_batch_done() vs decode population",
+        ["Decoding n", "Round (us)"], round_rows,
+    ))
+    save_json("bench_overhead.json", {
+        "queue": {str(k): v for k, v in out.items()},
+        "scheduler_round_us": {str(k): v for k, v in round_out.items()},
+    })
     return out
 
 

@@ -1,0 +1,179 @@
+"""Serving hot-path throughput: synchronous vs pipelined round loop.
+
+Measures, on one fixed seeded workload through the REAL JAX engine:
+  * output tokens/s and total (prefill+decode) tokens/s,
+  * per-round host-bubble time — the gap between the device finishing round
+    N and the host dispatching round N+1.  The synchronous loop pays
+    scheduling, aging/VTC bookkeeping, KV booking, staging AND the blocking
+    token readback inside that gap; the pipelined loop overlaps all of the
+    scheduling work with round N's execution and drains the readback as an
+    async copy one round late, so only staging+dispatch remain.
+
+Grid: {sync, pipelined} x {dense, paged} (pure-jnp oracle math), plus — with
+``--pallas`` — a ``pages_per_tile`` sweep through the paged Pallas kernels
+(interpret mode on CPU: correctness/plumbing, not kernel speed; the same
+program compiles to Mosaic on TPU).
+
+Writes ``BENCH_throughput.json`` at the repo root (the perf-trajectory
+anchor: every future PR can compare against these numbers) and prints the
+gate: pipelined mean host-bubble < sync mean host-bubble, identical greedy
+outputs.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table
+from repro.configs import tiny_config
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.workload import WorkloadSpec, attach_prompt_tokens, sharegpt_like
+
+ROOT_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_throughput.json")
+
+
+def _workload(quick: bool, model_cfg):
+    # arrivals all at t=0: admission is round-independent, so the sync and
+    # pipelined loops see the SAME round structure and the output-identity
+    # gate is exact (round durations differ between the loops; arrival-timed
+    # admission would couple scheduling to them)
+    spec = WorkloadSpec(
+        n_requests=8 if quick else 24,
+        inter_arrival_s=0.0,
+        max_context=64 if quick else 128,
+        max_new_tokens=8 if quick else 24,
+        seed=12,
+    )
+    reqs = sharegpt_like(spec)
+    attach_prompt_tokens(reqs, model_cfg.vocab_size, seed=12)
+    return reqs
+
+
+def run_config(name: str, *, pipelined: bool, paged: bool, quick: bool,
+               use_pallas: bool = False, pages_per_tile: int = 1,
+               reps: int = 2):
+    """Best-of-``reps`` (by wall time, like bench_overhead): a shared CI box
+    can stall any single run; outputs must be identical across reps anyway."""
+    best = None
+    for _ in range(reps):
+        r = _run_once(name, pipelined=pipelined, paged=paged, quick=quick,
+                      use_pallas=use_pallas, pages_per_tile=pages_per_tile)
+        if best is not None:
+            assert r["outputs"] == best["outputs"], f"{name}: nondeterministic"
+        if best is None or r["wall_s"] < best["wall_s"]:
+            best = r
+    return best
+
+
+def _run_once(name: str, *, pipelined: bool, paged: bool, quick: bool,
+              use_pallas: bool = False, pages_per_tile: int = 1):
+    model_cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(model_cfg, EngineConfig(
+        n_slots=8, max_context=256, paged_kv=paged, pipelined=pipelined,
+        use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+        chunk_buckets=(1, 16, 32, 64),
+    ))
+    eng.warmup()      # steady-state: bubbles/walls must not include jit
+    reqs = _workload(quick, model_cfg)
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=64, max_seqs=8)
+    )
+    t0 = time.perf_counter()
+    res = serve(reqs, sched, eng)
+    wall_s = time.perf_counter() - t0
+    out_tokens = sum(r.generated for r in reqs)
+    total_tokens = sum(r.prompt_len + r.generated for r in reqs)
+    bubbles = np.asarray(res.host_bubble_ms or [0.0])
+    return {
+        "name": name,
+        "pipelined": pipelined,
+        "paged": paged,
+        "use_pallas": use_pallas,
+        "pages_per_tile": pages_per_tile,
+        "finished": res.report.n_finished,
+        "rounds": res.rounds,
+        "wall_s": wall_s,
+        "out_tok_s": out_tokens / wall_s,
+        "total_tok_s": total_tokens / wall_s,
+        "bubble_ms_mean": float(bubbles.mean()),
+        "bubble_ms_p50": float(np.percentile(bubbles, 50)),
+        "bubble_ms_p99": float(np.percentile(bubbles, 99)),
+        # keyed by workload POSITION: req_ids are globally allocated and
+        # differ between runs of the same seeded workload
+        "outputs": [res.outputs[r.req_id] for r in reqs],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke settings (tiny workload)")
+    ap.add_argument("--pallas", action="store_true",
+                    help="also sweep pages_per_tile through the paged Pallas "
+                         "kernels (interpret mode on CPU)")
+    ap.add_argument("--reps", type=int, default=2,
+                    help="best-of-N runs per config (noise robustness)")
+    args = ap.parse_args(argv)
+
+    grid = [
+        ("sync/dense", False, False),
+        ("sync/paged", False, True),
+        ("pipelined/dense", True, False),
+        ("pipelined/paged", True, True),
+    ]
+    results = [
+        run_config(name, pipelined=p, paged=g, quick=args.quick,
+                   reps=args.reps)
+        for name, p, g in grid
+    ]
+    if args.pallas:
+        for ppt in (1, 2, 4):
+            results.append(run_config(
+                f"pipelined/paged/pallas/ppt={ppt}", pipelined=True,
+                paged=True, quick=args.quick, use_pallas=True,
+                pages_per_tile=ppt, reps=args.reps,
+            ))
+
+    rows = [
+        [r["name"], r["finished"], r["rounds"], f"{r['out_tok_s']:.1f}",
+         f"{r['total_tok_s']:.1f}", f"{r['bubble_ms_mean']:.3f}",
+         f"{r['bubble_ms_p99']:.3f}"]
+        for r in results
+    ]
+    print(fmt_table(
+        "Serve throughput — sync vs pipelined round loop (real JAX engine)",
+        ["config", "done", "rounds", "out tok/s", "tot tok/s",
+         "bubble mean ms", "bubble p99 ms"],
+        rows,
+    ))
+
+    by = {r["name"]: r for r in results}
+    # gates: same greedy outputs, smaller host bubble, more tokens/s
+    for layout in ("dense", "paged"):
+        s, p = by[f"sync/{layout}"], by[f"pipelined/{layout}"]
+        identical = s["outputs"] == p["outputs"]
+        gain = p["out_tok_s"] / s["out_tok_s"] - 1.0
+        shrink = 1.0 - p["bubble_ms_mean"] / max(s["bubble_ms_mean"], 1e-9)
+        print(f"  {layout}: outputs identical={identical}  "
+              f"bubble {s['bubble_ms_mean']:.3f} -> {p['bubble_ms_mean']:.3f} ms "
+              f"({shrink:+.1%})  throughput {gain:+.1%}")
+        assert identical, f"{layout}: pipelined outputs diverged from sync"
+
+    payload = {
+        "workload": {"quick": args.quick, "seed": 12},
+        "results": [{k: v for k, v in r.items() if k != "outputs"}
+                    for r in results],
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"  wrote {os.path.normpath(ROOT_JSON)}")
+    return results
+
+
+if __name__ == "__main__":
+    main()

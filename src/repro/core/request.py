@@ -95,6 +95,19 @@ class Request:
         self.prefill_done = 0
         self.preemptions += 1
 
+    def patch_token(self, i: int, tok: int) -> None:
+        """Pipelined engines deliver token VALUES one round late: the round's
+        bookkeeping (``receive_token``) runs against a placeholder while the
+        device round executes, and the real id is patched in here once the
+        async host copy drains.  If a preemption already folded the
+        placeholder into the prompt (recompute semantics), the folded copy is
+        fixed too — folded token ``i`` lives at prompt position
+        ``original_prompt_len + i`` and the fold always happens before the
+        re-prefill of that position is staged."""
+        self.output_tokens[i] = tok
+        if i < self.folded_tokens and self.prompt_tokens is not None:
+            self.prompt_tokens[self.prompt_len - self.folded_tokens + i] = tok
+
     def receive_token(self, tok: int = 0, now: float = 0.0) -> None:
         assert self.state == RequestState.DECODING
         self.generated += 1

@@ -15,8 +15,9 @@ The scheduler is execution-agnostic: it emits a ScheduledBatch; the engine
 """
 from __future__ import annotations
 
+from itertools import islice
 from dataclasses import dataclass, field
-from typing import TYPE_CHECKING, List, Optional, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -130,7 +131,10 @@ class ChunkedPrefillScheduler:
             self.queue: PrefillQueue = make_policy(
                 cfg.policy, alpha=cfg.alpha, beta=cfg.beta
             )
-        self.decoding: List[Request] = []
+        # decoding membership is maintained INCREMENTALLY (insert on prefill
+        # completion, O(1) pop on finish/preemption) — never rebuilt with a
+        # full-population comprehension inside the per-round hot path
+        self._decoding: Dict[int, Request] = {}
         self.stats = SchedulerStats()
         self._round = 0
         self._slot_binder = None
@@ -195,8 +199,14 @@ class ChunkedPrefillScheduler:
         self.queue.add(req)
         return True
 
+    @property
+    def decoding(self) -> List[Request]:
+        """Ongoing decode requests in prefill-completion order (a snapshot —
+        membership itself lives in an insertion-ordered dict)."""
+        return list(self._decoding.values())
+
     def has_work(self) -> bool:
-        return len(self.queue) > 0 or len(self.decoding) > 0
+        return len(self.queue) > 0 or len(self._decoding) > 0
 
     # -- one scheduling round -------------------------------------------------
     def schedule(self, now: float) -> ScheduledBatch:
@@ -215,9 +225,10 @@ class ChunkedPrefillScheduler:
         # KV pool every decode token gets its block here (preempting the
         # youngest block-holder under pressure) — a decode is never executed
         # with unbooked memory.
-        self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
-        decode_candidates = self.decoding[: min(len(self.decoding), cfg.max_seqs,
-                                                cfg.token_budget)]
+        decode_candidates = list(islice(
+            self._decoding.values(),
+            min(len(self._decoding), cfg.max_seqs, cfg.token_budget),
+        ))
         scheduled_ids: set = set()      # committed this round: preemption-immune
         if self._books():
             batch.decode_reqs = self._book_decode_blocks(
@@ -264,8 +275,7 @@ class ChunkedPrefillScheduler:
         # until every queued slot-holder has been seen, then stop (never
         # starve a slot-holder, but don't walk a 10k-request backlog either).
         slots_missed = False
-        decoding_ids = {r.req_id for r in self.decoding}
-        bound_left = len(self._bound_slots - decoding_ids)
+        bound_left = len(self._bound_slots - self._decoding.keys())
         MAX_BLOCK_SCAN = 8  # bounded lookahead after APC blocks: keeps O(k log n)
         while committed < cfg.token_budget and seq_slots > 0 and blocks < MAX_BLOCK_SCAN:
             req = self.queue.pop()
@@ -419,7 +429,7 @@ class ChunkedPrefillScheduler:
         one, which makes eviction thrash-free (total order on arrivals)."""
         pool = self.kv_pool
         best: Optional[Request] = None
-        for r in list(self.decoding) + list(self.queue.requests()):
+        for r in list(self._decoding.values()) + list(self.queue.requests()):
             if r.req_id == requester.req_id or r.req_id in scheduled_ids:
                 continue
             if tenant is not None and r.tenant != tenant:
@@ -446,7 +456,7 @@ class ChunkedPrefillScheduler:
         self.stats.preemptions += 1
         batch.preempted.append(victim)
         if was_decoding:
-            self.decoding = [r for r in self.decoding if r.req_id != victim.req_id]
+            self._decoding.pop(victim.req_id, None)
             self.queue.add(victim)
             if self.fairness is not None:
                 self.fairness.on_preempt(victim)
@@ -466,15 +476,15 @@ class ChunkedPrefillScheduler:
                 req.prefill_end_time = now
                 req.receive_token(req.next_token, now)
                 if req.state == RequestState.DECODING:
-                    self.decoding.append(req)
+                    self._decoding[req.req_id] = req
             else:
                 # back to the queue with updated priority (O(log n))
                 self.queue.update(req)
         for req in batch.decode_reqs:
             req.receive_token(req.next_token, now)
-        self.decoding = [r for r in self.decoding if r.state == RequestState.DECODING]
         for req in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
             if req.state == RequestState.FINISHED:
+                self._decoding.pop(req.req_id, None)
                 self._bound_slots.discard(req.req_id)
                 if self._slot_releaser is not None:
                     # release here too (idempotent): callers driving the

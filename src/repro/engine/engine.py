@@ -12,14 +12,21 @@ Continuous batching with PAGED KV storage (vLLM layout, the default):
     resident tokens, not ``n_slots x max_context``; prefix-cache hits need no
     payload copy (the matched blocks' pages are still resident); the last
     page is a write sink for padding lanes.
-  * One jitted ``chunked_step_paged`` per scheduling round executes the
-    ENTIRE mixed batch — decode slots advance by 1 token (via the paged
-    flash-decode kernel when the round is a pure single-token bucket),
-    prefill slots by their scheduled chunk (paged chunked-prefill kernel),
-    idle slots by 0 — under static bucketed shapes.
-  * ``EngineConfig(paged_kv=False)`` keeps the dense slot cache
-    ``(layers, n_slots, max_context + 1, ...)`` for A/B: greedy-sampled
-    outputs are identical between the two layouts.
+  * One jitted step per scheduling round executes the ENTIRE mixed batch —
+    decode slots advance by 1 token, prefill slots by their scheduled chunk,
+    idle slots by 0 — under static bucketed shapes.  The step FUSES the
+    cache-length update and token sampling (one dispatch per round, no
+    follow-up host ops) and keeps the sampled tokens in a device-resident
+    ``last_token`` buffer that the NEXT round's step consumes directly, so
+    decode can proceed round-to-round without the host ever observing the
+    token values.
+  * PIPELINED serving (``EngineConfig(pipelined=True)``, the default):
+    ``serve`` overlaps round N's device execution with the host's
+    scheduling/aging/VTC/KV booking for round N+1.  The host readback of
+    sampled ids becomes an async copy drained one round late and is used
+    only for delivered outputs, length accounting, and preemption folds —
+    greedy outputs are bit-identical to the synchronous engine
+    (``pipelined=False``), which is kept for A/B.
   * The scheduler under test is the real ``repro.core`` code; latencies are
     wall-clock, so the LPRS predictor can be trained on real measurements.
 """
@@ -51,8 +58,37 @@ class EngineConfig:
     use_pallas: bool = False          # True: Pallas kernels (interpret on CPU)
     paged_kv: bool = True             # block-table pages; False = dense slots
     kv_block_size: int = 16           # page size when the engine owns its pool
+    pages_per_tile: int = 1           # pages DMA-gathered per paged-kernel tile
+    pipelined: bool = True            # overlap schedule(N+1) with execute(N)
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     seed: int = 0
+
+
+def _pow2_bucket(n: int) -> int:
+    """Smallest power of two >= n: the dirty-row block-table scatter pads its
+    row count to these buckets so only O(log n_slots) shapes ever compile
+    (warmup pre-compiles exactly this set)."""
+    k = 1
+    while k < n:
+        k <<= 1
+    return k
+
+
+@dataclass
+class InflightRound:
+    """One dispatched-but-undrained round: the device is executing (or has
+    finished) it while the host schedules the next one.  ``toks`` is the
+    device array of sampled ids; ``sampled`` names the (request, slot) pairs
+    whose token this round actually produced (decodes + prefill-completing
+    chunks).  ``out_index`` records, per request, which position of
+    ``output_tokens`` received this round's placeholder (filled by the serve
+    loop after ``on_batch_done``); ``drain`` patches the real ids there."""
+    toks: jax.Array
+    sampled: List[Tuple[Request, int]]
+    t_dispatch: float
+    out_index: Dict[int, int] = field(default_factory=dict)
+    finished: List[Request] = field(default_factory=list)
+    prefill_ids: set = field(default_factory=set)   # this round's prefill reqs
 
 
 class JAXEngine:
@@ -70,7 +106,11 @@ class JAXEngine:
         B = self.cfg.n_slots
         self.slot_of: Dict[int, int] = {}          # req_id -> slot
         self.free_slots = list(range(B - 1, -1, -1))
-        self.last_token = np.zeros((B,), np.int64)
+
+        # device-idle gap before each dispatch (the host bubble the pipeline
+        # is built to close); fed by execute()/dispatch()
+        self.bubble_ms: List[float] = []
+        self._t_ready: Optional[float] = None
 
         self.kv_pool: Optional[KVBlockPool] = kv_pool
         # the engine books blocks itself only while it owns a private pool;
@@ -93,6 +133,22 @@ class JAXEngine:
         dt = jnp.dtype(model_cfg.param_dtype)
         impl = self.model.impl
         use_pallas = cfg.use_pallas
+        pages_per_tile = cfg.pages_per_tile
+
+        def _inject_last(tokens, use_last, last_token):
+            """Decode lanes consume the device-resident last sampled token
+            (the host staged a 0 there — it may not know the id yet)."""
+            col0 = jnp.arange(tokens.shape[1])[None, :] == 0
+            return jnp.where(use_last[:, None] & col0,
+                             last_token[:, None], tokens)
+
+        def _fused_tail(logits, cache, lens, chunk_lens, last_token,
+                        sample_mask, rng):
+            """Sampling + length update + device token feedback, fused into
+            the SAME dispatch as the forward pass (no follow-up host ops)."""
+            toks = sample_tokens(logits, rng, self.cfg.sampler)
+            new_last = jnp.where(sample_mask, toks, last_token)
+            return toks, cache, lens + chunk_lens, new_last
 
         if cfg.paged_kv:
             bs = self.kv_pool.cfg.block_size
@@ -103,29 +159,44 @@ class JAXEngine:
             self.max_pages = math.ceil(S / bs) + 1
             kv_shape = (model_cfg.n_layers, self._n_phys, bs,
                         model_cfg.n_kv_heads, hd)
-            self.block_tables = np.full((B, self.max_pages), self._sink, np.int32)
+            # device-resident block tables, refreshed with DIRTY-SLOT
+            # incremental updates; _bt_host mirrors exactly what the device
+            # holds, _bt_len tracks per-slot entries already uploaded
+            self._bt_host = np.full((B, self.max_pages), self._sink, np.int32)
+            self._bt_len = np.zeros((B,), np.int32)
+            self._bt_dirty: set = set()
+            self.block_tables = jnp.asarray(self._bt_host)
 
-            def step(params, tokens, cache, lens, chunk_lens, block_tables, rng):
+            def step(params, tokens, cache, lens, chunk_lens, block_tables,
+                     last_token, use_last, sample_mask, rng):
+                tokens = _inject_last(tokens, use_last, last_token)
                 logits, cache = impl.chunked_step_paged(
                     params, tokens, cache, lens, chunk_lens, block_tables,
-                    use_pallas=use_pallas,
+                    use_pallas=use_pallas, pages_per_tile=pages_per_tile,
                 )
-                toks = sample_tokens(logits, rng, self.cfg.sampler)
-                return toks, cache
+                return _fused_tail(logits, cache, lens, chunk_lens,
+                                   last_token, sample_mask, rng)
+
+            donate = (2, 3, 6)     # cache, lens, last_token
         else:
             kv_shape = (model_cfg.n_layers, B, S + 1, model_cfg.n_kv_heads, hd)
             self.block_tables = None
 
-            def step(params, tokens, cache, lens, chunk_lens, rng):
+            def step(params, tokens, cache, lens, chunk_lens,
+                     last_token, use_last, sample_mask, rng):
+                tokens = _inject_last(tokens, use_last, last_token)
                 logits, cache = impl.chunked_step(
                     params, tokens, cache, lens, chunk_lens, use_pallas=use_pallas
                 )
-                toks = sample_tokens(logits, rng, self.cfg.sampler)
-                return toks, cache
+                return _fused_tail(logits, cache, lens, chunk_lens,
+                                   last_token, sample_mask, rng)
+
+            donate = (2, 3, 5)     # cache, lens, last_token
 
         self.cache = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
         self.lens = jnp.zeros((B,), jnp.int32)
-        self._step = jax.jit(step, donate_argnums=(2,))
+        self.last_token = jnp.zeros((B,), jnp.int32)   # device-resident
+        self._step = jax.jit(step, donate_argnums=donate)
 
     def bind_kv_pool(self, kv_pool: Optional[KVBlockPool]) -> None:
         """Adopt the serve loop's shared pool: the physical page array is
@@ -144,18 +215,29 @@ class JAXEngine:
         """Compile every bucket shape once so profiling sees steady-state
         latencies, not jit compilation (the paper's 'cleaned' samples)."""
         B = self.cfg.n_slots
+        off = jnp.zeros((B,), jnp.bool_)
         for C in self.cfg.chunk_buckets:
             tokens = jnp.ones((B, C), jnp.int32)
             chunk_lens = jnp.zeros((B,), jnp.int32).at[0].set(1)
             self._rng, sub = jax.random.split(self._rng)
             args = (self.params, tokens, self.cache, self.lens, chunk_lens)
             if self.cfg.paged_kv:
-                args += (jnp.asarray(self.block_tables),)
-            toks, self.cache = self._step(*args, sub)
+                args += (self.block_tables,)
+            args += (self.last_token, off, off)
+            toks, self.cache, self.lens, self.last_token = self._step(*args, sub)
             jax.block_until_ready(toks)
         # reset cache/lens state touched by the dummy rounds (paged writes all
         # land in the sink page, which is never read back)
         self.lens = jnp.zeros((B,), jnp.int32)
+        if self.cfg.paged_kv:
+            # pre-compile every dirty-row scatter bucket the runtime can hit
+            # (slot 0's current mirror row rewritten in place — a data no-op)
+            for k in sorted({_pow2_bucket(n) for n in range(1, B + 1)}):
+                idx = np.zeros((k,), np.int32)
+                self.block_tables = self.block_tables.at[jnp.asarray(idx)].set(
+                    jnp.asarray(self._bt_host[idx])
+                )
+            jax.block_until_ready(self.block_tables)
 
     # -- slot management -------------------------------------------------------
     def acquire_slot(self, req: Request) -> bool:
@@ -176,7 +258,6 @@ class JAXEngine:
             return False
         slot = self.free_slots.pop()
         self.slot_of[req.req_id] = slot
-        self.last_token[slot] = 0
         if (self.kv_pool is not None and req.prefill_done == 0
                 and not self.kv_pool.tables.get(req.req_id)):
             matched = self.kv_pool.match_prefix(req.req_id, require_payload=True)
@@ -184,7 +265,9 @@ class JAXEngine:
                 req.prefill_done = matched
         self.lens = self.lens.at[slot].set(req.prefill_done)
         if self.cfg.paged_kv:
-            self.block_tables[slot, :] = self._sink
+            self._bt_host[slot, :] = self._sink
+            self._bt_len[slot] = 0
+            self._bt_dirty.add(slot)
         elif req.prefill_done > 0 and self.kv_pool is not None:
             self._restore_prefix_dense(req, slot)
         return True
@@ -196,7 +279,9 @@ class JAXEngine:
         if slot is not None:
             self.free_slots.append(slot)
             if self.cfg.paged_kv:
-                self.block_tables[slot, :] = self._sink
+                self._bt_host[slot, :] = self._sink
+                self._bt_len[slot] = 0
+                self._bt_dirty.add(slot)
         if self._owns_pool:
             self.kv_pool.release(req.req_id)
 
@@ -234,8 +319,10 @@ class JAXEngine:
     def capture_sealed(self, req: Request) -> None:
         """Make newly sealed (full, content-addressed) prompt blocks
         restorable by future prefix hits.  Dense layout: park the K/V arrays
-        host-side.  Paged layout: the data already lives at the block's
-        physical page — a residency marker suffices, no copy."""
+        (slices of the round's output cache — an async device computation, no
+        host sync even mid-pipeline).  Paged layout: the data already lives
+        at the block's physical page — a residency marker suffices, no
+        copy."""
         kv_pool = self.kv_pool
         if kv_pool is None:
             return
@@ -259,9 +346,12 @@ class JAXEngine:
         return self.cfg.chunk_buckets[-1]
 
     def _sync_block_tables(self, batch: ScheduledBatch) -> None:
-        """Refresh each scheduled request's device block-table row from the
-        pool (the scheduler — or the engine itself when it owns the pool —
-        booked this round's blocks before execution)."""
+        """Refresh scheduled requests' device block-table rows from the pool
+        with DIRTY-SLOT granularity: per-request tables only ever APPEND
+        between binds, so each row uploads only when it changed (new page
+        crossed, fresh bind, release) — one ``.at[slots].set`` over the dirty
+        rows instead of re-uploading the whole (B, max_pages) table every
+        round."""
         pool = self.kv_pool
         if self._owns_pool:
             for r, c in batch.prefill_chunks:
@@ -271,58 +361,110 @@ class JAXEngine:
         for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
             slot = self.slot_of[r.req_id]
             table = pool.tables.get(r.req_id, [])
-            assert len(table) <= self.max_pages, (
-                f"req {r.req_id}: {len(table)} blocks > {self.max_pages} pages"
+            n = len(table)
+            assert n <= self.max_pages, (
+                f"req {r.req_id}: {n} blocks > {self.max_pages} pages"
             )
-            row = self.block_tables[slot]
-            row[: len(table)] = table
-            row[len(table):] = self._sink
+            seen = int(self._bt_len[slot])
+            if slot in self._bt_dirty:
+                self._bt_host[slot, :n] = table
+                self._bt_host[slot, n:] = self._sink
+            elif n > seen:
+                self._bt_host[slot, seen:n] = table[seen:]
+                self._bt_dirty.add(slot)
+            self._bt_len[slot] = n
+        if self._bt_dirty:
+            rows = sorted(self._bt_dirty)
+            # pad the row count to a power-of-2 bucket (repeating one row —
+            # duplicate scatter indices carry identical data) so the update
+            # only ever compiles the shapes warmup pre-compiled
+            k = _pow2_bucket(len(rows))
+            rows = np.asarray(rows + [rows[0]] * (k - len(rows)), np.int32)
+            self.block_tables = self.block_tables.at[jnp.asarray(rows)].set(
+                jnp.asarray(self._bt_host[rows])
+            )
+            self._bt_dirty.clear()
 
-    def execute(self, batch: ScheduledBatch) -> float:
-        """Run one mixed round; returns wall latency in ms."""
+    def _stage(self, batch: ScheduledBatch):
+        """Host-side staging for one round: token ids (int32 — half the
+        host->device width of the seed engine's int64 staging), per-slot
+        chunk lengths, and the two masks the fused step needs: which slots
+        consume the device-resident ``last_token`` (decodes) and which slots'
+        sampled token is meaningful this round (decodes + chunks that finish
+        their prefill)."""
         B = self.cfg.n_slots
         max_chunk = max(
             [c for _, c in batch.prefill_chunks] + [1 if batch.decode_reqs else 0]
         )
         C = self._bucket(max_chunk)
-        tokens = np.zeros((B, C), np.int64)
+        tokens = np.zeros((B, C), np.int32)
         chunk_lens = np.zeros((B,), np.int32)
+        use_last = np.zeros((B,), np.bool_)
+        sample_mask = np.zeros((B,), np.bool_)
+        sampled: List[Tuple[Request, int]] = []
 
         for req in batch.decode_reqs:
             slot = self.slot_of[req.req_id]
-            tokens[slot, 0] = self.last_token[slot]
             chunk_lens[slot] = 1
+            use_last[slot] = True
+            sample_mask[slot] = True
+            sampled.append((req, slot))
         for req, c in batch.prefill_chunks:
             slot = self.slot_of[req.req_id]
             chunk = req.prompt_tokens[req.prefill_done : req.prefill_done + c]
             tokens[slot, : len(chunk)] = chunk
             chunk_lens[slot] = len(chunk)
+            if req.remaining_prefill - c <= 0:  # prefill completes this round
+                sample_mask[slot] = True
+                sampled.append((req, slot))
+        return tokens, chunk_lens, use_last, sample_mask, sampled
 
+    def dispatch(self, batch: ScheduledBatch) -> InflightRound:
+        """Stage and launch one round WITHOUT waiting for it: the jitted step
+        (forward + sampling + length update, one dispatch) runs while the
+        caller goes back to scheduling.  The sampled-token readback starts as
+        an async device->host copy; ``drain`` collects it one round later."""
+        tokens, chunk_lens, use_last, sample_mask, sampled = self._stage(batch)
         args = (self.params, jnp.asarray(tokens), self.cache, self.lens,
                 jnp.asarray(chunk_lens))
         if self.cfg.paged_kv:
             self._sync_block_tables(batch)
-            args += (jnp.asarray(self.block_tables),)
-
+            args += (self.block_tables,)
+        args += (self.last_token, jnp.asarray(use_last), jnp.asarray(sample_mask))
         self._rng, sub = jax.random.split(self._rng)
-        t0 = time.perf_counter()
-        toks, self.cache = self._step(*args, sub)
-        toks = np.asarray(jax.block_until_ready(toks))
-        wall_ms = (time.perf_counter() - t0) * 1e3
+        t_dispatch = time.perf_counter()
+        if self._t_ready is not None:
+            self.bubble_ms.append((t_dispatch - self._t_ready) * 1e3)
+        toks, self.cache, self.lens, self.last_token = self._step(*args, sub)
+        toks.copy_to_host_async()
+        return InflightRound(toks=toks, sampled=sampled, t_dispatch=t_dispatch)
 
-        self.lens = self.lens + jnp.asarray(chunk_lens)
-        # next_token carries the sampled id into receive_token so delivered
-        # outputs — and any preemption fold — hold the REAL token values
-        for req in batch.decode_reqs:
-            slot = self.slot_of[req.req_id]
-            self.last_token[slot] = toks[slot]
-            req.next_token = int(toks[slot])
-        for req, c in batch.prefill_chunks:
-            slot = self.slot_of[req.req_id]
-            if req.remaining_prefill - c <= 0:     # prefill completes this round
-                self.last_token[slot] = toks[slot]
-                req.next_token = int(toks[slot])
+    def drain(self, inflight: InflightRound) -> float:
+        """Block until the round's sampled ids are host-side, then patch the
+        REAL token values into the requests' bookkeeping (placeholders were
+        recorded by ``on_batch_done`` while the round executed): delivered
+        outputs, ``next_token``, and — via ``patch_token`` — any copy a
+        preemption already folded into a recompute prompt.  Returns
+        dispatch->drain wall ms (device time plus whatever host work it
+        overlapped)."""
+        toks = np.asarray(inflight.toks)
+        self._t_ready = time.perf_counter()
+        wall_ms = (self._t_ready - inflight.t_dispatch) * 1e3
+        for req, slot in inflight.sampled:
+            tok = int(toks[slot])
+            req.next_token = tok
+            idx = inflight.out_index.get(req.req_id)
+            if idx is not None:
+                req.patch_token(idx, tok)
         return wall_ms
+
+    def execute(self, batch: ScheduledBatch) -> float:
+        """Synchronous round (``pipelined=False`` A/B path): dispatch and
+        drain back-to-back, so token ids are delivered before the caller's
+        ``on_batch_done`` (with an empty ``out_index`` the drain's patching
+        is a no-op and only ``next_token`` delivery remains); returns wall
+        latency in ms."""
+        return self.drain(self.dispatch(batch))
 
 
 @dataclass
@@ -334,6 +476,7 @@ class ServeResult:
     samples: Optional[Tuple[np.ndarray, np.ndarray]] = None
     outputs: Optional[Dict[int, List[int]]] = None
     memory: Optional[MemoryReport] = None     # KV pool lifecycle summary
+    host_bubble_ms: Optional[List[float]] = None   # device-idle gap per round
 
 
 def compress_idle_gap(pending: List[Request], next_i: int, now: float) -> None:
@@ -362,6 +505,18 @@ def serve(
     the slot-binder hook), so queued or admission-delayed backlog can never
     pin slots.
 
+    With ``EngineConfig(pipelined=True)`` (default) the loop runs as a
+    two-stage pipeline: while the device executes round N, the host runs
+    admission + ``schedule()`` (aging, VTC, KV booking, preemption) for
+    round N+1 and drains round N's sampled ids as an async copy — round N's
+    token VALUES become host-visible one round late, which is fine because
+    round bookkeeping (chunk deliveries, length-capped termination) is
+    value-independent and the values themselves are only needed for
+    delivered outputs and preemption folds, both patched at drain time
+    before anything is staged from them.  ``collect_samples`` latencies in
+    pipelined mode are dispatch->drain walls (device time plus overlapped
+    host work).
+
     realtime_arrivals=False (default) admits requests by the engine's own
     clock (wall time since start), compressing idle gaps — deterministic and
     fast for tests; True sleeps to honor arrival times.
@@ -375,6 +530,8 @@ def serve(
     rounds = 0
     feats, lats = [], []
     outputs: Dict[int, List[int]] = {}
+    pipelined = engine.cfg.pipelined
+    inflight: Optional[InflightRound] = None
     if kv_pool is not None:
         if scheduler.kv_pool is None:
             # the scheduler books blocks chunk-granularly inside schedule()
@@ -382,6 +539,10 @@ def serve(
         engine.bind_kv_pool(kv_pool)
     # slots bind at first schedule and free at preemption, not admission
     scheduler.attach_slot_binder(engine.acquire_slot, releaser=engine.release)
+    # bubble accounting is per-serve: drop any history (and the ready-stamp
+    # of a previous serve, which would read as one giant inter-serve bubble)
+    engine.bubble_ms = []
+    engine._t_ready = None
 
     def admit(now_s: float):
         nonlocal next_i
@@ -400,10 +561,39 @@ def serve(
                     kv_pool.release(req.req_id)
             next_i += 1
 
+    def drain_inflight():
+        nonlocal inflight
+        wall_ms = engine.drain(inflight)
+        if collect_samples:
+            lats.append(wall_ms)
+        # timestamps recorded against the placeholder `now` are re-stamped to
+        # the moment the ids actually became host-visible — the earliest a
+        # client could receive them — so pipelined LatencyReports are not
+        # systematically understated vs the synchronous engine's
+        now_v = time.perf_counter() - t_start
+        for req, _slot in inflight.sampled:
+            if inflight.out_index.get(req.req_id) == 0:
+                req.first_token_time = now_v
+            if req.req_id in inflight.prefill_ids:
+                req.prefill_end_time = now_v
+        for r in inflight.finished:
+            r.finish_time = now_v
+            # patched ids are final only now — deliver them
+            outputs[r.req_id] = list(r.output_tokens)
+        inflight = None
+
     while rounds < max_rounds:
         now = time.perf_counter() - t_start
         admit(now)
+        if inflight is not None and inflight.toks.is_ready():
+            # device already finished: drain before (not after) the next
+            # schedule — tokens/timestamps stamp at true readiness and the
+            # bubble metric doesn't hide idle time behind the overlap
+            drain_inflight()
         if not scheduler.has_work():
+            if inflight is not None:
+                drain_inflight()
+                continue
             if next_i >= len(pending):
                 break
             if realtime_arrivals:
@@ -415,29 +605,58 @@ def serve(
         # preemption victims' slots were already freed inside schedule() (the
         # releaser hook) — a victim may even have re-bound a fresh slot and
         # been rescheduled within the same round, so do NOT release here.
+        # In pipelined mode this schedule overlaps the in-flight round.
         batch = scheduler.schedule(now)
         if batch.is_empty():
+            if inflight is not None:
+                drain_inflight()
+                continue
             time.sleep(0.0005)
             continue
 
-        wall_ms = engine.execute(batch)
+        if pipelined:
+            if inflight is not None:
+                # round N-1's ids land BEFORE round N+1 stages anything that
+                # could embed them (a preemption fold re-prefills delivered
+                # tokens) — this is the pipeline's one-round visibility lag
+                drain_inflight()
+            inflight = engine.dispatch(batch)
+            wall_ms = None
+        else:
+            wall_ms = engine.execute(batch)
         if kv_pool is not None:
             # newly sealed (full, hashed) prompt blocks become restorable
             for r, _c in batch.prefill_chunks:
                 engine.capture_sealed(r)
         if collect_samples:
             feats.append(batch.state.features())
-            lats.append(wall_ms)
+            if wall_ms is not None:
+                lats.append(wall_ms)
         rounds += 1
 
         now = time.perf_counter() - t_start
         scheduler.on_batch_done(batch, now)    # releases finished KV refs
 
+        if pipelined:
+            # the placeholder each sampled request just received sits at the
+            # tail of its output_tokens; drain() patches the real id there
+            for req, _slot in inflight.sampled:
+                inflight.out_index[req.req_id] = len(req.output_tokens) - 1
+            # sampled ∩ prefill = chunks that completed their prefill this
+            # round: their prefill_end_time re-stamps at drain
+            inflight.prefill_ids = {r.req_id for r, _ in batch.prefill_chunks}
+
         for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
             outputs.setdefault(r.req_id, [])
             if r.state == RequestState.FINISHED:
-                outputs[r.req_id] = list(r.output_tokens)
+                if pipelined:
+                    inflight.finished.append(r)
+                else:
+                    outputs[r.req_id] = list(r.output_tokens)
                 engine.release(r)
+
+    if inflight is not None:
+        drain_inflight()
 
     samples = (np.stack(feats), np.asarray(lats)) if collect_samples and feats else None
     return ServeResult(
@@ -450,4 +669,5 @@ def serve(
         memory=(
             summarize_memory(kv_pool, scheduler.stats) if kv_pool is not None else None
         ),
+        host_bubble_ms=list(engine.bubble_ms),
     )

@@ -50,26 +50,30 @@ def flash_decode_attention(q, k_cache, v_cache, kv_lens, *,
 
 def paged_prefill_chunk_attention(q, k_pages, v_pages, block_tables, kv_lens,
                                   q_offset, *, use_pallas: bool = True,
-                                  block_q: int = 128):
+                                  block_q: int = 128, pages_per_tile: int = 1):
     """(B, Sq, Hq, hd) chunk vs a (n_pages, ps, Hkv, hd) physical page pool
-    addressed through per-sequence block tables, with causal offset."""
+    addressed through per-sequence block tables, with causal offset.
+    ``pages_per_tile`` pages are DMA-gathered into one MXU K/V tile per grid
+    step (the oracle is tile-size-agnostic: indirection is data movement)."""
     if not use_pallas:
         return ref.paged_prefill_attention_ref(
             q, k_pages, v_pages, block_tables, kv_lens, q_offset)
     return paged_prefill_attention(
         q, k_pages, v_pages, block_tables, kv_lens, q_offset,
-        block_q=block_q, interpret=not on_tpu(),
+        block_q=block_q, pages_per_tile=pages_per_tile, interpret=not on_tpu(),
     )
 
 
 def paged_flash_decode_attention(q, k_pages, v_pages, block_tables, kv_lens, *,
-                                 use_pallas: bool = True):
+                                 use_pallas: bool = True,
+                                 pages_per_tile: int = 1):
     """(B, Hq, hd) single-token decode vs a paged pool + block tables."""
     if not use_pallas:
         return ref.paged_decode_attention_ref(
             q, k_pages, v_pages, block_tables, kv_lens)
     return paged_decode_attention(
-        q, k_pages, v_pages, block_tables, kv_lens, interpret=not on_tpu()
+        q, k_pages, v_pages, block_tables, kv_lens,
+        pages_per_tile=pages_per_tile, interpret=not on_tpu(),
     )
 
 

@@ -7,11 +7,16 @@ its logical token positions — so capacity scales with tokens actually
 resident, not ``n_slots x max_context``.
 
 Indirection rides scalar prefetch: the block table and per-sequence kv
-lengths land in SMEM before the kernel body runs, and the K/V BlockSpec
-index maps read ``block_tables[b, page_i]`` to steer each grid step's DMA at
-the right physical page.  The kernel body is the same online-softmax
-(m, l, acc) scratch structure as the dense ``decode_attention`` kernel — one
-HBM pass over the *live* pages only (pages past ``kv_len`` are skipped).
+lengths land in SMEM before the kernel body runs.  Each grid step covers one
+*tile* of ``pages_per_tile`` pages: the kernel issues one async copy per page
+(K and V live in compiler-placed memory, ``pltpu.ANY``), gathering the
+scattered physical pages into a contiguous
+``(pages_per_tile * page_size, hd)`` VMEM tile, then runs one MXU dot over
+the whole tile.  At small page sizes this is the difference between feeding
+the MXU 16-row slivers and feeding it full 128-row tiles — the per-tile
+online-softmax (m, l, acc) scratch carries across tiles exactly as the dense
+``decode_attention`` kernel carries across KV blocks.  Tiles entirely past
+``kv_len`` are skipped before any DMA is issued.
 """
 from __future__ import annotations
 
@@ -27,41 +32,67 @@ NEG_INF = -1e30
 
 
 def _paged_decode_kernel(
-    block_tables_ref,   # (B, max_pages) scalar prefetch (steers K/V index maps)
+    block_tables_ref,   # (B, n_tiles * pages_per_tile) scalar prefetch
     kv_len_ref,         # (B,) scalar prefetch
     q_ref,              # (group, hd)
-    k_ref,              # (page_size, hd) — one physical page of this KV head
-    v_ref,              # (page_size, hd)
+    k_hbm,              # (n_pages, Hkv, page_size, hd) — ANY memory space
+    v_hbm,              # (n_pages, Hkv, page_size, hd)
     o_ref,              # (group, hd)
     m_ref,              # (group,) f32
     l_ref,              # (group,) f32
     acc_ref,            # (group, hd) f32
+    k_tile,             # (pages_per_tile * page_size, hd) pool dtype
+    v_tile,             # (pages_per_tile * page_size, hd)
+    sem,                # DMA sems (2, pages_per_tile): [0]=K, [1]=V
     *,
     page_size: int,
+    pages_per_tile: int,
     sm_scale: float,
 ):
     b = pl.program_id(0)
-    page_i = pl.program_id(2)
-    n_pages = pl.num_programs(2)
+    h = pl.program_id(1)
+    tile_i = pl.program_id(2)
+    n_tiles = pl.num_programs(2)
+    tile = page_size * pages_per_tile
 
-    @pl.when(page_i == 0)
+    @pl.when(tile_i == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     kv_len = kv_len_ref[b]
-    k_pos = page_i * page_size + jax.lax.iota(jnp.int32, page_size)
+    tile_start = tile_i * tile
 
-    # whole-page skip: logical pages past the valid length cost nothing
-    @pl.when(k_pos[0] < kv_len)
+    # whole-tile skip: tiles past the valid length issue no DMA at all
+    @pl.when(tile_start < kv_len)
     def _compute():
+        for j in range(pages_per_tile):
+            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
+            dst = pl.ds(j * page_size, page_size)
+            pltpu.make_async_copy(
+                k_hbm.at[pid, h], k_tile.at[dst, :], sem.at[0, j]
+            ).start()
+            pltpu.make_async_copy(
+                v_hbm.at[pid, h], v_tile.at[dst, :], sem.at[1, j]
+            ).start()
+        for j in range(pages_per_tile):
+            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
+            dst = pl.ds(j * page_size, page_size)
+            pltpu.make_async_copy(
+                k_hbm.at[pid, h], k_tile.at[dst, :], sem.at[0, j]
+            ).wait()
+            pltpu.make_async_copy(
+                v_hbm.at[pid, h], v_tile.at[dst, :], sem.at[1, j]
+            ).wait()
+
+        k_pos = tile_start + jax.lax.iota(jnp.int32, tile)
         q = q_ref[...].astype(jnp.float32) * sm_scale         # (g, hd)
-        k = k_ref[...].astype(jnp.float32)                    # (ps, hd)
+        k = k_tile[...].astype(jnp.float32)                   # (tile, hd)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        )                                                     # (g, ps)
+        )                                                     # (g, tile)
         mask = k_pos[None, :] < kv_len
         s = jnp.where(mask, s, NEG_INF)
 
@@ -72,19 +103,34 @@ def _paged_decode_kernel(
 
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v_tile[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new
 
-    @pl.when(page_i == n_pages - 1)
+    @pl.when(tile_i == n_tiles - 1)
     def _finish():
         l = l_ref[...]
         safe_l = jnp.where(l == 0.0, 1.0, l)
         o_ref[...] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def _pad_tables(block_tables, pages_per_tile):
+    """Right-pad the table columns to a tile multiple.  Pad entries use page
+    id 0 — any valid id works: padded logical positions lie at or past
+    ``max_pages * page_size >= kv_len`` and are masked (or whole-tile
+    skipped) before they can contribute."""
+    B, max_pages = block_tables.shape
+    n_tiles = -(-max_pages // pages_per_tile)
+    pad = n_tiles * pages_per_tile - max_pages
+    if pad:
+        block_tables = jnp.concatenate(
+            [block_tables, jnp.zeros((B, pad), block_tables.dtype)], axis=1
+        )
+    return block_tables, n_tiles
+
+
+@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
 def paged_decode_attention(
     q,              # (B, Hq, hd) one token per sequence
     k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
@@ -92,18 +138,22 @@ def paged_decode_attention(
     block_tables,   # (B, max_pages) int32 physical page ids (pad: any valid id)
     kv_lens,        # (B,) int32 valid token counts
     *,
+    pages_per_tile: int = 1,
     interpret: bool = True,
 ):
     B, Hq, hd = q.shape
     page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
-    max_pages = block_tables.shape[1]
 
-    grid = (B, Hkv, max_pages)
+    block_tables, n_tiles = _pad_tables(
+        block_tables.astype(jnp.int32), pages_per_tile
+    )
+
+    grid = (B, Hkv, n_tiles)
     kernel = functools.partial(
         _paged_decode_kernel, page_size=page_size,
-        sm_scale=1.0 / math.sqrt(hd),
+        pages_per_tile=pages_per_tile, sm_scale=1.0 / math.sqrt(hd),
     )
 
     q_g = q.reshape(B, Hkv, group, hd)
@@ -111,6 +161,7 @@ def paged_decode_attention(
     k_t = k_pages.transpose(0, 2, 1, 3)
     v_t = v_pages.transpose(0, 2, 1, 3)
 
+    tile = page_size * pages_per_tile
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -119,30 +170,28 @@ def paged_decode_attention(
             in_specs=[
                 pl.BlockSpec(
                     (None, None, group, hd),
-                    lambda b, h, pi, *_: (b, h, 0, 0),
+                    lambda b, h, ti, *_: (b, h, 0, 0),
                 ),
-                # the physical page index comes from the prefetched table
-                pl.BlockSpec(
-                    (None, None, page_size, hd),
-                    lambda b, h, pi, bt, kl: (bt[b, pi], h, 0, 0),
-                ),
-                pl.BlockSpec(
-                    (None, None, page_size, hd),
-                    lambda b, h, pi, bt, kl: (bt[b, pi], h, 0, 0),
-                ),
+                # K/V stay unblocked: the kernel gathers pages itself via
+                # per-page async copies steered by the prefetched table
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
             ],
             out_specs=pl.BlockSpec(
                 (None, None, group, hd),
-                lambda b, h, pi, *_: (b, h, 0, 0),
+                lambda b, h, ti, *_: (b, h, 0, 0),
             ),
             scratch_shapes=[
                 pltpu.VMEM((group,), jnp.float32),
                 pltpu.VMEM((group,), jnp.float32),
                 pltpu.VMEM((group, hd), jnp.float32),
+                pltpu.VMEM((tile, hd), k_pages.dtype),
+                pltpu.VMEM((tile, hd), v_pages.dtype),
+                pltpu.SemaphoreType.DMA((2, pages_per_tile)),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), q.dtype),
         interpret=interpret,
-    )(block_tables.astype(jnp.int32), kv_lens.astype(jnp.int32), q_g, k_t, v_t)
+    )(block_tables, kv_lens.astype(jnp.int32), q_g, k_t, v_t)
 
     return out.reshape(B, Hq, hd)

@@ -6,12 +6,16 @@ own keys with a causal offset, where K/V live in a shared physical page pool
 ``(n_pages, page_size, Hkv, hd)`` addressed through a per-sequence block
 table (same layout as ``paged_decode_attention``).
 
-Grid: ``(B, Hq, Sq // block_q, max_pages)`` — the innermost dimension walks
-the sequence's block table; the prefetched table steers each step's K/V DMA
-to the right physical page, and the online-softmax (m, l, acc) scratch
-carries across pages exactly as the dense kernel carries across KV tiles.
-Pages entirely above the causal diagonal or past ``kv_len`` are skipped, so
-work stays ~O(prefix + chunk^2/2) per sequence regardless of pool size.
+Grid: ``(B, Hq, Sq // block_q, n_tiles)`` — the innermost dimension walks the
+sequence's block table one *tile* of ``pages_per_tile`` pages at a time.  The
+prefetched table steers per-page async copies (K/V live in compiler-placed
+memory, ``pltpu.ANY``) that gather the scattered physical pages into one
+contiguous ``(pages_per_tile * page_size, hd)`` VMEM tile, so the MXU sees
+wide K/V operands even at small page sizes; the online-softmax (m, l, acc)
+scratch carries across tiles exactly as the dense kernel carries across KV
+blocks.  Tiles entirely above the causal diagonal or past ``kv_len`` are
+skipped before any DMA is issued, so work stays ~O(prefix + chunk^2/2) per
+sequence regardless of pool size.
 """
 from __future__ import annotations
 
@@ -23,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from repro.kernels.paged_decode_attention import _pad_tables
+
 DEFAULT_BLOCK_Q = 128
 
 NEG_INF = -1e30
@@ -30,29 +36,36 @@ NEG_INF = -1e30
 
 def _paged_prefill_kernel(
     # prefetched scalars
-    block_tables_ref,   # (B, max_pages)
+    block_tables_ref,   # (B, n_tiles * pages_per_tile)
     kv_len_ref,         # (B,) valid kv length (prefix + chunk)
     q_offset_ref,       # (B,) absolute position of q[:, 0]
     # blocked operands
     q_ref,              # (blk_q, hd)
-    k_ref,              # (page_size, hd) — one physical page
-    v_ref,              # (page_size, hd)
+    k_hbm,              # (n_pages, Hkv, page_size, hd) — ANY memory space
+    v_hbm,              # (n_pages, Hkv, page_size, hd)
     # blocked output
     o_ref,              # (blk_q, hd)
     # scratch
     m_ref,              # (blk_q,) f32
     l_ref,              # (blk_q,) f32
     acc_ref,            # (blk_q, hd) f32
+    k_tile,             # (pages_per_tile * page_size, hd) pool dtype
+    v_tile,             # (pages_per_tile * page_size, hd)
+    sem,                # DMA sems (2, pages_per_tile): [0]=K, [1]=V
     *,
     block_q: int,
     page_size: int,
+    pages_per_tile: int,
+    group: int,
     sm_scale: float,
 ):
     b = pl.program_id(0)
-    page_i = pl.program_id(3)
-    n_pages = pl.num_programs(3)
+    h = pl.program_id(1)
+    tile_i = pl.program_id(3)
+    n_tiles = pl.num_programs(3)
+    tile = page_size * pages_per_tile
 
-    @pl.when(page_i == 0)
+    @pl.when(tile_i == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
@@ -63,19 +76,41 @@ def _paged_prefill_kernel(
 
     q_i = pl.program_id(2)
     q_pos = q_off + q_i * block_q + jax.lax.iota(jnp.int32, block_q)
-    k_pos = page_i * page_size + jax.lax.iota(jnp.int32, page_size)
+    tile_start = tile_i * tile
 
-    # whole-page skip: above the causal diagonal or past the valid length
-    page_live = (k_pos[0] <= q_pos[-1]) & (k_pos[0] < kv_len)
+    # whole-tile skip: above the causal diagonal or past the valid length —
+    # dead tiles issue no DMA
+    tile_live = (tile_start <= q_pos[-1]) & (tile_start < kv_len)
 
-    @pl.when(page_live)
+    @pl.when(tile_live)
     def _compute():
+        kv_h = h // group
+        for j in range(pages_per_tile):
+            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
+            dst = pl.ds(j * page_size, page_size)
+            pltpu.make_async_copy(
+                k_hbm.at[pid, kv_h], k_tile.at[dst, :], sem.at[0, j]
+            ).start()
+            pltpu.make_async_copy(
+                v_hbm.at[pid, kv_h], v_tile.at[dst, :], sem.at[1, j]
+            ).start()
+        for j in range(pages_per_tile):
+            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
+            dst = pl.ds(j * page_size, page_size)
+            pltpu.make_async_copy(
+                k_hbm.at[pid, kv_h], k_tile.at[dst, :], sem.at[0, j]
+            ).wait()
+            pltpu.make_async_copy(
+                v_hbm.at[pid, kv_h], v_tile.at[dst, :], sem.at[1, j]
+            ).wait()
+
+        k_pos = tile_start + jax.lax.iota(jnp.int32, tile)
         q = q_ref[...].astype(jnp.float32) * sm_scale
-        k = k_ref[...].astype(jnp.float32)
+        k = k_tile[...].astype(jnp.float32)
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
-        )                                                   # (blk_q, ps)
+        )                                                   # (blk_q, tile)
         mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < kv_len)
         s = jnp.where(mask, s, NEG_INF)
 
@@ -86,19 +121,21 @@ def _paged_prefill_kernel(
 
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v_ref[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v_tile[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new
 
-    @pl.when(page_i == n_pages - 1)
+    @pl.when(tile_i == n_tiles - 1)
     def _finish():
         l = l_ref[...]
         safe_l = jnp.where(l == 0.0, 1.0, l)
         o_ref[...] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("block_q", "interpret"))
+@functools.partial(
+    jax.jit, static_argnames=("block_q", "pages_per_tile", "interpret")
+)
 def paged_prefill_attention(
     q,              # (B, Sq, Hq, hd) the prefill chunk's queries
     k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
@@ -108,20 +145,25 @@ def paged_prefill_attention(
     q_offset,       # (B,) int32 absolute position of q[:, 0]
     *,
     block_q: int = DEFAULT_BLOCK_Q,
+    pages_per_tile: int = 1,
     interpret: bool = True,
 ):
     B, Sq, Hq, hd = q.shape
     page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
     assert Hq % Hkv == 0, (Hq, Hkv)
     group = Hq // Hkv
-    max_pages = block_tables.shape[1]
 
     block_q = min(block_q, Sq)
     assert Sq % block_q == 0, (Sq, block_q)
 
-    grid = (B, Hq, Sq // block_q, max_pages)
+    block_tables, n_tiles = _pad_tables(
+        block_tables.astype(jnp.int32), pages_per_tile
+    )
+
+    grid = (B, Hq, Sq // block_q, n_tiles)
     kernel = functools.partial(
         _paged_prefill_kernel, block_q=block_q, page_size=page_size,
+        pages_per_tile=pages_per_tile, group=group,
         sm_scale=1.0 / math.sqrt(hd),
     )
 
@@ -129,6 +171,7 @@ def paged_prefill_attention(
     k_t = k_pages.transpose(0, 2, 1, 3)    # (n_pages, Hkv, ps, hd)
     v_t = v_pages.transpose(0, 2, 1, 3)
 
+    tile = page_size * pages_per_tile
     out = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -137,32 +180,31 @@ def paged_prefill_attention(
             in_specs=[
                 pl.BlockSpec(
                     (None, None, block_q, hd),
-                    lambda b, h, qi, pi, *_: (b, h, qi, 0),
+                    lambda b, h, qi, ti, *_: (b, h, qi, 0),
                 ),
-                pl.BlockSpec(
-                    (None, None, page_size, hd),
-                    lambda b, h, qi, pi, bt, kl, qo, g=group: (bt[b, pi], h // g, 0, 0),
-                ),
-                pl.BlockSpec(
-                    (None, None, page_size, hd),
-                    lambda b, h, qi, pi, bt, kl, qo, g=group: (bt[b, pi], h // g, 0, 0),
-                ),
+                # K/V stay unblocked: the kernel gathers pages itself via
+                # per-page async copies steered by the prefetched table
+                pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY),
             ],
             out_specs=pl.BlockSpec(
                 (None, None, block_q, hd),
-                lambda b, h, qi, pi, *_: (b, h, qi, 0),
+                lambda b, h, qi, ti, *_: (b, h, qi, 0),
             ),
             scratch_shapes=[
                 pltpu.VMEM((block_q,), jnp.float32),
                 pltpu.VMEM((block_q,), jnp.float32),
                 pltpu.VMEM((block_q, hd), jnp.float32),
+                pltpu.VMEM((tile, hd), k_pages.dtype),
+                pltpu.VMEM((tile, hd), v_pages.dtype),
+                pltpu.SemaphoreType.DMA((2, pages_per_tile)),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
         interpret=interpret,
     )(
-        block_tables.astype(jnp.int32), kv_lens.astype(jnp.int32),
-        q_offset.astype(jnp.int32), q_t, k_t, v_t,
+        block_tables, kv_lens.astype(jnp.int32), q_offset.astype(jnp.int32),
+        q_t, k_t, v_t,
     )
 
     return out.transpose(0, 2, 1, 3)       # (B, Sq, Hq, hd)

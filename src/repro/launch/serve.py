@@ -70,6 +70,13 @@ def main(argv=None):
                     help="dense slot-indexed KV cache instead of the paged "
                          "block-table layout (A/B baseline; outputs are "
                          "identical under greedy sampling)")
+    ap.add_argument("--sync-engine", action="store_true",
+                    help="synchronous round loop instead of the overlapped "
+                         "schedule/execute pipeline (A/B baseline; outputs "
+                         "are identical under greedy sampling)")
+    ap.add_argument("--pages-per-tile", type=int, default=1,
+                    help="physical pages gathered per paged-attention K/V "
+                         "tile (MXU efficiency at small page sizes)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="enable the hash-based KV prefix cache (block-aligned "
                          "prompt reuse; hits skip the matched prefill compute)")
@@ -82,7 +89,8 @@ def main(argv=None):
     model_cfg = get_config(args.arch) if args.full else tiny_config(args.arch)
     engine = JAXEngine(model_cfg, EngineConfig(
         n_slots=16, max_context=512, use_pallas=args.pallas,
-        paged_kv=not args.dense_kv,
+        paged_kv=not args.dense_kv, pipelined=not args.sync_engine,
+        pages_per_tile=args.pages_per_tile,
     ))
 
     predictor = None
@@ -117,6 +125,7 @@ def main(argv=None):
     print(f"\n=== {args.arch} | policy={args.policy} lprs={args.lprs} "
           f"apc={args.apc} pallas={args.pallas} "
           f"kv={'dense' if args.dense_kv else 'paged'} "
+          f"loop={'sync' if args.sync_engine else 'pipelined'} "
           f"prefix_cache={args.prefix_cache} ===")
     print(f"finished {res.report.n_finished}/{res.report.n_total} "
           f"in {res.wall_s:.2f}s  ({res.rounds} rounds)")

@@ -291,7 +291,8 @@ class TransformerLM:
         return constrain(logits, ("batch", "vocab")), {"k": nk, "v": nv}
 
     def chunked_step_paged(self, params, tokens, kv_pages, lens, chunk_lens,
-                           block_tables, *, use_pallas: bool = False):
+                           block_tables, *, use_pallas: bool = False,
+                           pages_per_tile: int = 1):
         """``chunked_step`` against a *paged* KV cache (vLLM layout).
 
         Same Sarathi round semantics and bit-level math as the dense path, but
@@ -343,12 +344,12 @@ class TransformerLM:
             if C == 1:
                 attn = kops.paged_flash_decode_attention(
                     q[:, 0], ck, cv, block_tables, kv_lens,
-                    use_pallas=use_pallas,
+                    use_pallas=use_pallas, pages_per_tile=pages_per_tile,
                 )[:, None]
             else:
                 attn = kops.paged_prefill_chunk_attention(
                     q, ck, cv, block_tables, kv_lens, lens,
-                    use_pallas=use_pallas,
+                    use_pallas=use_pallas, pages_per_tile=pages_per_tile,
                 )
             y = carry + L.attn_output(lp["attn"], attn, cfg)
             y = _block_ffn(lp, y, cfg)

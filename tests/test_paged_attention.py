@@ -105,6 +105,59 @@ def test_paged_decode_layout_invariance(rng):
     np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), atol=1e-6)
 
 
+@pytest.mark.parametrize("pages_per_tile", [1, 2, 4])
+def test_paged_decode_pages_per_tile(rng, pages_per_tile):
+    """Multi-page K/V tiles must be pure data movement: every tile width
+    reproduces the gather oracle on ragged, NON-tile-aligned kv_lens, with
+    max_pages not a multiple of the tile (exercises table padding)."""
+    B, Hq, Hkv, hd, ps, mp = 5, 8, 2, 32, 16, 5     # 5 pages: pads for 2 and 4
+    q = _rand(rng, (B, Hq, hd), jnp.float32)
+    k_pages, v_pages, bt = _paged_setup(rng, B, Hkv, hd, ps, mp, jnp.float32)
+    # straddle page AND tile boundaries: 1, ps-1, one-past-tile, mid, full
+    kv_lens = jnp.asarray(
+        [1, ps - 1, pages_per_tile * ps + 1, 3 * ps + 7, mp * ps], jnp.int32
+    )
+    out = paged_decode_attention(q, k_pages, v_pages, bt, kv_lens,
+                                 pages_per_tile=pages_per_tile)
+    want = ref.paged_decode_attention_ref(q, k_pages, v_pages, bt, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=TOL_F32, rtol=TOL_F32)
+
+
+@pytest.mark.parametrize("pages_per_tile", [1, 2, 4])
+def test_paged_prefill_pages_per_tile(rng, pages_per_tile):
+    """Chunked-prefill parity for every tile width: causal offset + ragged
+    non-aligned prefixes, max_pages not a multiple of the tile."""
+    B, Sq, Hq, Hkv, hd, ps, mp = 3, 32, 8, 2, 32, 16, 5
+    q = _rand(rng, (B, Sq, Hq, hd), jnp.float32)
+    k_pages, v_pages, bt = _paged_setup(rng, B, Hkv, hd, ps, mp, jnp.float32)
+    q_off = jnp.asarray([0, 7, mp * ps - Sq - 3], jnp.int32)   # non-aligned
+    kv_lens = q_off + Sq
+    out = paged_prefill_attention(q, k_pages, v_pages, bt, kv_lens, q_off,
+                                  block_q=16, pages_per_tile=pages_per_tile)
+    want = ref.paged_prefill_attention_ref(
+        q, k_pages, v_pages, bt, kv_lens, q_off
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=TOL_F32, rtol=TOL_F32)
+
+
+@pytest.mark.parametrize("pages_per_tile", [2, 4])
+def test_paged_decode_tile_width_invariance(rng, pages_per_tile):
+    """Tile width is a pure schedule knob: wider tiles must agree with the
+    single-page kernel bit-for-bit up to accumulation tolerance."""
+    B, Hq, Hkv, hd, ps, mp = 2, 4, 4, 32, 16, 8
+    q = _rand(rng, (B, Hq, hd), jnp.float32)
+    k_pages, v_pages, bt = _paged_setup(rng, B, Hkv, hd, ps, mp, jnp.float32)
+    kv_lens = jnp.asarray([3 * ps + 5, mp * ps - 2], jnp.int32)
+    a = paged_decode_attention(q, k_pages, v_pages, bt, kv_lens,
+                               pages_per_tile=1)
+    b = paged_decode_attention(q, k_pages, v_pages, bt, kv_lens,
+                               pages_per_tile=pages_per_tile)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               atol=TOL_F32, rtol=TOL_F32)
+
+
 # ---------------------------------------------------------------------------
 # paged chunked-prefill
 # ---------------------------------------------------------------------------
