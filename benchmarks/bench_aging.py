@@ -7,8 +7,13 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import (
-    BASE, PAPER_TARGET_E2E_S, calibrate_multiplier, fmt_table, paper_workload,
-    pct_change, save_json, scaled,
+    BASE,
+    calibrate_multiplier,
+    fmt_table,
+    paper_workload,
+    pct_change,
+    save_json,
+    scaled,
 )
 from repro.core.scheduler import SchedulerConfig
 from repro.engine.costmodel import CostModel
@@ -58,7 +63,7 @@ def run_decomposition(n: int = 200, seed: int = 0):
     out = {}
     for policy in ("fcfs", "aging"):
         reqs = paper_workload(n, seed)
-        res = run_policy(
+        run_policy(
             reqs,
             SchedulerConfig(policy=policy, alpha=ALPHA, beta=BETA,
                             token_budget=256, max_seqs=MAX_SEQS),
@@ -133,9 +138,9 @@ def run_starvation_stress(seed: int = 0):
 def main(quick: bool = False):
     n = 100 if quick else 200
     t4 = run_table4(n)
-    dec = run_decomposition(n)
-    cdf = run_cdf(n)
-    sv = run_starvation_stress()
+    run_decomposition(n)
+    run_cdf(n)
+    run_starvation_stress()
     save_json("bench_aging.json", {"table4": t4})
     return t4
 

@@ -17,7 +17,7 @@ from benchmarks.bench_lprs import train_predictor
 from benchmarks.common import BASE, calibrate_round_ms, fmt_table, save_json, scaled
 from repro.core.apc import APCConfig
 from repro.core.lprs import LPRSConfig
-from repro.core.request import Request, RequestState
+from repro.core.request import Request
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.costmodel import CostModel
 from repro.engine.simulator import ServingSimulator

@@ -3,15 +3,12 @@ centralized-scheduler design scaled out, plus the fault-tolerance story the
 paper's future-work asks for (replica failure mid-run; elastic add)."""
 from __future__ import annotations
 
-import dataclasses
 
 from benchmarks.common import (
     BASE, calibrate_multiplier, fmt_table, paper_workload, save_json, scaled,
 )
 from repro.core.scheduler import SchedulerConfig
-from repro.engine.costmodel import CostModelConfig
 from repro.engine.router import Router, RouterConfig
-from repro.engine.workload import WorkloadSpec, sharegpt_like
 
 
 def run_table5(n: int = 200, seed: int = 0):
@@ -74,7 +71,7 @@ def run_fault_tolerance(seed: int = 0):
 def main(quick: bool = False):
     n = 100 if quick else 200
     t5 = run_table5(n)
-    ft = run_fault_tolerance()
+    run_fault_tolerance()
     save_json("bench_multireplica.json", {"table5": t5})
     return t5
 

@@ -16,7 +16,7 @@ from repro.core.predictor import (
 from repro.core.scheduler import SchedulerConfig
 from repro.engine.costmodel import CostModel
 from repro.engine.simulator import run_policy
-from repro.engine.workload import WorkloadSpec, sharegpt_like, uniform_arrivals
+from repro.engine.workload import WorkloadSpec, sharegpt_like
 
 TARGET_SAMPLES = 36_868      # paper's profiling-set size
 

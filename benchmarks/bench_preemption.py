@@ -1,0 +1,204 @@
+"""Preemption-mode benchmark: swap-out vs recompute under KV pool pressure.
+
+The latency-control story (LPRS + APC) assumes preemption is cheap; with
+recompute it is not — every pool-pressure eviction converts into a fresh
+prefill burst that (a) re-burns compute for tokens the victim already paid
+for and (b) re-enters the chunked-prefill queue as a LONG job, exactly the
+fragmentation APC exists to suppress.  Swap-out preemption stages the
+victim's KV host-side instead: its comeback is one restore round.
+
+This bench runs ONE seeded workload through the real JAX engine on a pool
+sized well below the working set (steady forced preemptions), under
+``preemption_mode="recompute"`` and ``"swap"``, plus an unconstrained
+reference (pool big enough that nobody is evicted).  It reports, per mode:
+
+  * preemptions / swap-outs / re-prefilled tokens (the recompute tax),
+  * E2E latency percentiles over ALL requests and over the VICTIMS
+    (requests preempted at least once in that run),
+  * wall time and rounds.
+
+Gates (asserted): greedy outputs identical across all three runs (by
+workload position), and swap mode's victim P99 E2E below recompute's.
+
+``--quick`` shrinks the workload for the CI smoke job.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import fmt_table, save_json
+from repro.configs import tiny_config
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+from repro.engine.workload import WorkloadSpec, attach_prompt_tokens, sharegpt_like
+
+
+def _workload(quick: bool, model_cfg, seed: int = 21):
+    # t=0 arrivals: round structure (and therefore the output-identity gate)
+    # is independent of wall-clock timing, exactly like bench_serve_throughput
+    spec = WorkloadSpec(
+        n_requests=10 if quick else 24,
+        inter_arrival_s=0.0,
+        # prompt + generation must fit the engine's max_context (256)
+        max_context=160 if quick else 192,
+        max_new_tokens=32 if quick else 64,
+        seed=seed,
+    )
+    reqs = sharegpt_like(spec)
+    attach_prompt_tokens(reqs, model_cfg.vocab_size, seed=seed)
+    return reqs
+
+
+def run_mode(name: str, *, mode: str, n_blocks: int, quick: bool,
+             paged: bool = True, reps: int = 2):
+    """Best-of-``reps`` by wall time (shared CI boxes stall individual runs;
+    outputs and round counts must be identical across reps anyway)."""
+    best = None
+    for _ in range(reps):
+        r = _run_once(name, mode=mode, n_blocks=n_blocks, quick=quick,
+                      paged=paged)
+        if best is not None:
+            assert r["outputs"] == best["outputs"], f"{name}: nondeterministic"
+            assert r["rounds"] == best["rounds"], f"{name}: round drift"
+        if best is None or r["wall_s"] < best["wall_s"]:
+            best = r
+    return best
+
+
+def _run_once(name: str, *, mode: str, n_blocks: int, quick: bool,
+              paged: bool = True):
+    model_cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(model_cfg, EngineConfig(
+        n_slots=8, max_context=256, paged_kv=paged, pipelined=True,
+        preemption_mode=mode, chunk_buckets=(1, 16, 32, 64),
+    ))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=n_blocks, block_size=16,
+                                    bytes_per_token=4))
+    # bind BEFORE warmup: adopting an external pool rebuilds the physical
+    # page array (page ids must equal the pool's block ids), which would
+    # invalidate every shape the warmup just compiled — measured rounds
+    # would then pay the jit cost warmup exists to hoist out
+    eng.bind_kv_pool(pool)
+    eng.warmup()
+    # a small chunk budget stretches each recompute across many rounds —
+    # exactly the fragmentation the paper's APC section attributes to
+    # preemption-heavy regimes
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=32, max_seqs=8)
+    )
+    reqs = _workload(quick, model_cfg)
+    t0 = time.perf_counter()
+    res = serve(reqs, sched, eng, kv_pool=pool)
+    wall_s = time.perf_counter() - t0
+    pool.check_invariants()
+
+    e2e = np.asarray([r.e2e_latency() for r in reqs], np.float64)
+    victims = [r for r in reqs if r.preemptions > 0]
+    v_e2e = np.asarray([r.e2e_latency() for r in victims], np.float64)
+    return {
+        "name": name,
+        "mode": mode,
+        "n_blocks": n_blocks,
+        "finished": res.report.n_finished,
+        "rounds": res.rounds,
+        "wall_s": wall_s,
+        "preemptions": sched.stats.preemptions,
+        "swap_preemptions": sched.stats.swap_preemptions,
+        "swap_restores": sched.stats.swap_restores,
+        # the recompute tax: prefill tokens scheduled beyond the workload's
+        # own prompts (re-prefills of already-delivered context)
+        "prefill_tokens": sched.stats.scheduled_prefill_tokens,
+        "n_victims": len(victims),
+        "e2e_p50_ms": float(np.percentile(e2e, 50) * 1e3),
+        "e2e_p99_ms": float(np.percentile(e2e, 99) * 1e3),
+        "victim_p99_ms": (
+            float(np.percentile(v_e2e, 99) * 1e3) if len(victims) else 0.0
+        ),
+        "victim_mean_ms": (
+            float(v_e2e.mean() * 1e3) if len(victims) else 0.0
+        ),
+        "outputs": [res.outputs[r.req_id] for r in reqs],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke settings (tiny workload)")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="pressured pool size in blocks (0 = auto)")
+    args = ap.parse_args(argv)
+
+    pressured = args.blocks or (14 if args.quick else 40)
+    reps = 2 if args.quick else 3
+    results = [
+        run_mode("recompute", mode="recompute", n_blocks=pressured,
+                 quick=args.quick, reps=reps),
+        run_mode("swap", mode="swap", n_blocks=pressured, quick=args.quick,
+                 reps=reps),
+        run_mode("unconstrained", mode="recompute", n_blocks=4096,
+                 quick=args.quick, reps=reps),
+    ]
+
+    rows = [
+        [r["name"], r["finished"], r["rounds"], r["preemptions"],
+         r["swap_preemptions"], r["prefill_tokens"], r["n_victims"],
+         f"{r['victim_mean_ms']:.0f}", f"{r['victim_p99_ms']:.0f}",
+         f"{r['e2e_p99_ms']:.0f}"]
+        for r in results
+    ]
+    print(fmt_table(
+        "Preemption modes under KV pool pressure (real JAX engine, pipelined/paged)",
+        ["mode", "done", "rounds", "preempt", "swaps", "prefill tok",
+         "victims", "victim mean ms", "victim p99 ms", "p99 e2e ms"],
+        rows,
+    ))
+
+    rec, swp, unc = results
+    # correctness gate: one workload, three pool/mode regimes, same tokens
+    assert rec["outputs"] == swp["outputs"] == unc["outputs"], (
+        "greedy outputs diverged across preemption modes"
+    )
+    assert rec["preemptions"] > 0, "pressure too low: recompute never preempted"
+    assert swp["swap_preemptions"] > 0, "swap mode never swapped"
+    # deterministic structural gates (identical on every machine): swap must
+    # eliminate re-prefill work and the rounds it fragments into
+    saved_prefill = rec["prefill_tokens"] - swp["prefill_tokens"]
+    assert saved_prefill > 0, "swap mode saved no re-prefill tokens"
+    assert swp["rounds"] < rec["rounds"], (
+        "swap mode did not reduce scheduling rounds under pressure"
+    )
+    print(f"  outputs identical across modes; swap avoided re-prefilling "
+          f"{saved_prefill} tokens "
+          f"({saved_prefill / max(rec['prefill_tokens'], 1):.0%} of "
+          f"recompute-mode prefill work) and ran "
+          f"{rec['rounds'] - swp['rounds']} fewer rounds")
+    if rec["n_victims"] and swp["n_victims"]:
+        gain = 1.0 - swp["victim_p99_ms"] / max(rec["victim_p99_ms"], 1e-9)
+        print(f"  victim P99 E2E: {rec['victim_p99_ms']:.0f} ms (recompute) "
+              f"-> {swp['victim_p99_ms']:.0f} ms (swap)  ({gain:+.1%})")
+        # wall-clock gate only on full runs (the quotable number): at --quick
+        # scale the whole run is a few seconds of interpret-mode dispatch, so
+        # victim P99 is dominated by scheduling jitter, not by the recompute
+        # tax — the deterministic round/token gates above are the CI smoke's
+        # flake-proof signal
+        if not args.quick:
+            assert swp["victim_p99_ms"] < rec["victim_p99_ms"], (
+                "swap mode did not reduce preempted-request P99 E2E"
+            )
+
+    save_json("bench_preemption.json", {
+        "quick": args.quick,
+        "pressured_blocks": pressured,
+        "results": [{k: v for k, v in r.items() if k != "outputs"}
+                    for r in results],
+    })
+    return results
+
+
+if __name__ == "__main__":
+    main()

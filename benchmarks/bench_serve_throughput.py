@@ -15,9 +15,24 @@ Grid: {sync, pipelined} x {dense, paged} (pure-jnp oracle math), plus — with
 program compiles to Mosaic on TPU).
 
 Writes ``BENCH_throughput.json`` at the repo root (the perf-trajectory
-anchor: every future PR can compare against these numbers) and prints the
-gate: pipelined mean host-bubble < sync mean host-bubble, identical greedy
-outputs.
+anchor: every future PR can compare against these numbers; one section per
+workload mode — ``quick`` and ``full``) and prints the gate: pipelined mean
+host-bubble < sync mean host-bubble, identical greedy outputs.
+
+``--check-regression`` additionally compares the fresh numbers against the
+COMMITTED baseline (loaded before the fresh write, which happens even on
+failure so the CI artifact carries the regressing numbers) and fails on a
+>25% throughput or host-bubble regression.  Comparisons are
+machine-normalized: each config's metric is taken RELATIVE to the geometric
+mean over all configs shared with the baseline, so a CI box that is
+uniformly 2x slower than the box that committed the baseline still passes
+and a lucky draw on any single config is damped by the grid, while a
+regression localized to the pipelined loop, the paged layout, or the
+kernels fails.  Suspect configs get ONE re-measurement (more reps) before
+the gate fails — transient load spikes on shared boxes don't reproduce, a
+real regression does.  ``BENCH_INJECT_BUBBLE_MS=<ms>`` injects an
+artificial per-round stall into the PIPELINED configs — the knob used to
+prove the gate actually fails when the hot path regresses.
 """
 from __future__ import annotations
 
@@ -42,11 +57,15 @@ def _workload(quick: bool, model_cfg):
     # pipelined loops see the SAME round structure and the output-identity
     # gate is exact (round durations differ between the loops; arrival-timed
     # admission would couple scheduling to them)
+    # quick must still produce enough rounds (>= MIN_ROUNDS_FOR_BUBBLE_GATE)
+    # for per-round ratios to be stable: at ~12 rounds the pipelined:sync
+    # throughput ratio itself swings >25% run-to-run and the regression gate
+    # is pure noise
     spec = WorkloadSpec(
-        n_requests=8 if quick else 24,
+        n_requests=12 if quick else 24,
         inter_arrival_s=0.0,
-        max_context=64 if quick else 128,
-        max_new_tokens=8 if quick else 24,
+        max_context=96 if quick else 128,
+        max_new_tokens=16 if quick else 24,
         seed=12,
     )
     reqs = sharegpt_like(spec)
@@ -79,6 +98,16 @@ def _run_once(name: str, *, pipelined: bool, paged: bool, quick: bool,
         chunk_buckets=(1, 16, 32, 64),
     ))
     eng.warmup()      # steady-state: bubbles/walls must not include jit
+    inject_ms = float(os.environ.get("BENCH_INJECT_BUBBLE_MS", "0"))
+    if inject_ms > 0 and pipelined:
+        # regression-gate self-test: stall the pipelined hot path per round
+        real_dispatch = eng.dispatch
+
+        def slow_dispatch(batch):
+            time.sleep(inject_ms / 1e3)
+            return real_dispatch(batch)
+
+        eng.dispatch = slow_dispatch
     reqs = _workload(quick, model_cfg)
     sched = ChunkedPrefillScheduler(
         SchedulerConfig(policy="fcfs", token_budget=64, max_seqs=8)
@@ -109,6 +138,83 @@ def _run_once(name: str, *, pipelined: bool, paged: bool, quick: bool,
     }
 
 
+REGRESSION_TOL = 0.25                  # fail beyond 25% relative drift
+# the host-bubble gate needs enough rounds to average out scheduling jitter:
+# measured on quick runs (~38 rounds) the per-config bubble-mean RATIO still
+# swings ±50% run-to-run (1-2 ms means are OS-scheduling noise), while the
+# throughput ratio holds within ~±16%.  So quick runs gate on throughput
+# only (the injected-slowdown self-test trips that gate regardless) and the
+# bubble ratio is gated on full-scale runs
+MIN_ROUNDS_FOR_BUBBLE_GATE = 60
+
+
+def _load_sections() -> dict:
+    """BENCH_throughput.json as a ``{mode_key: payload}`` dict, migrating
+    the pre-PR-5 single-section schema (treated as ``full``).  Shared by
+    the baseline read and the preserve-other-section write."""
+    try:
+        with open(ROOT_JSON) as f:
+            data = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return {}
+    if "results" in data:              # legacy flat schema
+        data = {"full": data}
+    return data
+
+
+def _load_baseline(mode_key: str):
+    """The committed baseline section for this workload mode (``quick`` /
+    ``full``), or None when no comparable baseline exists."""
+    return _load_sections().get(mode_key)
+
+
+def _geomean(xs) -> float:
+    arr = np.asarray([max(x, 1e-9) for x in xs], np.float64)
+    return float(np.exp(np.log(arr).mean()))
+
+
+def check_regression(results, baseline) -> list:
+    """Compare fresh results to the committed baseline, machine-normalized:
+    each config's throughput / host-bubble is expressed relative to the
+    GEOMETRIC MEAN over all configs shared with the baseline, so uniform
+    machine-speed differences cancel and a lucky/unlucky draw on any single
+    config (including a would-be reference) is damped by the whole grid —
+    only drift localized to a config (pipelined loop, paged layout, kernels)
+    trips the gate.  Returns a list of failure strings naming the suspect
+    configs."""
+    fresh = {r["name"]: r for r in results}
+    base = {r["name"]: r for r in baseline["results"]}
+    shared = sorted(set(fresh) & set(base))
+    if len(shared) < 2:
+        return []                       # nothing comparable
+    f_ref = _geomean(fresh[n]["out_tok_s"] for n in shared)
+    b_ref = _geomean(base[n]["out_tok_s"] for n in shared)
+    f_ref_bb = _geomean(fresh[n]["bubble_ms_mean"] for n in shared)
+    b_ref_bb = _geomean(base[n]["bubble_ms_mean"] for n in shared)
+    failures = []
+    for name in shared:
+        f, b = fresh[name], base[name]
+        # throughput, relative to the grid (higher is better)
+        f_tp = f["out_tok_s"] / f_ref
+        b_tp = b["out_tok_s"] / b_ref
+        if f_tp < b_tp * (1.0 - REGRESSION_TOL):
+            failures.append(
+                f"{name}: relative throughput {f_tp:.3f} < baseline "
+                f"{b_tp:.3f} - {REGRESSION_TOL:.0%}"
+            )
+        # host bubble, relative to the grid (lower is better); only on runs
+        # long enough for the per-round mean to be stable
+        if min(f["rounds"], b["rounds"]) >= MIN_ROUNDS_FOR_BUBBLE_GATE:
+            f_bb = f["bubble_ms_mean"] / f_ref_bb
+            b_bb = b["bubble_ms_mean"] / b_ref_bb
+            if f_bb > b_bb * (1.0 + REGRESSION_TOL):
+                failures.append(
+                    f"{name}: relative host bubble {f_bb:.3f} > baseline "
+                    f"{b_bb:.3f} + {REGRESSION_TOL:.0%}"
+                )
+    return failures
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
@@ -118,26 +224,30 @@ def main(argv=None):
                          "kernels (interpret mode on CPU)")
     ap.add_argument("--reps", type=int, default=2,
                     help="best-of-N runs per config (noise robustness)")
+    ap.add_argument("--check-regression", action="store_true",
+                    help="fail (exit 1) when throughput or host bubble "
+                         f"regresses >{REGRESSION_TOL:.0%} vs the committed "
+                         "BENCH_throughput.json baseline (machine-normalized "
+                         "against the geometric mean over shared configs; "
+                         "suspects get one re-measurement before failing)")
     args = ap.parse_args(argv)
 
-    grid = [
-        ("sync/dense", False, False),
-        ("sync/paged", False, True),
-        ("pipelined/dense", True, False),
-        ("pipelined/paged", True, True),
-    ]
-    results = [
-        run_config(name, pipelined=p, paged=g, quick=args.quick,
-                   reps=args.reps)
-        for name, p, g in grid
-    ]
+    cfg_by_name = {
+        "sync/dense": dict(pipelined=False, paged=False),
+        "sync/paged": dict(pipelined=False, paged=True),
+        "pipelined/dense": dict(pipelined=True, paged=False),
+        "pipelined/paged": dict(pipelined=True, paged=True),
+    }
     if args.pallas:
         for ppt in (1, 2, 4):
-            results.append(run_config(
-                f"pipelined/paged/pallas/ppt={ppt}", pipelined=True,
-                paged=True, quick=args.quick, use_pallas=True,
-                pages_per_tile=ppt, reps=args.reps,
-            ))
+            cfg_by_name[f"pipelined/paged/pallas/ppt={ppt}"] = dict(
+                pipelined=True, paged=True, use_pallas=True,
+                pages_per_tile=ppt,
+            )
+    results = [
+        run_config(name, quick=args.quick, reps=args.reps, **kw)
+        for name, kw in cfg_by_name.items()
+    ]
 
     rows = [
         [r["name"], r["finished"], r["rounds"], f"{r['out_tok_s']:.1f}",
@@ -164,14 +274,55 @@ def main(argv=None):
               f"({shrink:+.1%})  throughput {gain:+.1%}")
         assert identical, f"{layout}: pipelined outputs diverged from sync"
 
-    payload = {
-        "workload": {"quick": args.quick, "seed": 12},
-        "results": [{k: v for k, v in r.items() if k != "outputs"}
-                    for r in results],
-    }
-    with open(ROOT_JSON, "w") as f:
-        json.dump(payload, f, indent=1)
-    print(f"  wrote {os.path.normpath(ROOT_JSON)}")
+    mode_key = "quick" if args.quick else "full"
+    stripped = [{k: v for k, v in r.items() if k != "outputs"}
+                for r in results]
+
+    # load the committed baseline BEFORE overwriting it, but write the fresh
+    # numbers unconditionally: on a gate failure the uploaded CI artifact
+    # must carry the regressing measurements, not the stale baseline
+    baseline = _load_baseline(mode_key) if args.check_regression else None
+
+    def write_results():
+        data = _load_sections()        # preserve the other mode's section
+        data[mode_key] = {
+            "workload": {"quick": args.quick, "seed": 12},
+            "results": stripped,
+        }
+        with open(ROOT_JSON, "w") as f:
+            json.dump(data, f, indent=1)
+        print(f"  wrote {os.path.normpath(ROOT_JSON)} [{mode_key}]")
+
+    write_results()
+    if args.check_regression:
+        if baseline is None:
+            print(f"  no committed {mode_key!r} baseline to compare against")
+        else:
+            failures = check_regression(stripped, baseline)
+            if failures:
+                # one re-measurement before failing: a transient load spike
+                # on a shared box mimics a localized regression; a REAL
+                # regression reproduces in the second sample too.  Suspects
+                # re-run with more reps and keep their better (faster-wall)
+                # sample, same best-of semantics as the first pass.
+                suspects = sorted({m.split(":")[0] for m in failures})
+                print(f"  gate tripped; re-measuring suspects: {suspects}")
+                for nm in suspects:
+                    r2 = run_config(nm, quick=args.quick,
+                                    reps=args.reps + 1, **cfg_by_name[nm])
+                    for i, r in enumerate(stripped):
+                        if r["name"] == nm and r2["wall_s"] < r["wall_s"]:
+                            stripped[i] = {k: v for k, v in r2.items()
+                                           if k != "outputs"}
+                write_results()
+                failures = check_regression(stripped, baseline)
+            for msg in failures:
+                print(f"  REGRESSION: {msg}")
+            if failures:
+                raise SystemExit(1)
+            print(f"  regression gate passed vs committed {mode_key!r} "
+                  f"baseline (tolerance {REGRESSION_TOL:.0%}, normalized to "
+                  "the shared-config geometric mean)")
     return results
 
 

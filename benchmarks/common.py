@@ -15,9 +15,8 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
-from typing import Dict, List, Optional
+from typing import Dict, List
 
-import numpy as np
 
 from repro.core.scheduler import SchedulerConfig
 from repro.engine.costmodel import CostModel, CostModelConfig

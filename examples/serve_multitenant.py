@@ -12,7 +12,6 @@ import sys
 
 sys.path.insert(0, "src")
 
-import numpy as np
 
 from repro.configs import tiny_config
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig

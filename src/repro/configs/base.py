@@ -8,7 +8,7 @@ decode/train step functions; ``repro.launch.dryrun`` consumes the paired
 from __future__ import annotations
 
 import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

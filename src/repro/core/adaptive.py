@@ -25,8 +25,6 @@ from typing import List, Optional
 
 import numpy as np
 
-from repro.core.apc import APCConfig
-from repro.core.lprs import LPRSConfig
 from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch
 
 

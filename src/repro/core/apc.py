@@ -7,8 +7,7 @@ active).  Decision rule Eq. 14 on top of the LPRS-proposed chunk.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Tuple
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

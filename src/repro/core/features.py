@@ -26,8 +26,7 @@ Derived (5):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import List, Sequence
+from dataclasses import dataclass
 
 import numpy as np
 

@@ -4,15 +4,23 @@ Replaces "fill to the token budget" with "hit the target round latency T*":
 a discrete candidate search over chunk sizes, each scored by an asymmetric
 deviation of the *predicted* batch latency from T* (overflow penalized by
 lambda_o > lambda_u underfill).
+
+Preemption interaction: a *swap-out* victim re-enters the queue
+decode-resumable — its comeback is ONE restore round, not a re-prefill, so
+the round-count predictor (``predicted_resume_rounds``) and the chunk search
+both treat it as already-prefilled work (``select_chunk`` is never consulted
+for a zero-remaining-prefill resume).  A *recompute* victim pays the full
+``ceil(context / budget)`` rounds of chunked re-prefill — the asymmetry the
+scheduler's swap-vs-recompute cost decision weighs.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
-from typing import Optional, Sequence
 
 import numpy as np
 
-from repro.core.features import BatchState, derive_features
+from repro.core.features import BatchState
 
 
 @dataclass(frozen=True)
@@ -21,6 +29,18 @@ class LPRSConfig:
     search_delta: int = 128            # candidate granularity Δ
     lambda_under: float = 1.0          # λ_u
     lambda_over: float = 3.0           # λ_o  (> λ_u, Eq. 10)
+
+
+def predicted_resume_rounds(
+    remaining_prefill: int, token_budget: int, *, swapped: bool
+) -> int:
+    """Scheduling-round count until a preemption victim can decode again:
+    a swapped-out victim restores in ONE round (its prefill progress
+    survived host-side); a recompute victim re-prefills its whole context
+    chunk-by-chunk under the round token budget."""
+    if swapped or remaining_prefill <= 0:
+        return 1
+    return max(1, math.ceil(remaining_prefill / max(token_budget, 1)))
 
 
 def candidate_set(h_i: int, delta: int) -> np.ndarray:

@@ -12,7 +12,6 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
-from functools import partial
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -20,7 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.features import N_FEATURES
-from repro.training.optimizer import AdamWConfig, AdamWState, adamw_init, adamw_update
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 
 @dataclass(frozen=True)

@@ -50,6 +50,14 @@ class Request:
     # token values).  Matters beyond reporting: preempt() folds delivered
     # tokens into the prompt, so recompute must re-prefill the REAL ids.
     next_token: int = 0
+    # swap-out preemption: the victim's KV was staged host-side instead of
+    # discarded, so it re-enters the queue decode-resumable (progress kept)
+    swapped: bool = False
+    swap_preemptions: int = 0
+    # set by resume(): the engine's device-resident last_token lane was lost
+    # with the old slot, so the first post-restore decode round must stage
+    # the last delivered token id from the host instead of consuming it
+    needs_replay: bool = False
 
     @property
     def remaining_prefill(self) -> int:
@@ -94,6 +102,36 @@ class Request:
         self.state = RequestState.WAITING
         self.prefill_done = 0
         self.preemptions += 1
+        # a recompute rebuilds everything, including the last token's KV —
+        # the prefill-completing round samples normally, nothing to replay
+        self.swapped = False
+        self.needs_replay = False
+
+    def swap_preempt(self) -> None:
+        """Evicted under KV pressure with its KV *staged host-side* instead
+        of discarded: progress (``prefill_done``/``generated``) is kept and
+        nothing is folded into the prompt — the request re-enters the queue
+        decode-resumable, costing one restore round rather than a full
+        recompute prefill."""
+        assert self.state in (
+            RequestState.WAITING, RequestState.PREFILLING, RequestState.DECODING,
+        ), self.state
+        self.state = RequestState.WAITING
+        self.swapped = True
+        self.preemptions += 1
+        self.swap_preemptions += 1
+
+    def resume(self) -> None:
+        """Swap-in completed: the staged KV is device-resident again.  A
+        fully-prefilled victim rejoins the decode set (its next decode round
+        must replay the last delivered token id — the device-resident
+        ``last_token`` lane died with the old slot); a mid-prefill victim
+        stays WAITING and simply continues chunking over the restored KV."""
+        assert self.swapped, "resume() of a request that was never swapped"
+        self.swapped = False
+        if self.remaining_prefill <= 0:
+            self.state = RequestState.DECODING
+            self.needs_replay = True
 
     def patch_token(self, i: int, tok: int) -> None:
         """Pipelined engines deliver token VALUES one round late: the round's

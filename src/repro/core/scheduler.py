@@ -19,12 +19,11 @@ from itertools import islice
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Dict, List, Optional, Tuple
 
-import numpy as np
 
 from repro.core.apc import APCConfig, APCStats, activity_cap
 from repro.core.apc import apply as apc_apply
 from repro.core.features import BatchState
-from repro.core.lprs import LPRSConfig, select_chunk
+from repro.core.lprs import LPRSConfig, predicted_resume_rounds, select_chunk
 from repro.core.policies import PrefillQueue, make_policy
 from repro.core.request import Request, RequestState
 
@@ -54,6 +53,14 @@ class ScheduledBatch:
     # requests evicted this round to make KV room (blocks freed, prefill
     # re-enqueued for recompute) — the engine must reset their slot state
     preempted: List[Request] = field(default_factory=list)
+    # swap-mode preemption traffic this round: ``swapped_out`` victims had
+    # their KV staged host-side instead of discarded; ``restored`` requests
+    # were swapped back in (decode-resumable).  The MB totals price the
+    # transfers in the simulator's cost model.
+    swapped_out: List[Request] = field(default_factory=list)
+    restored: List[Request] = field(default_factory=list)
+    swap_out_mb: float = 0.0
+    swap_in_mb: float = 0.0
 
     @property
     def prefill_tokens(self) -> int:
@@ -81,8 +88,11 @@ class SchedulerStats:
     scheduled_prefill_seqs: int = 0     # Σ per-round count (Table 10)
     scheduled_prefill_tokens: int = 0
     scheduled_decode_tokens: int = 0
-    preemptions: int = 0                # KV-pressure evictions (recompute)
+    preemptions: int = 0                # KV-pressure evictions (all modes)
+    swap_preemptions: int = 0           # ... of which swapped out (not recomputed)
+    swap_restores: int = 0              # swapped victims restored (swap-in)
     kv_deferrals: int = 0               # chunks deferred for lack of blocks
+    swap_deferrals: int = 0             # restores deferred (SWAPPING/space/slots)
     apc: APCStats = field(default_factory=APCStats)
 
     @property
@@ -135,11 +145,18 @@ class ChunkedPrefillScheduler:
         # completion, O(1) pop on finish/preemption) — never rebuilt with a
         # full-population comprehension inside the per-round hot path
         self._decoding: Dict[int, Request] = {}
+        self._deferred_this_round: List[Request] = []
         self.stats = SchedulerStats()
         self._round = 0
         self._slot_binder = None
         self._slot_releaser = None
         self._bound_slots: set = set()   # req_ids currently holding a slot
+        # swap-out preemption (attach_swap): "recompute" discards victims' KV,
+        # "swap" stages it host-side and chooses per victim via the cost model
+        self.preemption_mode = "recompute"
+        self._swapper = None             # engine hook: gather + slot release
+        self._swap_restorer = None       # engine hook: scatter staged KV back
+        self._swap_cost = None           # CostModel-like (swap bytes vs FLOPs)
         if self._books():
             self._apply_tenant_quotas()
 
@@ -177,6 +194,26 @@ class ChunkedPrefillScheduler:
         immediately."""
         self._slot_binder = binder
         self._slot_releaser = releaser
+
+    def attach_swap(self, swapper=None, restorer=None, *, cost_model=None,
+                    mode: str = "swap") -> None:
+        """Enable swap-out preemption (``mode="swap"``): preemption victims'
+        KV is staged host-side and they re-enter the fair queue
+        decode-resumable instead of prefill-restart.
+
+        ``swapper(req)`` (engine) gathers the victim's pages device-side,
+        starts the async device→host copy, releases the slot, and calls
+        ``pool.swap_out`` — when absent (simulator), the scheduler swaps the
+        pool's accounting directly with ``ready=True``.  ``restorer(req)``
+        scatters the staged payload into freshly allocated pages at swap-in.
+        ``cost_model`` decides swap-vs-recompute per victim (swap bytes vs
+        recompute FLOPs); with no model attached, swap always wins."""
+        if mode not in ("swap", "recompute"):
+            raise ValueError(f"unknown preemption mode {mode!r}")
+        self.preemption_mode = mode
+        self._swapper = swapper
+        self._swap_restorer = restorer
+        self._swap_cost = cost_model
 
     # -- intake ------------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -268,6 +305,13 @@ class ChunkedPrefillScheduler:
 
         n_active_prefills = 0
         deferred: List[Request] = []
+        # popped-but-deferred candidates leave the queue until the round
+        # ends; expose them to _pick_victim so a block-holder can't hide
+        # from preemption by simply having been scanned earlier this round
+        # (with swap-mode's extra deferral states this was a real livelock:
+        # a stable pop order kept the only eligible victim in `deferred`
+        # every round, so no one could ever make room)
+        self._deferred_this_round = deferred
         seq_slots = cfg.max_seqs - n_decode
         blocks = 0
         # slot-exhaustion scan state: once the binder misses, only requests
@@ -281,6 +325,29 @@ class ChunkedPrefillScheduler:
             req = self.queue.pop()
             if req is None:
                 break
+
+            # swap-out victims come back through the SAME fair queue, but a
+            # restore (swap-in) replaces the recompute prefill: one round, not
+            # ceil(context/budget).  A mid-flight victim (SWAPPING: its
+            # device→host gather has not drained) is deferred WITHOUT
+            # touching the slot binder — it must never re-bind a slot in the
+            # round (or pipeline window) that is still copying its pages out.
+            if self.kv_pool is not None and \
+                    self.kv_pool.swap_state(req.req_id) is not None:
+                if self._try_restore(req, batch, scheduled_ids):
+                    if req.remaining_prefill <= 0:
+                        # decode-resumable: rejoins the decode set and decodes
+                        # from the next round (this round's decode tokens were
+                        # already booked); no prefill chunk to size
+                        self._decoding[req.req_id] = req
+                        continue
+                    # mid-prefill victim: fall through and chunk over the
+                    # restored KV (binder already consulted by the restore)
+                else:
+                    self.stats.swap_deferrals += 1
+                    deferred.append(req)
+                    blocks += 1
+                    continue
 
             # engine-slot gate (late binding): bind BEFORE sizing the chunk —
             # binding may consume a prefix-cache hit, which shrinks
@@ -374,6 +441,7 @@ class ChunkedPrefillScheduler:
 
         for r in deferred:
             self.queue.add(r)
+        self._deferred_this_round = []
 
         batch.state = st
         self.stats.scheduled_prefill_seqs += len(batch.prefill_chunks)
@@ -402,15 +470,18 @@ class ChunkedPrefillScheduler:
         return kept
 
     def _make_room(
-        self, req: Request, batch: ScheduledBatch, scheduled_ids: set
+        self, req: Request, batch: ScheduledBatch, scheduled_ids: set,
+        *, tokens: int = 1,
     ) -> bool:
         """Preempt strictly-younger block-holders until ``req`` can allocate
-        one more token (True) or no eligible victim remains (False).  When the
-        tenant quota — not pool space — is the binding limit, only same-tenant
-        victims can help."""
+        ``tokens`` more (True) or no eligible victim remains (False).  When
+        the tenant quota — not pool space — is the binding limit, only
+        same-tenant victims can help.  Restores pass their full staged length
+        (a swapped request holds nothing, so ``blocks_needed`` equals its
+        whole restore size)."""
         pool = self.kv_pool
-        while not pool.can_allocate(req.req_id, 1, tenant=req.tenant):
-            same_tenant = pool.quota_blocked(req.req_id, 1, tenant=req.tenant)
+        while not pool.can_allocate(req.req_id, tokens, tenant=req.tenant):
+            same_tenant = pool.quota_blocked(req.req_id, tokens, tenant=req.tenant)
             victim = self._pick_victim(
                 req, scheduled_ids, tenant=req.tenant if same_tenant else None
             )
@@ -418,6 +489,68 @@ class ChunkedPrefillScheduler:
                 return False
             self._preempt(victim, batch)
         return True
+
+    def _try_restore(
+        self, req: Request, batch: ScheduledBatch, scheduled_ids: set
+    ) -> bool:
+        """Swap a victim's staged KV back onto the device: bind a slot,
+        allocate fresh blocks (re-charging its tenant quota, preempting
+        strictly-younger holders if needed), scatter the payload via the
+        engine hook, and resume the request.  Returns False — deferring the
+        request untouched — while the swap-out copy is still in flight
+        (SWAPPING), or when no slot/blocks are available."""
+        pool = self.kv_pool
+        if not pool.swap_ready(req.req_id):
+            return False               # mid-flight: never re-bind this round
+        tokens = pool.swap_tokens(req.req_id)
+        bound_here = False
+        if self._slot_binder is not None and req.req_id not in self._bound_slots:
+            if not self._slot_binder(req):
+                return False
+            self._bound_slots.add(req.req_id)
+            bound_here = True
+        if not pool.can_allocate(req.req_id, tokens, tenant=req.tenant) and \
+                not self._make_room(req, batch, scheduled_ids, tokens=tokens):
+            if bound_here and self._slot_releaser is not None:
+                # blocks didn't materialize: don't pin the fresh slot
+                self._slot_releaser(req)
+                self._bound_slots.discard(req.req_id)
+            return False
+        _ids, payload = pool.swap_in(req.req_id, tenant=req.tenant)
+        if self._swap_restorer is not None:
+            self._swap_restorer(req, payload)
+        req.resume()
+        scheduled_ids.add(req.req_id)   # restore-immune for this round
+        self.stats.swap_restores += 1
+        batch.restored.append(req)
+        batch.swap_in_mb += tokens * pool.cfg.bytes_per_token / 2**20
+        if self.fairness is not None and req.state == RequestState.DECODING:
+            # it will never finish a prefill chunk: retire its fair-queue
+            # ownership and mark it decode-active again
+            self.fairness.on_resume(req)
+        return True
+
+    def _should_swap(self, victim: Request) -> bool:
+        """Swap-vs-recompute, per victim: compare the swap transfer cost
+        (bytes over the host link, out + back in) against re-prefilling the
+        victim's whole context (FLOPs plus per-round overhead across the
+        rounds LPRS predicts the recompute takes).  No cost model attached
+        (or zero-byte accounting pools): swapping wins."""
+        if self.preemption_mode != "swap":
+            return False
+        pool = self.kv_pool
+        tokens = pool.lens.get(victim.req_id, 0)
+        if tokens <= 0 or pool.swap_state(victim.req_id) is not None:
+            return False
+        if self._swap_cost is None:
+            return True
+        swap_ms = self._swap_cost.swap_cost_ms(tokens, pool.cfg.bytes_per_token)
+        rounds = predicted_resume_rounds(
+            tokens, self.cfg.token_budget, swapped=False
+        )
+        recompute_ms = self._swap_cost.recompute_cost_ms(tokens) + \
+            self._swap_cost.cfg.c0_ms * (rounds - 1)
+        return swap_ms <= recompute_ms
 
     def _pick_victim(
         self, requester: Request, scheduled_ids: set, tenant: Optional[str] = None
@@ -429,7 +562,12 @@ class ChunkedPrefillScheduler:
         one, which makes eviction thrash-free (total order on arrivals)."""
         pool = self.kv_pool
         best: Optional[Request] = None
-        for r in list(self._decoding.values()) + list(self.queue.requests()):
+        candidates = (
+            list(self._decoding.values())
+            + list(self.queue.requests())
+            + list(self._deferred_this_round)
+        )
+        for r in candidates:
             if r.req_id == requester.req_id or r.req_id in scheduled_ids:
                 continue
             if tenant is not None and r.tenant != tenant:
@@ -444,14 +582,30 @@ class ChunkedPrefillScheduler:
         return best
 
     def _preempt(self, victim: Request, batch: ScheduledBatch) -> None:
-        """Free the victim's blocks and send its prefill back for recompute."""
+        """Evict one victim: swap its KV out to host staging (swap mode, when
+        the cost model favors it) or free its blocks for recompute."""
         was_decoding = victim.state == RequestState.DECODING
         in_queue = victim in self.queue
         is_delayed = getattr(self.queue, "is_delayed", None)
-        self.kv_pool.release(victim.req_id, keep_registration=True)
-        victim.preempt()
-        if self._slot_releaser is not None:
-            self._slot_releaser(victim)    # slot frees for this very round
+        if self._should_swap(victim):
+            tokens = self.kv_pool.lens.get(victim.req_id, 0)
+            if self._swapper is not None:
+                # engine path: gather pages + start the async device→host
+                # copy + release the slot + pool.swap_out (state SWAPPING —
+                # restorable only after the engine's drain finalizes it)
+                self._swapper(victim)
+            else:
+                # accounting-only path (simulator): no real copy to wait for
+                self.kv_pool.swap_out(victim.req_id, ready=True)
+            victim.swap_preempt()
+            self.stats.swap_preemptions += 1
+            batch.swapped_out.append(victim)
+            batch.swap_out_mb += tokens * self.kv_pool.cfg.bytes_per_token / 2**20
+        else:
+            self.kv_pool.release(victim.req_id, keep_registration=True)
+            victim.preempt()
+            if self._slot_releaser is not None:
+                self._slot_releaser(victim)    # slot frees for this very round
         self._bound_slots.discard(victim.req_id)
         self.stats.preemptions += 1
         batch.preempted.append(victim)

@@ -18,7 +18,6 @@ import os
 import queue
 import shutil
 import threading
-import time
 import uuid
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Tuple

@@ -11,7 +11,6 @@ multi-pod meshes where the pod-level all-reduce is the bottleneck.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Tuple
 
 import jax

@@ -38,6 +38,12 @@ class CostModelConfig:
     # the decode working set (Sarathi §2's observation; why identical token
     # budgets cost different wall time, the premise of LPRS §3.2)
     c_mix_ms: float = 2e-7            # per (prefill token x decode ctx token)
+    # swap-out preemption: device<->host KV migration over the host link
+    # (~20 GB/s effective PCIe4 => ~0.05 ms/MB) plus a fixed per-transfer
+    # launch cost.  Used both to price swap rounds in the simulator and to
+    # choose swap-vs-recompute per victim (bytes moved vs FLOPs recomputed).
+    c_swap_ms_per_mb: float = 0.05
+    c_swap_fixed_ms: float = 0.2
     noise_std: float = 0.02           # multiplicative log-normal noise
     seed: int = 0
 
@@ -66,6 +72,24 @@ class CostModel:
         self.cfg = cfg or CostModelConfig()
         self._rng = np.random.default_rng(self.cfg.seed)
 
+    # -- preemption-mode decision (swap bytes vs recompute FLOPs) -------------
+    def swap_cost_ms(self, n_tokens: int, bytes_per_token: int) -> float:
+        """One full swap cycle for ``n_tokens`` of KV: device→host at
+        eviction plus host→device at restore (2x the bytes), each paying the
+        fixed transfer-launch cost."""
+        mb = n_tokens * max(bytes_per_token, 0) / 2**20
+        return 2 * (self.cfg.c_swap_fixed_ms + self.cfg.c_swap_ms_per_mb * mb)
+
+    def recompute_cost_ms(self, n_tokens: int) -> float:
+        """Re-prefilling ``n_tokens`` of context from scratch: linear prefill
+        compute plus the quadratic causal-attention term (each token attends
+        to the context before it — n²/2 chunk×context products)."""
+        c = self.cfg
+        return (
+            c.c_prefill_ms * n_tokens
+            + c.c_attn_ms * n_tokens * n_tokens / 2.0
+        )
+
     def batch_latency_ms(self, batch: ScheduledBatch, *, noisy: bool = True) -> float:
         c = self.cfg
         prefill_tokens = batch.prefill_tokens
@@ -83,6 +107,12 @@ class CostModel:
             + c.c_seq_ms * batch.n_seqs
             + c.c_mix_ms * prefill_tokens * sum_ctx
         )
+        # swap traffic this round (simulator: synchronous transfer; the real
+        # engine overlaps it on the async drain path, so this is conservative)
+        swap_mb = batch.swap_out_mb + batch.swap_in_mb
+        if swap_mb > 0:
+            n_xfers = len(batch.swapped_out) + len(batch.restored)
+            t += c.c_swap_fixed_ms * n_xfers + c.c_swap_ms_per_mb * swap_mb
         if noisy and c.noise_std > 0:
             t *= float(self._rng.lognormal(0.0, c.noise_std))
         return t

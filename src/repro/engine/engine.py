@@ -44,8 +44,10 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch
+from repro.engine.costmodel import CostModel, CostModelConfig
 from repro.engine.kv_cache import KVBlockPool, KVPoolConfig, PAGED_RESIDENT
 from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
+from repro.kernels.ops import gather_swap_pages, scatter_swap_pages
 from repro.engine.sampler import SamplerConfig, sample_tokens
 from repro.models.model import Model, build_model
 
@@ -60,6 +62,10 @@ class EngineConfig:
     kv_block_size: int = 16           # page size when the engine owns its pool
     pages_per_tile: int = 1           # pages DMA-gathered per paged-kernel tile
     pipelined: bool = True            # overlap schedule(N+1) with execute(N)
+    # preemption mode: "recompute" discards a victim's KV (re-prefill from
+    # scratch, the A/B default); "swap" stages it host-side and restores it
+    # on re-schedule — the scheduler picks per victim via the cost model
+    preemption_mode: str = "recompute"
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     seed: int = 0
 
@@ -111,6 +117,12 @@ class JAXEngine:
         # is built to close); fed by execute()/dispatch()
         self.bubble_ms: List[float] = []
         self._t_ready: Optional[float] = None
+
+        # swap-out preemption: device->host gathers whose async host copy has
+        # not drained yet — (req_id, k_staged, v_staged); finalize_swaps()
+        # lands them in the pool's staging store (same one-round-late path as
+        # the sampled-token readback)
+        self._pending_swaps: List[Tuple[int, jax.Array, jax.Array]] = []
 
         self.kv_pool: Optional[KVBlockPool] = kv_pool
         # the engine books blocks itself only while it owns a private pool;
@@ -213,7 +225,12 @@ class JAXEngine:
 
     def warmup(self) -> None:
         """Compile every bucket shape once so profiling sees steady-state
-        latencies, not jit compilation (the paper's 'cleaned' samples)."""
+        latencies, not jit compilation (the paper's 'cleaned' samples).
+
+        Order matters with an EXTERNAL pool: ``bind_kv_pool`` rebuilds the
+        physical page array (page ids must equal the pool's block ids),
+        which changes the cache shape and invalidates everything compiled
+        here — bind first, then warm up."""
         B = self.cfg.n_slots
         off = jnp.zeros((B,), jnp.bool_)
         for C in self.cfg.chunk_buckets:
@@ -238,6 +255,33 @@ class JAXEngine:
                     jnp.asarray(self._bt_host[idx])
                 )
             jax.block_until_ready(self.block_tables)
+        if self.cfg.preemption_mode == "swap":
+            self._prewarm_swap_shapes()
+
+    def _prewarm_swap_shapes(self) -> None:
+        """Compile the swap gather/scatter for every page-id bucket a swap
+        can hit (paged) or the slot row copy (dense), so the first real
+        preemption doesn't pay jit compilation inside a serving round."""
+        if self.cfg.paged_kv:
+            buckets = sorted({_pow2_bucket(n)
+                              for n in range(1, self.max_pages + 1)})
+            for k in buckets:
+                ids = jnp.full((k,), self._sink, jnp.int32)   # sink-only: no-op
+                staged_k = gather_swap_pages(self.cache["k"], ids,
+                                             use_pallas=self.cfg.use_pallas)
+                staged_v = gather_swap_pages(self.cache["v"], ids,
+                                             use_pallas=self.cfg.use_pallas)
+                self.cache["k"] = scatter_swap_pages(
+                    self.cache["k"], ids, staged_k,
+                    use_pallas=self.cfg.use_pallas)
+                self.cache["v"] = scatter_swap_pages(
+                    self.cache["v"], ids, staged_v,
+                    use_pallas=self.cfg.use_pallas)
+            jax.block_until_ready(self.cache["k"])
+        else:
+            k_row = np.asarray(self.cache["k"][:, 0])
+            self.cache["k"] = self.cache["k"].at[:, 0].set(jnp.asarray(k_row))
+            jax.block_until_ready(self.cache["k"])
 
     # -- slot management -------------------------------------------------------
     def acquire_slot(self, req: Request) -> bool:
@@ -287,6 +331,96 @@ class JAXEngine:
 
     def has_capacity(self) -> bool:
         return len(self.free_slots) > 0
+
+    # -- swap-out preemption (device<->host KV migration) ----------------------
+    def _swap_page_ids(self, req_id: int) -> Tuple[np.ndarray, int]:
+        """The request's physical page ids, right-padded with the sink page
+        to a power-of-two bucket so the gather/scatter kernels only ever
+        compile O(log max_pages) shapes.  Returns (padded ids, real count)."""
+        table = self.kv_pool.tables.get(req_id, [])
+        n = len(table)
+        k = _pow2_bucket(max(n, 1))
+        ids = np.full((k,), self._sink, np.int32)
+        ids[:n] = table
+        return ids, n
+
+    def swap_out(self, req: Request) -> None:
+        """Scheduler swapper hook: gather the victim's KV into a contiguous
+        staging tensor (paged: one jitted page gather over its block table;
+        dense: its slot rows), start the async device→host copy, move the
+        pool accounting to a SWAPPING staging record, and release the slot.
+        The payload becomes restorable only when ``finalize_swaps`` drains
+        the copy — the same one-round-late visibility the token readback
+        has, so a mid-pipeline victim is never restored (or re-bound) in the
+        round that is still copying its pages out."""
+        pool = self.kv_pool
+        slot = self.slot_of.get(req.req_id)
+        assert slot is not None, f"swap_out of unbound req {req.req_id}"
+        if self.cfg.paged_kv:
+            ids, _n = self._swap_page_ids(req.req_id)
+            jids = jnp.asarray(ids)
+            k = gather_swap_pages(self.cache["k"], jids,
+                                  use_pallas=self.cfg.use_pallas)
+            v = gather_swap_pages(self.cache["v"], jids,
+                                  use_pallas=self.cfg.use_pallas)
+        else:
+            # dense layout: the whole slot row (static shape — positions past
+            # the stored length are never attended to after restore)
+            k = self.cache["k"][:, slot]
+            v = self.cache["v"][:, slot]
+        k.copy_to_host_async()
+        v.copy_to_host_async()
+        self._pending_swaps.append((req.req_id, k, v))
+        pool.swap_out(req.req_id)              # state: SWAPPING
+        self.release(req)
+
+    def finalize_swaps(self) -> None:
+        """Drain pending swap-out copies: block until each staged tensor is
+        host-side (the copies were dispatched before the current round's
+        step, so this wait is bounded) and mark the pool records
+        SWAPPED_OUT.  Called from ``drain`` — swap traffic retires on the
+        same one-round-late path as sampled tokens — and by the serve loop
+        when no round is in flight to piggyback on."""
+        if not self._pending_swaps:
+            return
+        for req_id, k, v in self._pending_swaps:
+            self.kv_pool.finish_swap_out(req_id, (np.asarray(k), np.asarray(v)))
+        self._pending_swaps.clear()
+
+    def has_pending_swaps(self) -> bool:
+        return bool(self._pending_swaps)
+
+    def swap_in(self, req: Request, payload) -> None:
+        """Scheduler restorer hook, called right after ``pool.swap_in``
+        rebuilt the request's table from fresh blocks: scatter the staged
+        K/V into the new physical pages (paged) or the freshly bound slot's
+        rows (dense) and restore the device-side length."""
+        slot = self.slot_of.get(req.req_id)
+        assert slot is not None, f"swap_in of unbound req {req.req_id}"
+        assert payload is not None, f"swap_in of req {req.req_id} without payload"
+        k, v = payload
+        tokens = self.kv_pool.lens.get(req.req_id, 0)
+        if self.cfg.paged_kv:
+            ids, n = self._swap_page_ids(req.req_id)
+            assert n and ids.shape[0] == k.shape[1], (
+                f"req {req.req_id}: restore bucket {ids.shape[0]} != staged "
+                f"{k.shape[1]}"
+            )
+            jids = jnp.asarray(ids)
+            self.cache["k"] = scatter_swap_pages(
+                self.cache["k"], jids, jnp.asarray(k),
+                use_pallas=self.cfg.use_pallas)
+            self.cache["v"] = scatter_swap_pages(
+                self.cache["v"], jids, jnp.asarray(v),
+                use_pallas=self.cfg.use_pallas)
+            # table changed wholesale: force a full device row rewrite
+            self._bt_host[slot, :] = self._sink
+            self._bt_len[slot] = 0
+            self._bt_dirty.add(slot)
+        else:
+            self.cache["k"] = self.cache["k"].at[:, slot].set(jnp.asarray(k))
+            self.cache["v"] = self.cache["v"].at[:, slot].set(jnp.asarray(v))
+        self.lens = self.lens.at[slot].set(tokens)
 
     # -- prefix-cache payloads -------------------------------------------------
     def _restore_prefix_dense(self, req: Request, slot: int) -> None:
@@ -406,7 +540,17 @@ class JAXEngine:
         for req in batch.decode_reqs:
             slot = self.slot_of[req.req_id]
             chunk_lens[slot] = 1
-            use_last[slot] = True
+            if req.needs_replay:
+                # first decode round after a swap-in: the device-resident
+                # last_token lane died with the old slot, so stage the last
+                # delivered id from the host.  Safe by the drain ordering —
+                # every token sampled before the swap-out drained before this
+                # round stages (tokens land host-side one round late; the
+                # restore itself is one more round later).
+                tokens[slot, 0] = req.output_tokens[-1]
+                req.needs_replay = False
+            else:
+                use_last[slot] = True
             sample_mask[slot] = True
             sampled.append((req, slot))
         for req, c in batch.prefill_chunks:
@@ -450,6 +594,10 @@ class JAXEngine:
         toks = np.asarray(inflight.toks)
         self._t_ready = time.perf_counter()
         wall_ms = (self._t_ready - inflight.t_dispatch) * 1e3
+        # swap-out staging retires on the same one-round-late path: gathers
+        # dispatched before this round's step are host-side by now (or the
+        # asarray below bounds the wait)
+        self.finalize_swaps()
         for req, slot in inflight.sampled:
             tok = int(toks[slot])
             req.next_token = tok
@@ -539,6 +687,15 @@ def serve(
         engine.bind_kv_pool(kv_pool)
     # slots bind at first schedule and free at preemption, not admission
     scheduler.attach_slot_binder(engine.acquire_slot, releaser=engine.release)
+    if scheduler.kv_pool is not None and scheduler.kv_booking:
+        # preemption mode comes from the ENGINE config (it owns the physical
+        # swap path); the deterministic cost model prices swap bytes vs
+        # recompute FLOPs per victim
+        scheduler.attach_swap(
+            engine.swap_out, engine.swap_in,
+            cost_model=CostModel(CostModelConfig(noise_std=0.0)),
+            mode=engine.cfg.preemption_mode,
+        )
     # bubble accounting is per-serve: drop any history (and the ready-stamp
     # of a previous serve, which would read as one giant inter-serve bubble)
     engine.bubble_ms = []
@@ -611,6 +768,12 @@ def serve(
             if inflight is not None:
                 drain_inflight()
                 continue
+            if engine.has_pending_swaps():
+                # nothing in flight to piggyback the staging drain on (e.g.
+                # every runnable request is a SWAPPING victim): finalize now
+                # so the next schedule() round can restore them
+                engine.finalize_swaps()
+                continue
             time.sleep(0.0005)
             continue
 
@@ -657,6 +820,7 @@ def serve(
 
     if inflight is not None:
         drain_inflight()
+    engine.finalize_swaps()    # no staging entry left mid-flight at exit
 
     samples = (np.stack(feats), np.asarray(lats)) if collect_samples and feats else None
     return ServeResult(

@@ -26,13 +26,26 @@ Beyond flat accounting, the pool implements the full KV lifecycle:
 * **Payload store** — the real engine parks the actual K/V arrays of sealed
   blocks host-side so a prefix hit restores numerically identical KV state
   into a fresh slot (causal attention: prefix KV depends only on the prefix).
+* **Swap staging store** — a preemption victim's KV can be *swapped out* to a
+  host-side staging entry instead of discarded: ``swap_out`` moves the
+  request's whole table into a ``_SwapRecord`` (device blocks freed, tenant
+  quota refunded), ``swap_in`` later rebuilds the table from fresh blocks
+  (quota re-charged) and hands the staged payload back for the device
+  restore.  The record carries the block lifecycle state: ``SWAPPING`` while
+  the device→host gather is still in flight (the scheduler must not restore
+  — or even re-bind — the victim yet), ``SWAPPED_OUT`` once the payload is
+  host-resident.  Blocks referenced by live tables are implicitly
+  ``RESIDENT``.
 
 Invariant (``check_invariants``):  ``free + evictable + referenced ==
 n_blocks``; refcounts are never negative; every table entry references a
-live block; tenant charges sum to the table sizes.
+live block; tenant charges sum to the table sizes; every live request's
+tokens are tracked by exactly one of {block table, swap staging entry},
+never both; swapped tokens pin no device blocks and no tenant quota.
 """
 from __future__ import annotations
 
+import enum
 import math
 from collections import OrderedDict
 from dataclasses import dataclass, field
@@ -50,6 +63,31 @@ class KVQuotaExceeded(MemoryError):
 # matches.  (A block id is recycled only after eviction removes its hash, so
 # a matchable block's page content is always intact.)
 PAGED_RESIDENT = "paged-resident"
+
+
+class BlockState(enum.Enum):
+    """Lifecycle of a request's KV data relative to device memory.  Blocks in
+    a live table are RESIDENT; a swap record is SWAPPING while the
+    device→host gather is in flight and SWAPPED_OUT once the payload is
+    host-side (only then may the request be restored)."""
+
+    RESIDENT = "resident"
+    SWAPPING = "swapping"
+    SWAPPED_OUT = "swapped_out"
+
+
+@dataclass
+class _SwapRecord:
+    """One swapped-out request's host-side staging entry: its logical KV
+    length, how many device blocks a restore must re-allocate, and the
+    gathered K/V payload (``None`` for accounting-only users like the
+    simulator, or while the async gather has not drained yet)."""
+
+    tokens: int                       # stored KV length at swap-out
+    n_blocks: int                     # device blocks the restore re-allocates
+    tenant: str = "default"
+    state: BlockState = BlockState.SWAPPING
+    payload: object = None            # engine K/V arrays once the copy drains
 
 
 @dataclass
@@ -77,6 +115,10 @@ class KVPoolStats:
     capacity_evictions: int = 0       # ... trimmed by cache_max_blocks
     ttl_evictions: int = 0            # ... expired by cache_ttl_s
     sealed_blocks: int = 0            # blocks that became cache-addressable
+    swap_outs: int = 0                # requests swapped out to host staging
+    swap_ins: int = 0                 # requests restored from host staging
+    swapped_out_tokens: int = 0       # Σ tokens moved device -> host
+    swapped_in_tokens: int = 0        # Σ tokens moved host -> device
 
     @property
     def hit_rate(self) -> float:
@@ -112,6 +154,8 @@ class KVBlockPool:
         self._evictable: "OrderedDict[int, int]" = OrderedDict()  # block_id -> hash
         self._parked_at: Dict[int, float] = {}     # block_id -> park clock (TTL)
         self._now = 0.0                            # advanced by the scheduler
+        # host-side swap staging: req_id -> _SwapRecord (disjoint from tables)
+        self._swap: Dict[int, _SwapRecord] = {}
         # per-request registration + per-tenant accounting
         self._reg: Dict[int, _Registration] = {}
         self._tenant_used: Dict[str, int] = {}     # tenant -> charged blocks
@@ -422,6 +466,122 @@ class KVBlockPool:
             else:
                 self._reg.pop(req_id, None)
 
+    # -- swap-out preemption (host staging) ------------------------------------
+    def swap_out(self, req_id: int, *, ready: bool = False) -> _SwapRecord:
+        """Move a request's KV accounting from its block table to a host-side
+        staging record: device blocks are released (shared/hashed blocks
+        follow the normal refcount/park path — the staged payload covers the
+        FULL stored length, so a restore never depends on the cache), tenant
+        quota is refunded, and the request becomes decode-resumable instead
+        of prefill-restart.
+
+        The record starts in ``SWAPPING`` (the engine's async device→host
+        gather is in flight; ``finish_swap_out`` flips it) unless
+        ``ready=True`` (accounting-only callers — the simulator — have no
+        real copy to wait for).  ``reg.sealed`` is kept: the prompt is
+        unchanged, so already-indexed prefix blocks stay valid; only
+        ``newly_sealed`` capture records are dropped (their blocks are no
+        longer engine-readable)."""
+        table = self.tables.get(req_id)
+        assert table, f"swap_out of req {req_id} with no blocks"
+        assert req_id not in self._swap, f"req {req_id} already swapped"
+        tokens = self.lens.get(req_id, 0)
+        rec = _SwapRecord(
+            tokens=tokens,
+            n_blocks=len(table),
+            tenant=self.tenant_of(req_id),
+            state=BlockState.SWAPPED_OUT if ready else BlockState.SWAPPING,
+        )
+        reg = self._reg.get(req_id)
+        sealed = reg.sealed if reg is not None else 0
+        self.release(req_id, keep_registration=True)
+        if reg is not None:
+            reg.sealed = sealed          # prompt unchanged: hashes still valid
+        self._swap[req_id] = rec
+        self.stats.swap_outs += 1
+        self.stats.swapped_out_tokens += tokens
+        return rec
+
+    def finish_swap_out(self, req_id: int, payload: object = None) -> None:
+        """The async gather drained: attach the host payload and mark the
+        record restorable (``SWAPPED_OUT``)."""
+        rec = self._swap.get(req_id)
+        assert rec is not None, f"finish_swap_out of unswapped req {req_id}"
+        if payload is not None:
+            rec.payload = payload
+        rec.state = BlockState.SWAPPED_OUT
+
+    def swap_state(self, req_id: int) -> Optional[BlockState]:
+        """``None`` when the request is not swapped (its blocks, if any, are
+        RESIDENT); otherwise the staging record's lifecycle state."""
+        rec = self._swap.get(req_id)
+        return rec.state if rec is not None else None
+
+    def swap_ready(self, req_id: int) -> bool:
+        rec = self._swap.get(req_id)
+        return rec is not None and rec.state == BlockState.SWAPPED_OUT
+
+    def swap_tokens(self, req_id: int) -> int:
+        rec = self._swap.get(req_id)
+        return rec.tokens if rec is not None else 0
+
+    def swapped_requests(self) -> List[int]:
+        return list(self._swap)
+
+    def can_swap_in(self, req_id: int, tenant: Optional[str] = None) -> bool:
+        """True when the staged payload is host-resident AND the pool + the
+        tenant's quota can back the restore right now."""
+        rec = self._swap.get(req_id)
+        if rec is None or rec.state != BlockState.SWAPPED_OUT:
+            return False
+        if rec.n_blocks > self.allocatable_blocks():
+            return False
+        return rec.n_blocks <= self.quota_headroom_blocks(
+            tenant or self.tenant_of(req_id)
+        )
+
+    def swap_in(self, req_id: int,
+                tenant: Optional[str] = None) -> Tuple[List[int], object]:
+        """Restore a swapped-out request: allocate fresh device blocks
+        (re-charging the tenant's quota), rebuild its table/length, drop the
+        staging record, and return ``(new_block_ids, payload)`` so the engine
+        can scatter the staged K/V into the new pages.  Restored blocks are
+        private (refcount 1, not re-sealed): already-indexed prefix blocks
+        keep pointing at their original — possibly still cached — copies."""
+        rec = self._swap.get(req_id)
+        assert rec is not None, f"swap_in of unswapped req {req_id}"
+        assert rec.state == BlockState.SWAPPED_OUT, (
+            f"req {req_id} swap still in flight ({rec.state})"
+        )
+        t = tenant if tenant is not None else rec.tenant
+        if rec.n_blocks > self.allocatable_blocks():
+            raise MemoryError(
+                f"KV pool exhausted on swap-in: need {rec.n_blocks} blocks, "
+                f"have {self.allocatable_blocks()}"
+            )
+        if rec.n_blocks > self.quota_headroom_blocks(t):
+            raise KVQuotaExceeded(
+                f"tenant {t!r} KV quota exhausted on swap-in: need "
+                f"{rec.n_blocks} blocks, quota {self._tenant_quota.get(t)}, "
+                f"used {self._tenant_used.get(t, 0)}"
+            )
+        got = [self._pop_block() for _ in range(rec.n_blocks)]
+        for bid in got:
+            self._ref[bid] = 1
+        assert not self.tables.get(req_id), "swap_in over a live table"
+        self.tables[req_id] = list(got)
+        self.lens[req_id] = rec.tokens
+        self._tenant_used[t] = self._tenant_used.get(t, 0) + rec.n_blocks
+        self._swap.pop(req_id)
+        self.stats.swap_ins += 1
+        self.stats.swapped_in_tokens += rec.tokens
+        return got, rec.payload
+
+    def drop_swap(self, req_id: int) -> None:
+        """Discard a staging record without restoring (finished/cancelled
+        victim, or a caller falling back to recompute).  Idempotent."""
+        self._swap.pop(req_id, None)
+
     # -- accounting (LPRS features) --------------------------------------------
     @property
     def used_blocks(self) -> int:
@@ -433,6 +593,12 @@ class KVBlockPool:
     def cached_blocks(self) -> int:
         """Refcount-0 blocks retained only by the prefix cache."""
         return len(self._evictable)
+
+    @property
+    def swapped_out_blocks(self) -> int:
+        """Device blocks the currently-swapped requests will re-allocate on
+        restore (their data is host-side; no device blocks are pinned now)."""
+        return sum(rec.n_blocks for rec in self._swap.values())
 
     @property
     def used_mb(self) -> float:
@@ -492,6 +658,23 @@ class KVBlockPool:
                 assert bid in self._hash_of, (
                     f"block {bid} shared by {self._ref[bid]} tables but not sealed"
                 )
+        # swap-staging invariants: a request's tokens live in exactly one of
+        # {block table, staging entry} — never both; a staged entry always
+        # carries real tokens and a positive restore size
+        for req_id, rec in self._swap.items():
+            assert not self.tables.get(req_id), (
+                f"req {req_id} swapped AND holding a live table"
+            )
+            assert req_id not in self.lens, (
+                f"req {req_id} swapped AND holding a device length"
+            )
+            assert rec.tokens > 0 and rec.n_blocks > 0, (
+                f"req {req_id} empty swap record {rec}"
+            )
+            assert rec.tokens <= rec.n_blocks * bs, (
+                f"req {req_id} swap record overfull: {rec.tokens} tokens in "
+                f"{rec.n_blocks} blocks of {bs}"
+            )
         # cache-bound invariants: parked set == evictable set; capacity holds
         assert set(self._parked_at) == set(self._evictable), "stamp/LRU drift"
         if self.cfg.cache_max_blocks is not None:

@@ -108,6 +108,11 @@ class MemoryReport:
     free_blocks: int
     utilization: float
     blocks_by_tenant: Dict[str, int]
+    # swap-out preemption traffic (0 everywhere in recompute mode)
+    swap_preemptions: int = 0        # victims staged host-side, not recomputed
+    swap_restores: int = 0           # staged victims swapped back in
+    swapped_out_tokens: int = 0      # Σ tokens moved device -> host
+    swapped_in_tokens: int = 0       # Σ tokens moved host -> device
 
     def row(self) -> Dict[str, float]:
         return {
@@ -117,6 +122,8 @@ class MemoryReport:
             "preemptions": float(self.preemptions),
             "kv_deferrals": float(self.kv_deferrals),
             "kv_utilization": self.utilization,
+            "swap_preemptions": float(self.swap_preemptions),
+            "swap_restores": float(self.swap_restores),
         }
 
 
@@ -138,6 +145,10 @@ def summarize_memory(pool, scheduler_stats=None) -> MemoryReport:
         free_blocks=len(pool.free_blocks),
         utilization=pool.utilization(),
         blocks_by_tenant=pool.blocks_by_tenant(),
+        swap_preemptions=getattr(scheduler_stats, "swap_preemptions", 0),
+        swap_restores=getattr(scheduler_stats, "swap_restores", 0),
+        swapped_out_tokens=s.swapped_out_tokens,
+        swapped_in_tokens=s.swapped_in_tokens,
     )
 
 

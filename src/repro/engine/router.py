@@ -19,7 +19,6 @@ Design (1000+ node posture, validated here over simulated replicas):
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
@@ -27,7 +26,6 @@ from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.costmodel import CostModel, CostModelConfig
 from repro.engine.metrics import FairnessReport, summarize, summarize_by_tenant
-from repro.engine.simulator import ServingSimulator
 
 
 @dataclass

@@ -27,14 +27,13 @@ paper's offline profiling pipeline (§3.2.1 step 3).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.features import BatchState
 from repro.core.request import Request, RequestState
-from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch, SchedulerConfig
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.costmodel import CostModel
 from repro.engine.kv_cache import KVBlockPool
 from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
@@ -63,6 +62,7 @@ class ServingSimulator:
         max_rounds: int = 2_000_000,
         horizon_s: Optional[float] = None,
         legacy_eager_kv: bool = False,
+        preemption_mode: str = "recompute",
     ):
         self.sched = scheduler
         self.cost = cost_model
@@ -76,6 +76,12 @@ class ServingSimulator:
             # the scheduler owns block booking (unless running the legacy
             # eager-admission baseline, where the pool is features-only)
             scheduler.attach_kv_pool(kv_pool, booking=not legacy_eager_kv)
+            if not legacy_eager_kv:
+                # accounting-only swap (no engine hooks: records are ready
+                # immediately); the cost model prices the transfers into the
+                # round latency and decides swap-vs-recompute per victim
+                scheduler.attach_swap(cost_model=cost_model,
+                                      mode=preemption_mode)
 
     def run(self, requests: List[Request]) -> SimResult:
         pending = sorted(requests, key=lambda r: r.arrival_time)
@@ -171,6 +177,7 @@ def run_policy(
     collect_samples: bool = False,
     horizon_s: Optional[float] = None,
     legacy_eager_kv: bool = False,
+    preemption_mode: str = "recompute",
 ) -> SimResult:
     """Convenience wrapper: fresh scheduler + simulator over a request list.
 
@@ -183,6 +190,6 @@ def run_policy(
     sim = ServingSimulator(
         sched, cost_model or CostModel(), kv_pool=kv_pool,
         collect_samples=collect_samples, horizon_s=horizon_s,
-        legacy_eager_kv=legacy_eager_kv,
+        legacy_eager_kv=legacy_eager_kv, preemption_mode=preemption_mode,
     )
     return sim.run(requests)

@@ -7,7 +7,6 @@ TPU the same calls compile to Mosaic.  The engine flips this with one flag.
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
@@ -15,6 +14,7 @@ from repro.kernels.decode_attention import decode_attention
 from repro.kernels.fused_swiglu import fused_swiglu
 from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.paged_prefill_attention import paged_prefill_attention
+from repro.kernels.swap import swap_gather_pages, swap_scatter_pages
 
 _ON_TPU = None
 
@@ -85,4 +85,21 @@ def swiglu_ffn(x, w_gate, w_up, w_down, *, use_pallas: bool = True,
     return fused_swiglu(
         x, w_gate, w_up, w_down,
         block_m=block_m, block_f=block_f, interpret=not on_tpu(),
+    )
+
+
+def gather_swap_pages(pages, ids, *, use_pallas: bool = True):
+    """Collect scattered physical pages ``pages[:, ids]`` into one contiguous
+    staging tensor (swap-out: the engine host-copies the result as a single
+    dense DMA)."""
+    return swap_gather_pages(
+        pages, ids, use_pallas=use_pallas, interpret=not on_tpu()
+    )
+
+
+def scatter_swap_pages(pages, ids, staged, *, use_pallas: bool = True):
+    """Write a staging tensor back into freshly allocated physical pages
+    (swap-in restore; ``pages`` is donated and updated in place)."""
+    return swap_scatter_pages(
+        pages, ids, staged, use_pallas=use_pallas, interpret=not on_tpu()
     )

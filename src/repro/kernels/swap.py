@@ -1,0 +1,116 @@
+"""Pallas TPU kernels: KV page swap gather/scatter (swap-out preemption).
+
+Swap-out preemption migrates a victim's KV pages between device HBM and a
+host-side staging buffer instead of discarding them for recompute.  The
+device half of that move is pure data movement over the paged layout:
+
+* ``swap_gather_pages`` — collect a victim's scattered physical pages into
+  ONE contiguous staging tensor ``(L, n_pages, page_size, Hkv, hd)``; the
+  engine starts ``copy_to_host_async`` on the result, so the host transfer
+  is a single dense DMA rather than ``n_pages`` strided ones.
+* ``swap_scatter_pages`` — the inverse: write a restored staging tensor into
+  freshly allocated physical pages (aliased in place: the page pool is
+  donated, no second copy of HBM is materialized).
+
+Both ride the same scalar-prefetched page-id indirection as the paged
+attention kernels: ids land in SMEM before the body runs, each grid step
+moves one ``(page_size, Hkv, hd)`` page with one async local copy.  Page-id
+lists are padded to power-of-two buckets by the caller (gather pads with the
+sink page — garbage rows are sliced off host-side; scatter pads with the
+sink page — duplicate writes land in the never-read sink).
+
+The pure-jnp oracles (``use_pallas=False``) are the A/B reference: fancy
+indexing for the gather, ``.at[].set`` for the scatter.  On CPU the kernels
+run in interpret mode (correctness, not speed); on TPU the same calls
+compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+
+def _gather_kernel(ids_ref, pages_ref, out_ref, sem):
+    l = pl.program_id(0)
+    i = pl.program_id(1)
+    pid = ids_ref[i]
+    cp = pltpu.make_async_copy(pages_ref.at[l, pid], out_ref.at[0, 0], sem)
+    cp.start()
+    cp.wait()
+
+
+def _scatter_kernel(ids_ref, staged_ref, pages_in_ref, pages_out_ref, sem):
+    del pages_in_ref                   # aliased with pages_out_ref (in-place)
+    l = pl.program_id(0)
+    i = pl.program_id(1)
+    pid = ids_ref[i]
+    cp = pltpu.make_async_copy(staged_ref.at[0, 0], pages_out_ref.at[l, pid], sem)
+    cp.start()
+    cp.wait()
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def swap_gather_pages(pages, ids, *, use_pallas: bool = False,
+                      interpret: bool = True):
+    """Gather ``pages[:, ids]`` into a contiguous staging tensor.
+
+    ``pages``: ``(L, n_phys, page_size, Hkv, hd)`` physical pool;
+    ``ids``: ``(n,)`` int32 page ids (padded entries point at the sink page —
+    the caller slices the staging tensor down to the real page count after
+    the host copy drains).  Returns ``(L, n, page_size, Hkv, hd)``.
+    """
+    if not use_pallas:
+        return pages[:, ids]
+    L = pages.shape[0]
+    n = ids.shape[0]
+    blk = (1, 1) + pages.shape[2:]
+    return pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(L, n),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=pl.BlockSpec(blk, lambda l, i, ids: (l, i, 0, 0, 0)),
+            scratch_shapes=[pltpu.SemaphoreType.DMA],
+        ),
+        out_shape=jax.ShapeDtypeStruct((L, n) + pages.shape[2:], pages.dtype),
+        interpret=interpret,
+    )(ids, pages)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"),
+                   donate_argnums=(0,))
+def swap_scatter_pages(pages, ids, staged, *, use_pallas: bool = False,
+                       interpret: bool = True):
+    """Scatter a staging tensor back into physical pages:
+    ``pages[:, ids] = staged``, in place (``pages`` is donated/aliased).
+
+    Padded id entries must point at the sink page — duplicate scatter writes
+    then land only in the never-read sink row.
+    """
+    if not use_pallas:
+        return pages.at[:, ids].set(staged.astype(pages.dtype))
+    L = pages.shape[0]
+    n = ids.shape[0]
+    blk = (1, 1) + pages.shape[2:]
+    return pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(L, n),
+            in_specs=[
+                pl.BlockSpec(blk, lambda l, i, ids: (l, i, 0, 0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+            scratch_shapes=[pltpu.SemaphoreType.DMA],
+        ),
+        out_shape=jax.ShapeDtypeStruct(pages.shape, pages.dtype),
+        # alias indices count the scalar-prefetch operand: 0=ids, 1=staged,
+        # 2=pages -> output 0
+        input_output_aliases={2: 0},
+        interpret=interpret,
+    )(ids, staged.astype(pages.dtype), pages)

@@ -16,7 +16,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse
 import json
-import re
 import sys
 import time
 from dataclasses import asdict, dataclass, field
@@ -24,10 +23,9 @@ from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.configs import REGISTRY, ASSIGNED_ARCHS, get_config, applicable_shapes
+from repro.configs import ASSIGNED_ARCHS, get_config, applicable_shapes
 from repro.configs.base import ModelConfig, ShapeSpec, SHAPES_BY_NAME
 from repro.distributed.sharding import (
     axis_rules,
@@ -45,7 +43,6 @@ from repro.launch.mesh import (
 )
 from repro.models.model import Model, build_model
 from repro.training.train_step import (
-    TrainConfig,
     default_train_config,
     init_train_state_shape,
     make_train_step,
@@ -380,7 +377,7 @@ def lower_chunked_serve(
     (host) and the data plane (SPMD workers)."""
     cfg = get_config(arch)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
-    res = CellResult(arch=arch, shape=f"chunk_serve", mesh=mesh_name, ok=False)
+    res = CellResult(arch=arch, shape="chunk_serve", mesh=mesh_name, ok=False)
     n_chips = mesh_chips(mesh)
     model = build_model(cfg)
     impl = model.impl

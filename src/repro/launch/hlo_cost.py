@@ -262,7 +262,6 @@ class HloCostAnalyzer:
             return 2.0 * out_elems
         kelems = kshapes[0].elems
         # per output element: kernel_elems / out_features macs
-        m = re.search(r"dim_labels=\S*_(\S*?)->", op.attrs)
         out_feat = 1
         for s in op.result:
             if s.dims:

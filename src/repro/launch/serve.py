@@ -9,9 +9,7 @@ from __future__ import annotations
 
 import argparse
 import json
-from typing import Optional
 
-import numpy as np
 
 from repro.configs import get_config, tiny_config
 from repro.core.apc import APCConfig
@@ -21,7 +19,9 @@ from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.engine import EngineConfig, JAXEngine, serve
 from repro.engine.kv_cache import pool_for_model
 from repro.engine.workload import (
-    WorkloadSpec, attach_prompt_tokens, sharegpt_like, uniform_arrivals,
+    WorkloadSpec,
+    attach_prompt_tokens,
+    sharegpt_like,
 )
 
 
@@ -77,6 +77,13 @@ def main(argv=None):
     ap.add_argument("--pages-per-tile", type=int, default=1,
                     help="physical pages gathered per paged-attention K/V "
                          "tile (MXU efficiency at small page sizes)")
+    ap.add_argument("--preemption-mode", default="recompute",
+                    choices=["recompute", "swap"],
+                    help="KV-pressure eviction strategy: 'recompute' discards "
+                         "the victim's KV and re-prefills it; 'swap' stages "
+                         "it host-side and restores it on re-schedule "
+                         "(chosen per victim by the transfer-vs-FLOPs cost "
+                         "model; greedy outputs are identical either way)")
     ap.add_argument("--prefix-cache", action="store_true",
                     help="enable the hash-based KV prefix cache (block-aligned "
                          "prompt reuse; hits skip the matched prefill compute)")
@@ -91,6 +98,7 @@ def main(argv=None):
         n_slots=16, max_context=512, use_pallas=args.pallas,
         paged_kv=not args.dense_kv, pipelined=not args.sync_engine,
         pages_per_tile=args.pages_per_tile,
+        preemption_mode=args.preemption_mode,
     ))
 
     predictor = None
@@ -126,7 +134,8 @@ def main(argv=None):
           f"apc={args.apc} pallas={args.pallas} "
           f"kv={'dense' if args.dense_kv else 'paged'} "
           f"loop={'sync' if args.sync_engine else 'pipelined'} "
-          f"prefix_cache={args.prefix_cache} ===")
+          f"prefix_cache={args.prefix_cache} "
+          f"preempt={args.preemption_mode} ===")
     print(f"finished {res.report.n_finished}/{res.report.n_total} "
           f"in {res.wall_s:.2f}s  ({res.rounds} rounds)")
     for k, v in row.items():
@@ -137,6 +146,11 @@ def main(argv=None):
         print(f"  kv: hit_rate={mem.cache_hit_rate:.2%} "
               f"hit_tokens={mem.cache_hit_tokens} evictions={mem.evictions} "
               f"preemptions={mem.preemptions} cached_blocks={mem.cached_blocks}")
+        if mem.swap_preemptions:
+            print(f"  swap: {mem.swap_preemptions} victims staged "
+                  f"({mem.swapped_out_tokens} tokens out, "
+                  f"{mem.swapped_in_tokens} restored over "
+                  f"{mem.swap_restores} swap-ins)")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"report": row, "rounds": res.rounds, "wall_s": res.wall_s,

@@ -12,7 +12,6 @@ import time
 from typing import Optional
 
 import jax
-import numpy as np
 
 from repro.configs import get_config, tiny_config
 from repro.distributed.checkpoint import CheckpointManager

@@ -162,7 +162,6 @@ class HybridLM:
 
     def decode(self, params, tokens, cache, lens):
         cfg = self.cfg
-        B = tokens.shape[0]
         x = params["embed"][tokens]
 
         def body(carry, xs):

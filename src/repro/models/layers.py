@@ -9,7 +9,6 @@ from __future__ import annotations
 import math
 import threading
 from contextlib import contextmanager
-from functools import partial
 from typing import Optional
 
 import jax

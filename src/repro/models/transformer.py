@@ -11,8 +11,7 @@ Supports three entry points:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

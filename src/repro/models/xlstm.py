@@ -10,7 +10,7 @@ sub-quadratic and decode is O(1) state.
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

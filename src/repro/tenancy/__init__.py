@@ -86,6 +86,17 @@ class FairnessState:
         if ids is not None:
             ids.discard(req.req_id)
 
+    def on_resume(self, req: Request) -> None:
+        """A swapped-out victim was restored straight into the decode set —
+        it will never complete a prefill chunk again, so retire its queue
+        ownership here (the path ``on_batch_done`` takes for ordinary
+        prefill completions) and count it decode-active.  Its restore charges
+        the VTC nothing: swap-out preemption must not tax the victim
+        tenant's service accounting (FairBatching's requirement) the way a
+        recompute's re-prefill tokens would."""
+        self.queue.retire(req)
+        self._decoding.setdefault(req.tenant, set()).add(req.req_id)
+
     def on_round(self, now: float) -> None:
         self.queue.set_now(now)
 

@@ -21,7 +21,7 @@ keeping a stale low counter that would let it monopolize the engine to
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, Iterable, Optional
 
 from repro.tenancy.tenants import TenantRegistry

@@ -9,7 +9,7 @@ for a tokenized-file reader in a real deployment; the iterator contract
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterator, Optional
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -6,7 +6,7 @@ training step (bf16/f32 params, f32 moments) and the LPRS latency predictor.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, NamedTuple, Optional
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp

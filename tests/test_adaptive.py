@@ -1,5 +1,4 @@
 """Unified adaptive controller (paper §5 future work) tests."""
-import numpy as np
 
 from repro.core.adaptive import AdaptiveConfig, AdaptiveController
 from repro.core.apc import APCConfig

@@ -1,7 +1,6 @@
 """Distribution substrate: sharding spec sanitization, checkpoint round-trip
 + async + elastic resharding, gradient compression, router fault tolerance,
 HLO cost analyzer ground truths."""
-import os
 
 import jax
 import jax.numpy as jnp

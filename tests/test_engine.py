@@ -9,11 +9,13 @@ from repro.configs import tiny_config
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.engine import EngineConfig, JAXEngine, serve
-from repro.engine.kv_cache import KVBlockPool, KVPoolConfig, pool_for_model
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
 from repro.engine.sampler import SamplerConfig, sample_tokens
 from repro.engine.workload import (
-    WorkloadSpec, apc_heterogeneous, attach_prompt_tokens, sharegpt_like,
-    uniform_arrivals,
+    WorkloadSpec,
+    apc_heterogeneous,
+    attach_prompt_tokens,
+    sharegpt_like,
 )
 from repro.models.model import build_model
 

@@ -1,6 +1,5 @@
 """Pallas kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
 (interpret mode executes kernel bodies in Python on CPU)."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -12,7 +12,7 @@ from _hyp import given, settings, st
 from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.kv_cache import (
-    KVBlockPool, KVPoolConfig, KVQuotaExceeded, pool_for_model,
+    BlockState, KVBlockPool, KVPoolConfig, KVQuotaExceeded, pool_for_model,
 )
 from repro.engine.simulator import run_policy
 from repro.engine.workload import shared_prefix
@@ -375,6 +375,117 @@ def test_eviction_counters_stay_consistent():
 
 
 # ---------------------------------------------------------------------------
+# swap-out staging: lifecycle, quota balance, conservation
+# ---------------------------------------------------------------------------
+
+
+def test_swap_out_moves_tokens_to_staging_and_back():
+    pool = mk_pool(n_blocks=8, block_size=16)
+    pool.allocate(1, 40)                 # 3 blocks
+    rec = pool.swap_out(1, ready=True)
+    pool.check_invariants()
+    # every live token is in exactly ONE place: the staging entry
+    assert 1 not in pool.tables and 1 not in pool.lens
+    assert rec.tokens == 40 and rec.n_blocks == 3
+    assert pool.swap_state(1) == BlockState.SWAPPED_OUT
+    assert pool.used_blocks == 0         # device blocks all freed
+    assert pool.swapped_out_blocks == 3  # ... but the restore size is known
+    ids, _payload = pool.swap_in(1)
+    pool.check_invariants()
+    assert len(ids) == 3 and pool.tables[1] == ids
+    assert pool.lens[1] == 40
+    assert pool.swap_state(1) is None    # staging entry gone: RESIDENT again
+    assert pool.used_blocks == 3
+
+
+def test_swapping_record_blocks_restore_until_finished():
+    pool = mk_pool(n_blocks=8, block_size=16)
+    pool.allocate(1, 20)
+    rec = pool.swap_out(1)               # engine path: gather still in flight
+    assert rec.state == BlockState.SWAPPING
+    assert not pool.swap_ready(1) and not pool.can_swap_in(1)
+    with pytest.raises(AssertionError):
+        pool.swap_in(1)
+    pool.finish_swap_out(1, payload=("k", "v"))
+    assert pool.swap_ready(1) and pool.can_swap_in(1)
+    ids, payload = pool.swap_in(1)
+    assert payload == ("k", "v") and len(ids) == 2
+    pool.check_invariants()
+
+
+def test_swap_quota_released_and_recharged():
+    """Satellite-spec behavior: swapped blocks release the tenant's quota
+    (another same-tenant request can use it) and restore re-charges it —
+    balanced across arbitrarily many cycles."""
+    pool = mk_pool(n_blocks=32)
+    pool.set_tenant_quota("t", 4)
+    pool.register_request(1, tenant="t")
+    pool.allocate(1, 64, tenant="t")     # the full quota
+    assert pool.tenant_used_blocks("t") == 4
+    assert not pool.can_allocate(2, 16, tenant="t")
+    pool.swap_out(1, ready=True)
+    assert pool.tenant_used_blocks("t") == 0      # quota released
+    pool.register_request(2, tenant="t")
+    pool.allocate(2, 16, tenant="t")              # headroom usable again
+    assert not pool.can_swap_in(1)                # ... and restore now short
+    pool.release(2)
+    for _ in range(3):                            # balanced across cycles
+        assert pool.can_swap_in(1)
+        pool.swap_in(1)
+        assert pool.tenant_used_blocks("t") == 4  # re-charged
+        pool.swap_out(1, ready=True)
+        assert pool.tenant_used_blocks("t") == 0
+    pool.check_invariants()
+
+
+def test_swap_preserves_prefix_cache_entries():
+    """Swapping a victim out must not invalidate prefix-cache entries its
+    sealed blocks created: a later same-prefix request still matches (the
+    original blocks parked in the evictable LRU at swap-out)."""
+    pool = mk_pool(cache=True)
+    toks = list(range(48))
+    pool.register_request(1, prompt_tokens=toks, prompt_len=48)
+    pool.allocate(1, 48)
+    pool.swap_out(1, ready=True)
+    assert pool.cached_blocks == 3       # sealed blocks parked, not destroyed
+    pool.register_request(2, prompt_tokens=toks, prompt_len=48)
+    assert pool.match_prefix(2) == 32    # match never covers the whole prompt
+    # the swapped request restores into PRIVATE fresh blocks (no aliasing
+    # with req 2's re-acquired cached ones)
+    ids, _ = pool.swap_in(1)
+    assert not set(ids) & set(pool.tables[2])
+    pool.check_invariants()
+
+
+def test_double_swap_and_empty_swap_are_rejected():
+    pool = mk_pool()
+    with pytest.raises(AssertionError):
+        pool.swap_out(1, ready=True)     # no blocks: nothing to stage
+    pool.allocate(1, 10)
+    pool.swap_out(1, ready=True)
+    with pytest.raises(AssertionError):
+        pool.swap_out(1, ready=True)     # already staged
+    pool.drop_swap(1)
+    assert pool.swap_state(1) is None
+    pool.drop_swap(1)                    # idempotent
+    pool.check_invariants()
+
+
+def test_swap_in_raises_when_pool_exhausted():
+    pool = mk_pool(n_blocks=4, block_size=16)
+    pool.allocate(1, 60)                 # all 4 blocks
+    pool.swap_out(1, ready=True)
+    pool.allocate(2, 60)                 # pool refilled by someone else
+    assert not pool.can_swap_in(1)
+    with pytest.raises(MemoryError):
+        pool.swap_in(1)
+    pool.release(2)
+    ids, _ = pool.swap_in(1)
+    assert len(ids) == 4
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
 # property tests: pool invariants under random op sequences
 # ---------------------------------------------------------------------------
 
@@ -418,11 +529,9 @@ def test_pool_invariants_hold_under_random_ops(ops, cache):
 )
 def test_alloc_release_cycle_conserves_blocks(seq):
     pool = mk_pool(n_blocks=64, block_size=16)
-    total = 0
     for i, n in enumerate(seq):
         if pool.can_allocate(i, n):
             pool.allocate(i, n)
-            total += n
     for i in range(len(seq)):
         pool.release(i)
         pool.release(i)                  # double release must be harmless
@@ -485,6 +594,69 @@ def test_block_table_invariants_under_random_ops(ops, cache_max, ttl):
         for bid, hs in holders.items():
             if len(hs) > 1:
                 assert bid in pool._hash_of, (bid, hs)   # shared => sealed
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(
+            st.sampled_from(["alloc", "release", "match", "swap_out",
+                             "finish", "swap_in", "drop"]),
+            st.integers(min_value=0, max_value=7),     # req id
+            st.integers(min_value=1, max_value=40),    # token count
+        ),
+        max_size=80,
+    ),
+    cache=st.booleans(),
+    quota=st.one_of(st.none(), st.integers(min_value=2, max_value=10)),
+)
+def test_swap_lifecycle_invariants_under_random_ops(ops, cache, quota):
+    """The tentpole's conservation law, fuzzed: every live request's tokens
+    are tracked by exactly one of {block table, staging entry}; swapped
+    requests pin no device blocks and no tenant quota; block conservation
+    and quota balance hold through arbitrary interleavings of allocation,
+    release, prefix matching, and swap-out/finish/swap-in/drop cycles."""
+    pool = KVBlockPool(KVPoolConfig(
+        n_blocks=16, block_size=8, bytes_per_token=4, enable_prefix_cache=cache,
+    ))
+    if quota is not None:
+        pool.set_tenant_quota("t", quota)
+    prompts = {rid: list(range(rid * 100, rid * 100 + 40)) for rid in range(8)}
+    for op, rid, n in ops:
+        swapped = pool.swap_state(rid) is not None
+        if op == "alloc" and not swapped:
+            if rid not in pool._reg:
+                pool.register_request(rid, tenant="t",
+                                      prompt_tokens=prompts[rid], prompt_len=40)
+            if pool.can_allocate(rid, n, tenant="t"):
+                pool.allocate(rid, n, tenant="t")
+        elif op == "release" and not swapped:
+            pool.release(rid)
+        elif op == "match" and not swapped:
+            if rid not in pool.tables:
+                pool.register_request(rid, tenant="t",
+                                      prompt_tokens=prompts[rid], prompt_len=40)
+                pool.match_prefix(rid)
+        elif op == "swap_out" and not swapped and pool.tables.get(rid):
+            pool.swap_out(rid, ready=bool(n % 2))
+        elif op == "finish" and swapped:
+            pool.finish_swap_out(rid, payload=("k", rid))
+        elif op == "swap_in" and pool.can_swap_in(rid, tenant="t"):
+            ids, _ = pool.swap_in(rid, tenant="t")
+            assert pool.lens[rid] <= len(ids) * pool.cfg.block_size
+        elif op == "drop" and swapped:
+            pool.drop_swap(rid)
+        pool.check_invariants()
+        # conservation: staged requests hold no device blocks, so the three
+        # device populations still cover the whole pool
+        assert pool.used_blocks + pool.cached_blocks + len(pool.free_blocks) \
+            == pool.cfg.n_blocks
+        # tracked-in-exactly-one-place, stated explicitly
+        for rid2 in pool.swapped_requests():
+            assert rid2 not in pool.tables and rid2 not in pool.lens
+        # quota never exceeds the cap, and swapped tokens never count
+        if quota is not None:
+            assert pool.tenant_used_blocks("t") <= quota
 
 
 def test_pool_for_model_prefix_cache_flag():

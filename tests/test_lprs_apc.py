@@ -6,7 +6,7 @@ from _hyp import given, settings, st
 
 from repro.core.apc import APCConfig, APCStats, activity_cap, apply as apc_apply
 from repro.core.apc import min_effective_progress
-from repro.core.features import BatchState, N_FEATURES, derive_features
+from repro.core.features import BatchState, N_FEATURES
 from repro.core.lprs import LPRSConfig, candidate_set, score, select_chunk
 from repro.core.predictor import AnalyticPredictor
 

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ASSIGNED_ARCHS, REGISTRY, get_config, tiny_config
+from repro.configs import ASSIGNED_ARCHS, get_config, tiny_config
 from repro.configs.base import applicable_shapes
 from repro.models.model import build_model
 

@@ -5,7 +5,6 @@ under forced mid-pipeline KV preemption (token folds patched one round late)
 and across prefix-cache restores — plus the one-round-lag bookkeeping
 (``Request.patch_token``) in isolation.
 """
-import numpy as np
 import pytest
 
 from repro.configs import tiny_config

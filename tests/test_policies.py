@@ -1,13 +1,10 @@
 """Unit + property tests for the paper's core: Aging policy (§3.1), the
 heap's O(k log n) ordering equivalence (Eq. 3/4), FCFS/SJF baselines."""
-import numpy as np
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.policies import (
-    NaiveAgingQueue, PrefillQueue, aging_priority, make_policy,
-)
-from repro.core.request import Request, RequestState
+from repro.core.policies import NaiveAgingQueue, aging_priority, make_policy
+from repro.core.request import Request
 
 
 def mk(prompt, arrival, gen=16):
@@ -43,10 +40,6 @@ def test_heap_order_matches_eq1_priority(data, alpha, beta, now):
         heap.add(r)
     heap_order = [heap.pop().req_id for _ in range(len(reqs))]
 
-    by_priority = sorted(
-        reqs,
-        key=lambda r: (-aging_priority(r, now, alpha, beta), r.req_id),
-    )
     # ties (equal priority) may legitimately reorder; compare priorities
     pri = {r.req_id: aging_priority(r, now, alpha, beta) for r in reqs}
     heap_pris = [pri[i] for i in heap_order]

@@ -1,12 +1,11 @@
 """LPRS latency predictor (§3.2.1): training convergence, asymmetric-Huber
 semantics, bucketing, persistence round-trip."""
-import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core.features import BatchState, derive_features
+from repro.core.features import derive_features
 from repro.core.predictor import (
     AnalyticPredictor, LatencyPredictor, PredictorConfig,
     asymmetric_huber, bucket_and_downsample,

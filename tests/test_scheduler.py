@@ -1,6 +1,5 @@
 """Integration + property tests for the full scheduling round (§3.1.3):
 decode-first, budget conservation, APC interaction, request lifecycle."""
-import numpy as np
 import pytest
 from _hyp import given, settings, st
 

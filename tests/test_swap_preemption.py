@@ -1,0 +1,369 @@
+"""Swap-out preemption: device<->host KV block migration.
+
+The acceptance bar is GREEDY OUTPUT BIT-IDENTITY: a run under
+``preemption_mode="swap"`` must produce exactly the tokens of the same
+workload under ``"recompute"`` AND of an unconstrained run (pool big enough
+that nobody is ever evicted) — in both KV layouts, in both loop modes, with
+real forced preemptions.  Plus the lifecycle regression the pipelined loop
+makes subtle: a victim whose pages are still being copied out (SWAPPING)
+must never re-bind a slot in that same round.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import tiny_config
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.costmodel import CostModel, CostModelConfig
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.kv_cache import BlockState, KVBlockPool, KVPoolConfig
+from repro.engine.simulator import run_policy
+from repro.engine.workload import shared_prefix
+from repro.kernels.swap import swap_gather_pages, swap_scatter_pages
+
+
+def _two_wave_shared_prefix(seed=5, n=12, new_tokens=10):
+    """Two deterministic waves (t=0 and far behind): forces concurrency ->
+    KV preemption on a small pool, with round structure independent of
+    wall-clock timing so output comparisons are exact."""
+    reqs = shared_prefix(n_requests=n, n_prefixes=2, prefix_len=48,
+                         suffix_range=(8, 16), max_new_tokens=new_tokens,
+                         inter_arrival_s=0.0, vocab_size=512, seed=seed)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.0 if i < n // 2 else 60.0
+    return reqs
+
+
+def _serve_pressured(*, mode: str, pipelined: bool, paged: bool,
+                     n_blocks: int = 11, use_pallas: bool = False):
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(n_slots=6, max_context=128,
+                                      paged_kv=paged, pipelined=pipelined,
+                                      use_pallas=use_pallas,
+                                      preemption_mode=mode, seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=n_blocks, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True))
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6)
+    )
+    reqs = _two_wave_shared_prefix()
+    res = serve(reqs, sched, eng, kv_pool=pool)
+    pool.check_invariants()
+    assert not pool.swapped_requests()      # nothing left staged at exit
+    return res, sched, pool, reqs
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: swap vs recompute vs unconstrained
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipelined", [True, False], ids=["pipelined", "sync"])
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "dense"])
+def test_swap_outputs_identical_to_recompute_and_unconstrained(paged, pipelined):
+    res_s, sched_s, _, reqs_s = _serve_pressured(
+        mode="swap", pipelined=pipelined, paged=paged)
+    res_r, sched_r, _, reqs_r = _serve_pressured(
+        mode="recompute", pipelined=pipelined, paged=paged)
+    res_u, sched_u, _, reqs_u = _serve_pressured(
+        mode="recompute", pipelined=pipelined, paged=paged, n_blocks=400)
+    # the pressure actually bit, and swap mode actually swapped
+    assert sched_s.stats.swap_preemptions > 0
+    assert sched_s.stats.swap_restores == sched_s.stats.swap_preemptions
+    assert sched_r.stats.preemptions > 0 and sched_r.stats.swap_preemptions == 0
+    assert sched_u.stats.preemptions == 0
+    assert res_s.report.n_finished == res_r.report.n_finished == \
+        res_u.report.n_finished == len(reqs_s)
+    assert any(t != 0 for out in res_s.outputs.values() for t in out)
+    # req_ids are globally assigned: compare by workload POSITION
+    for a, b, c in zip(reqs_s, reqs_r, reqs_u):
+        assert res_s.outputs[a.req_id] == res_r.outputs[b.req_id]
+        assert res_s.outputs[a.req_id] == res_u.outputs[c.req_id]
+    # swap victims kept their progress: no prompt folding happened for them
+    swapped = [r for r in reqs_s if r.swap_preemptions > 0]
+    assert swapped
+    for r in swapped:
+        assert r.folded_tokens == 0 or r.preemptions > r.swap_preemptions
+
+
+def test_swap_with_pallas_kernels_matches_dense_oracle():
+    """The whole stack: pallas gather/scatter swap kernels + paged attention
+    kernels + pipelined loop vs the dense sync pure-jnp oracle."""
+    res_k, sched_k, _, reqs_k = _serve_pressured(
+        mode="swap", pipelined=True, paged=True, use_pallas=True)
+    res_o, _, _, reqs_o = _serve_pressured(
+        mode="recompute", pipelined=False, paged=False)
+    assert sched_k.stats.swap_preemptions > 0
+    for a, b in zip(reqs_k, reqs_o):
+        assert res_k.outputs[a.req_id] == res_o.outputs[b.req_id]
+
+
+# ---------------------------------------------------------------------------
+# SWAPPING lifecycle: a mid-flight victim never re-binds in the same round
+# ---------------------------------------------------------------------------
+
+
+def test_swapping_victim_never_rebinds_in_swap_round():
+    """Regression for the serve()/releaser contract: the victim's slot frees
+    via the swapper inside schedule(), and while its device→host copy is in
+    flight (SWAPPING) the scheduler must defer it WITHOUT consulting the
+    slot binder — same-round re-binding would scatter a restore into pages
+    whose gather has not drained."""
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(n_slots=6, max_context=128,
+                                      paged_kv=True, pipelined=True,
+                                      preemption_mode="swap", seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=11, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True))
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6)
+    )
+
+    # interleaved event log: binds and swap-outs with (round, seq) order —
+    # a bind BEFORE the swap in the same round is the normal schedule flow
+    # (the victim was scheduled, then preempted for someone older); a bind
+    # AFTER its swap-out event is the forbidden mid-flight re-bind
+    events = []                      # (seq, kind, round_idx, req_id)
+    seq = [0]
+    real_acquire = eng.acquire_slot
+    real_swap_out = eng.swap_out
+
+    def spy_acquire(req):
+        ok = real_acquire(req)
+        if ok:
+            seq[0] += 1
+            events.append((seq[0], "bind", sched._round - 1, req.req_id))
+        return ok
+
+    def spy_swap_out(req):
+        real_swap_out(req)
+        seq[0] += 1
+        events.append((seq[0], "swap", sched._round - 1, req.req_id))
+
+    # serve() attaches these attributes as the binder/swapper hooks
+    eng.acquire_slot = spy_acquire
+    eng.swap_out = spy_swap_out
+
+    batches = []
+    real_schedule = sched.schedule
+
+    def spy_schedule(now):
+        b = real_schedule(now)
+        batches.append(b)
+        return b
+
+    sched.schedule = spy_schedule
+
+    reqs = _two_wave_shared_prefix()
+    res = serve(reqs, sched, eng, kv_pool=pool)
+    pool.check_invariants()
+    assert res.report.n_finished == len(reqs)
+    assert sched.stats.swap_preemptions > 0
+
+    # 1) after a swap-out event, the victim is never bound again in that
+    # same round (its gather is still in flight until the round drains)
+    swap_events = [(s, rnd, rid) for s, kind, rnd, rid in events
+                   if kind == "swap"]
+    assert swap_events
+    for s, rnd, rid in swap_events:
+        rebinds = [e for e in events
+                   if e[1] == "bind" and e[2] == rnd and e[3] == rid
+                   and e[0] > s]
+        assert not rebinds, (
+            f"req {rid} re-bound a slot after its swap-out in round {rnd}"
+        )
+    # 2) every restore happened in a strictly later round than its swap-out
+    swap_rounds = {}
+    restore_rounds = {}
+    for b in batches:
+        for r in b.swapped_out:
+            swap_rounds.setdefault(r.req_id, []).append(b.round_idx)
+        for r in b.restored:
+            restore_rounds.setdefault(r.req_id, []).append(b.round_idx)
+    for rid, rounds in restore_rounds.items():
+        for swap_rnd, rest_rnd in zip(sorted(swap_rounds[rid]), sorted(rounds)):
+            assert rest_rnd > swap_rnd, (rid, swap_rnd, rest_rnd)
+
+
+def test_swapping_record_defers_restore_until_finalized():
+    """Scheduler-level unit: a SWAPPING record (gather not drained) is not
+    restorable; finish_swap_out flips it and the next round restores."""
+    pool = KVBlockPool(KVPoolConfig(n_blocks=8, block_size=16,
+                                    bytes_per_token=4))
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=64, max_seqs=4),
+        kv_pool=pool,
+    )
+    sched.attach_swap(mode="swap")   # pool-accounting path, manual control
+    req = Request(prompt_len=40, max_new_tokens=4)
+    pool.allocate(req.req_id, 40)
+    req.prefill_done = 40
+    req.generated = 1
+    req.output_tokens = [7]
+    req.state = RequestState.DECODING
+    # swap it out with an in-flight (not ready) record, as the engine would
+    rec = pool.swap_out(req.req_id)
+    assert rec.state == BlockState.SWAPPING
+    req.swap_preempt()
+    sched.queue.add(req)
+    batch = sched.schedule(0.0)
+    assert req not in [r for r, _ in batch.prefill_chunks]
+    assert not batch.restored and sched.stats.swap_deferrals == 1
+    assert req.req_id not in pool.tables        # still staged
+    sched.on_batch_done(batch, 0.01)
+    pool.finish_swap_out(req.req_id, payload=("k", "v"))
+    batch = sched.schedule(0.02)
+    assert [r.req_id for r in batch.restored] == [req.req_id]
+    assert req.state == RequestState.DECODING and req.needs_replay
+    assert pool.lens[req.req_id] == 40
+    pool.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# swap kernels in isolation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
+def test_swap_gather_scatter_roundtrip(use_pallas, rng):
+    L, P, bs, H, hd = 2, 9, 8, 2, 16
+    pages = jnp.asarray(rng.normal(size=(L, P, bs, H, hd)).astype(np.float32))
+    ids = jnp.asarray(np.array([5, 2, 7], np.int32))
+    staged = swap_gather_pages(pages, ids, use_pallas=use_pallas)
+    assert staged.shape == (L, 3, bs, H, hd)
+    np.testing.assert_array_equal(np.asarray(staged), np.asarray(pages[:, ids]))
+    # restore into different pages; untouched pages must be bit-identical.
+    # NOTE: scatter DONATES the page pool (in-place restore) — snapshot the
+    # reference before the call, as the engine's cache rebinding does.
+    new_ids = jnp.asarray(np.array([1, 4, 6], np.int32))
+    ref = np.asarray(pages.at[:, new_ids].set(staged))
+    out = swap_scatter_pages(pages, new_ids, staged, use_pallas=use_pallas)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_swap_scatter_duplicate_sink_ids_only_touch_sink(rng):
+    """Padding entries point at the sink page: duplicate writes there must
+    leave every real page untouched."""
+    L, P, bs, H, hd = 1, 6, 4, 1, 8
+    sink = P - 1
+    pages = jnp.asarray(rng.normal(size=(L, P, bs, H, hd)).astype(np.float32))
+    pages_before = np.asarray(pages)            # scatter donates `pages`
+    staged = -jnp.ones((L, 3, bs, H, hd), jnp.float32)
+    ids = jnp.asarray(np.array([2, sink, sink], np.int32))
+    out = swap_scatter_pages(pages, ids, staged, use_pallas=True)
+    keep = [0, 1, 3, 4]
+    np.testing.assert_array_equal(np.asarray(out[:, keep]),
+                                  pages_before[:, keep])
+    np.testing.assert_array_equal(np.asarray(out[:, 2]),
+                                  np.asarray(staged[:, 0]))
+
+
+# ---------------------------------------------------------------------------
+# cost-model decision + simulator integration
+# ---------------------------------------------------------------------------
+
+
+def test_cost_model_prefers_recompute_for_tiny_contexts():
+    """With real byte weights a short context recomputes cheaper than two
+    PCIe transfers; a long context flips the decision (quadratic attention
+    FLOPs vs linear bytes)."""
+    cm = CostModel(CostModelConfig(noise_std=0.0))
+    bpt = 2 * 32 * 8 * 128 * 2          # a plausible mid-size model
+    assert cm.recompute_cost_ms(8) < cm.swap_cost_ms(8, bpt)
+    assert cm.swap_cost_ms(4096, bpt) < cm.recompute_cost_ms(4096)
+
+
+def test_scheduler_cost_decision_respects_mode_and_model():
+    pool = KVBlockPool(KVPoolConfig(n_blocks=64, block_size=16,
+                                    bytes_per_token=4))
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=64, max_seqs=4),
+        kv_pool=pool,
+    )
+    victim = Request(prompt_len=64, max_new_tokens=4)
+    pool.allocate(victim.req_id, 64)
+    # recompute mode: never swap
+    assert not sched._should_swap(victim)
+    # swap mode, no cost model: always swap
+    sched.attach_swap(mode="swap")
+    assert sched._should_swap(victim)
+    # swap mode + cost model where recompute is cheap (tiny context, huge
+    # per-byte cost): fall back to recompute
+    sched.attach_swap(mode="swap", cost_model=CostModel(
+        CostModelConfig(noise_std=0.0, c_swap_ms_per_mb=1e9,
+                        c_swap_fixed_ms=1e9)))
+    assert not sched._should_swap(victim)
+
+
+def test_simulator_swap_mode_finishes_and_reports():
+    def wl():
+        return shared_prefix(n_requests=16, n_prefixes=2, prefix_len=48,
+                             suffix_range=(8, 16), max_new_tokens=24,
+                             inter_arrival_s=0.002, seed=5)
+
+    def mk_pool():
+        return KVBlockPool(KVPoolConfig(n_blocks=20, block_size=16,
+                                        bytes_per_token=4))
+
+    cfg = SchedulerConfig(policy="aging", token_budget=128, max_seqs=16)
+    swap = run_policy(wl(), cfg, kv_pool=mk_pool(), preemption_mode="swap")
+    rec = run_policy(wl(), cfg, kv_pool=mk_pool(), preemption_mode="recompute")
+    assert swap.report.n_finished == rec.report.n_finished == 16
+    assert swap.scheduler_stats.swap_preemptions > 0
+    assert swap.scheduler_stats.swap_restores == \
+        swap.scheduler_stats.swap_preemptions
+    assert rec.scheduler_stats.swap_preemptions == 0
+    assert swap.memory.swap_preemptions > 0
+    assert swap.memory.swapped_out_tokens == swap.memory.swapped_in_tokens
+    # a swapped victim never recomputes: strictly fewer total scheduled
+    # prefill tokens than the recompute run (which re-prefills contexts)
+    assert swap.scheduler_stats.scheduled_prefill_tokens < \
+        rec.scheduler_stats.scheduled_prefill_tokens
+
+
+# ---------------------------------------------------------------------------
+# request-lifecycle units
+# ---------------------------------------------------------------------------
+
+
+def test_swap_preempt_keeps_progress_and_resume_replays():
+    r = Request(prompt_len=4, max_new_tokens=8, prompt_tokens=[1, 2, 3, 4])
+    r.state = RequestState.DECODING
+    r.prefill_done = 4
+    r.receive_token(9, 1.0)
+    r.swap_preempt()
+    assert r.state == RequestState.WAITING and r.swapped
+    assert r.prefill_done == 4 and r.prompt_tokens == [1, 2, 3, 4]
+    assert r.folded_tokens == 0 and r.remaining_prefill == 0
+    r.resume()
+    assert r.state == RequestState.DECODING
+    assert r.needs_replay and not r.swapped
+
+
+def test_recompute_preempt_clears_replay_flag():
+    """A restored request that gets recompute-preempted later must not replay
+    a stale token over its freshly re-prefilled context."""
+    r = Request(prompt_len=4, max_new_tokens=8, prompt_tokens=[1, 2, 3, 4])
+    r.state = RequestState.DECODING
+    r.prefill_done = 4
+    r.receive_token(9, 1.0)
+    r.swap_preempt()
+    r.resume()
+    assert r.needs_replay
+    r.preempt()
+    assert not r.needs_replay and not r.swapped
+    assert r.prompt_tokens == [1, 2, 3, 4, 9]   # folded, recompute semantics
+
+
+def test_mid_prefill_swap_resumes_chunking():
+    r = Request(prompt_len=40, max_new_tokens=4)
+    r.state = RequestState.PREFILLING
+    r.prefill_done = 24
+    r.swap_preempt()
+    assert r.remaining_prefill == 16            # progress survived
+    r.resume()
+    assert r.state == RequestState.WAITING      # chunk flow continues
+    assert not r.needs_replay                   # prefill-completing round samples

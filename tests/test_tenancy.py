@@ -9,10 +9,14 @@ from repro.engine.costmodel import CostModel
 from repro.engine.engine import compress_idle_gap
 from repro.engine.metrics import jain_index, summarize_by_tenant
 from repro.engine.simulator import ServingSimulator, run_policy
-from repro.engine.workload import TenantTraffic, default_tenant_mix, multi_tenant
+from repro.engine.workload import TenantTraffic, multi_tenant
 from repro.tenancy import (
-    AdmissionController, FairnessConfig, FairPrefillQueue, FairnessState,
-    TenantRegistry, TenantSpec, VirtualTokenCounter,
+    AdmissionController,
+    FairnessConfig,
+    FairPrefillQueue,
+    TenantRegistry,
+    TenantSpec,
+    VirtualTokenCounter,
 )
 from repro.core.policies import PrefillQueue, make_policy
 
