@@ -1,0 +1,215 @@
+"""Disaggregated prefill/decode serving vs colocated, under a prefill burst.
+
+The scenario disaggregation exists for: a population of ongoing decodes (the
+ITL-sensitive traffic) gets hit by a burst of long-prompt requests.  On ONE
+colocated engine the burst's chunked prefills enter every round the decodes
+run in, and its KV allocations evict mid-decode requests under pool
+pressure — both show up as inter-token-latency spikes on the decode
+population.  Split into a prefill pool and a decode pool (same total KV
+capacity, KV handed off at prefill completion), the decode replica's rounds
+and block pool never see a prefill, so the decode population's tail ITL is
+shielded from the burst.
+
+Gates:
+  * ALWAYS (deterministic, any machine): greedy outputs bit-identical
+    colocated vs disaggregated; the decode pool scheduled ZERO prefill
+    tokens (every handoff resumed decode-only, nothing was re-prefilled);
+    every request crossed the link exactly once.
+  * FULL RUNS ONLY (wall-clock): P99 inter-token latency of the decode
+    population strictly lower disaggregated than colocated.  Quick/CI runs
+    print the same numbers without asserting them — single-process
+    round-interleaving makes tiny-run tails noisy.
+
+Writes a ``disagg_quick`` / ``disagg_full`` section into
+``BENCH_throughput.json`` (schema shared with bench_serve_throughput; other
+sections are preserved).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.bench_serve_throughput import ROOT_JSON, _load_sections
+from benchmarks.common import fmt_table
+from repro.configs import tiny_config
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.disagg import DisaggConfig, build_disagg, serve_disagg
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+from repro.engine.workload import WorkloadSpec, attach_prompt_tokens, sharegpt_like
+
+
+def _workload(quick: bool, model_cfg):
+    """Decode population (small prompts, long decodes, t=0) + prefill burst
+    (long prompts, short decodes) arriving while the population decodes."""
+    if quick:
+        n_dec, n_burst, gen_dec, burst_at = 4, 10, 24, 0.5
+        ctx_dec, ctx_burst = 64, 192
+    else:
+        n_dec, n_burst, gen_dec, burst_at = 8, 20, 48, 1.0
+        ctx_dec, ctx_burst = 96, 224
+    decoders = sharegpt_like(WorkloadSpec(
+        n_requests=n_dec, inter_arrival_s=0.0, max_context=ctx_dec,
+        max_new_tokens=gen_dec, seed=7,
+    ))
+    burst = sharegpt_like(WorkloadSpec(
+        n_requests=n_burst, inter_arrival_s=0.01, max_context=ctx_burst,
+        max_new_tokens=8, seed=8,
+    ))
+    for r in burst:
+        r.arrival_time += burst_at
+    reqs = decoders + burst
+    attach_prompt_tokens(reqs, model_cfg.vocab_size, seed=7)
+    return reqs, n_dec
+
+
+def _itl_gaps(reqs, n_dec):
+    """Inter-token latencies (s) of the decode population: consecutive gaps
+    of each request's host-visibility timestamps."""
+    gaps = []
+    for r in reqs[:n_dec]:
+        ts = r.token_times
+        gaps.extend(b - a for a, b in zip(ts, ts[1:]))
+    return np.asarray(gaps if gaps else [0.0])
+
+
+def _engine_cfg():
+    return EngineConfig(n_slots=8, max_context=256, paged_kv=True,
+                        pipelined=True, preemption_mode="swap", seed=7,
+                        chunk_buckets=(1, 16, 32, 64))
+
+
+def _sched_cfg():
+    return SchedulerConfig(policy="fcfs", token_budget=64, max_seqs=8)
+
+
+def run_colocated(quick: bool, n_blocks: int):
+    model_cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(model_cfg, _engine_cfg())
+    eng.warmup()
+    pool = KVBlockPool(KVPoolConfig(n_blocks=n_blocks, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True))
+    sched = ChunkedPrefillScheduler(_sched_cfg())
+    reqs, n_dec = _workload(quick, model_cfg)
+    t0 = time.perf_counter()
+    res = serve(reqs, sched, eng, kv_pool=pool)
+    wall = time.perf_counter() - t0
+    pool.check_invariants()
+    gaps = _itl_gaps(reqs, n_dec)
+    return {
+        "name": "colocated",
+        "finished": res.report.n_finished,
+        "rounds": res.rounds,
+        "wall_s": wall,
+        "itl_p99_ms": float(np.percentile(gaps, 99) * 1e3),
+        "itl_p50_ms": float(np.percentile(gaps, 50) * 1e3),
+        "preemptions": sched.stats.preemptions,
+        "handoffs": 0,
+        "prefill_tokens": sched.stats.scheduled_prefill_tokens,
+        "decode_prefill_tokens": None,     # no decode pool to keep clean
+        "bytes_moved": 0,
+        "outputs": [res.outputs[r.req_id] for r in reqs],
+    }
+
+
+def run_disagg(quick: bool, n_blocks_per_replica: int):
+    model_cfg = tiny_config("qwen1.5-0.5b")
+    router = build_disagg(
+        model_cfg,
+        cfg=DisaggConfig(n_prefill=1, n_decode=1),
+        engine_cfg=_engine_cfg(),
+        sched_cfg=_sched_cfg(),
+        n_blocks=n_blocks_per_replica, block_size=16,
+        warmup=True,
+    )
+    reqs, n_dec = _workload(quick, model_cfg)
+    t0 = time.perf_counter()
+    res = serve_disagg(reqs, router)
+    wall = time.perf_counter() - t0
+    router.check_invariants()
+    gaps = _itl_gaps(reqs, n_dec)
+    return {
+        "name": "disagg-1P+1D",
+        "finished": res.report.n_finished,
+        "rounds": res.rounds,
+        "wall_s": wall,
+        "itl_p99_ms": float(np.percentile(gaps, 99) * 1e3),
+        "itl_p50_ms": float(np.percentile(gaps, 50) * 1e3),
+        "preemptions": sum(rs.sched.stats.preemptions for rs in router.replicas),
+        "handoffs": res.handoffs,
+        "prefill_tokens": sum(
+            rs.sched.stats.scheduled_prefill_tokens for rs in router.replicas),
+        "decode_prefill_tokens": sum(
+            rs.sched.stats.scheduled_prefill_tokens for rs in router.decode),
+        "bytes_moved": res.bytes_moved,
+        "outputs": [res.outputs[r.req_id] for r in reqs],
+    }
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke settings: deterministic gates only")
+    args = ap.parse_args(argv)
+
+    # the colocated engine gets the SAME total KV capacity the two disagg
+    # replicas split between them
+    n_per_replica = 48 if args.quick else 64
+    colo = run_colocated(args.quick, n_blocks=2 * n_per_replica)
+    disagg = run_disagg(args.quick, n_blocks_per_replica=n_per_replica)
+    results = [colo, disagg]
+
+    rows = [
+        [r["name"], r["finished"], r["rounds"], f"{r['wall_s']:.2f}",
+         f"{r['itl_p50_ms']:.1f}", f"{r['itl_p99_ms']:.1f}",
+         r["preemptions"], r["handoffs"],
+         "-" if r["decode_prefill_tokens"] is None
+         else r["decode_prefill_tokens"]]
+        for r in results
+    ]
+    print(fmt_table(
+        "Disaggregated vs colocated under a prefill-heavy burst",
+        ["config", "done", "rounds", "wall s", "itl p50 ms", "itl p99 ms",
+         "preempts", "handoffs", "dec-pool prefill toks"],
+        rows,
+    ))
+
+    n_total = len(colo["outputs"])
+    # -- deterministic gates (every run) ------------------------------------
+    assert colo["finished"] == disagg["finished"] == n_total
+    assert colo["outputs"] == disagg["outputs"], (
+        "disaggregated greedy outputs diverged from colocated")
+    assert disagg["decode_prefill_tokens"] == 0, (
+        f"decode pool re-prefilled {disagg['decode_prefill_tokens']} tokens")
+    assert disagg["handoffs"] == n_total
+    print(f"  outputs identical={True}  decode-pool re-prefilled tokens=0  "
+          f"handoffs={disagg['handoffs']}/{n_total}")
+
+    # -- wall-clock gate (full runs only) -----------------------------------
+    shield = 1.0 - disagg["itl_p99_ms"] / max(colo["itl_p99_ms"], 1e-9)
+    print(f"  decode-population ITL p99: colocated {colo['itl_p99_ms']:.1f} ms"
+          f" -> disagg {disagg['itl_p99_ms']:.1f} ms ({shield:+.1%})")
+    if not args.quick:
+        assert disagg["itl_p99_ms"] < colo["itl_p99_ms"], (
+            "disaggregation did not shield the decode population's tail ITL")
+
+    mode_key = "disagg_quick" if args.quick else "disagg_full"
+    stripped = [{k: v for k, v in r.items() if k != "outputs"}
+                for r in results]
+    data = _load_sections()            # preserve the other benches' sections
+    data[mode_key] = {
+        "workload": {"quick": args.quick, "seed": 7},
+        "results": stripped,
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"  wrote BENCH_throughput.json [{mode_key}]")
+    return results
+
+
+if __name__ == "__main__":
+    main()

@@ -90,20 +90,37 @@ class PrefillQueue:
 # ---------------------------------------------------------------------------
 
 
-def make_policy(name: str, *, alpha: float = 1.0, beta: float = -0.01) -> PrefillQueue:
-    """FCFS / SJF / Aging as ordering keys over the shared heap."""
+def make_policy(
+    name: str,
+    *,
+    alpha: float = 1.0,
+    beta: float = -0.01,
+    credit_fn: Optional[Callable[[Request], float]] = None,
+) -> PrefillQueue:
+    """FCFS / SJF / Aging as ordering keys over the shared heap.
+
+    ``credit_fn`` (optional, any policy) adds a cache-awareness term to the
+    ordering key: requests whose KV is already materialized — resident
+    prefix-cache blocks, or a host-staged swap record one restore round from
+    runnable — rank ahead of equal-priority cold requests, so aging never
+    starves near-free work behind full recomputes.  The credit is evaluated
+    when a request is (re-)keyed (add/update — i.e. every queue bounce), the
+    same refresh granularity the aging key itself has.
+    """
     name = name.lower()
     if name == "fcfs":
-        return PrefillQueue(lambda r: -r.arrival_time)
-    if name in ("sjf", "shortest"):
-        return PrefillQueue(lambda r: -float(r.remaining_prefill))
-    if name == "aging":
+        base = lambda r: -r.arrival_time
+    elif name in ("sjf", "shortest"):
+        base = lambda r: -float(r.remaining_prefill)
+    elif name == "aging":
         if alpha <= 0 or beta >= 0:
             raise ValueError("aging requires alpha > 0 and beta < 0 (Eq. 1)")
-        return PrefillQueue(
-            lambda r: -alpha * r.arrival_time + beta * float(r.remaining_prefill)
-        )
-    raise ValueError(f"unknown policy {name!r}")
+        base = lambda r: -alpha * r.arrival_time + beta * float(r.remaining_prefill)
+    else:
+        raise ValueError(f"unknown policy {name!r}")
+    if credit_fn is None:
+        return PrefillQueue(base)
+    return PrefillQueue(lambda r: base(r) + credit_fn(r))
 
 
 def aging_priority(req: Request, now: float, alpha: float, beta: float) -> float:

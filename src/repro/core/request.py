@@ -54,6 +54,18 @@ class Request:
     # discarded, so it re-enters the queue decode-resumable (progress kept)
     swapped: bool = False
     swap_preemptions: int = 0
+    # cross-replica disaggregation: prefill-complete handoffs taken (the KV
+    # left one replica's pool through the handoff store and re-entered
+    # another's; not a preemption — nothing is recomputed or discarded)
+    handoffs: int = 0
+    # optional EOS id: generation terminates when the sampled token equals
+    # it (value-dependent stop; None = length-capped only).  The simulator
+    # has no token values, so it must leave this None.
+    stop_token: Optional[int] = None
+    stopped: bool = False       # finished via stop_token, not the length cap
+    # host-visibility timestamps of each delivered token (serve loops stamp
+    # these at drain time); consecutive gaps are the inter-token latencies
+    token_times: List[float] = field(default_factory=list)
     # set by resume(): the engine's device-resident last_token lane was lost
     # with the old slot, so the first post-restore decode round must stage
     # the last delivered token id from the host instead of consuming it
@@ -121,6 +133,18 @@ class Request:
         self.preemptions += 1
         self.swap_preemptions += 1
 
+    def handoff(self) -> None:
+        """Prefill completed on one replica and the KV is being exported for
+        a decode replica to import: same decode-resumable bookkeeping as
+        ``swap_preempt`` (progress kept, nothing folded), but counted as a
+        handoff — migrating at the prefill/decode boundary is a placement
+        decision, not a preemption."""
+        assert self.state == RequestState.DECODING, self.state
+        assert self.remaining_prefill <= 0, "handoff before prefill completed"
+        self.state = RequestState.WAITING
+        self.swapped = True
+        self.handoffs += 1
+
     def resume(self) -> None:
         """Swap-in completed: the staged KV is device-resident again.  A
         fully-prefilled victim rejoins the decode set (its next decode round
@@ -145,6 +169,19 @@ class Request:
         self.output_tokens[i] = tok
         if i < self.folded_tokens and self.prompt_tokens is not None:
             self.prompt_tokens[self.prompt_len - self.folded_tokens + i] = tok
+
+    def finish_stopped(self, now: float = 0.0) -> None:
+        """Value-dependent termination: the last delivered token matched
+        ``stop_token``.  Serve loops call this when the real id becomes
+        host-visible — which in a pipelined engine is one round AFTER the
+        length bookkeeping ran (the request may even have been preempted,
+        swapped out, or scheduled again in between)."""
+        assert self.state != RequestState.FINISHED
+        self.state = RequestState.FINISHED
+        self.stopped = True
+        self.swapped = False
+        self.needs_replay = False
+        self.finish_time = now
 
     def receive_token(self, tok: int = 0, now: float = 0.0) -> None:
         assert self.state == RequestState.DECODING

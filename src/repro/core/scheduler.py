@@ -42,6 +42,13 @@ class SchedulerConfig:
     lprs: Optional[LPRSConfig] = None # None = static token-budget chunking
     apc: Optional[APCConfig] = None   # None = APC off
     fairness: Optional["FairnessConfig"] = None  # None = single-tenant queue
+    # cache-aware aging credit: priority bonus per token of the request's
+    # context already materialized on the attached pool (held blocks, a
+    # host-staged swap record one restore round from runnable, or an indexed
+    # prefix-cache match) — near-free work is not starved behind full
+    # recomputes by pure arrival-order aging.  Key units per token (the same
+    # scale as |beta|); 0.0 disables (legacy ordering, bit-identical).
+    cache_credit: float = 0.0
 
 
 @dataclass
@@ -93,6 +100,9 @@ class SchedulerStats:
     swap_restores: int = 0              # swapped victims restored (swap-in)
     kv_deferrals: int = 0               # chunks deferred for lack of blocks
     swap_deferrals: int = 0             # restores deferred (SWAPPING/space/slots)
+    late_stops: int = 0                 # stop-token terminations applied at drain
+    refunded_decode_tokens: int = 0     # over-scheduled decodes unwound by stops
+    exports: int = 0                    # requests detached for cross-replica handoff
     apc: APCStats = field(default_factory=APCStats)
 
     @property
@@ -119,6 +129,7 @@ class ChunkedPrefillScheduler:
         predictor=None,
         kv_pool=None,           # optional KVBlockPool: memory features + booking
         kv_booking: bool = True,  # False: legacy mode, pool is features-only
+        shared_vtc=None,        # VirtualTokenCounter shared across replicas
     ):
         if cfg.lprs is not None and predictor is None:
             raise ValueError("LPRS requires a latency predictor")
@@ -126,20 +137,27 @@ class ChunkedPrefillScheduler:
         self.predictor = predictor
         self.kv_pool = kv_pool
         self.kv_booking = kv_booking
+        # the credit closure reads self.kv_pool dynamically: attach_kv_pool
+        # may run after the queue is built, and a pool-less scheduler (pure
+        # simulator) simply scores every candidate 0
+        credit_fn = self._cache_credit if cfg.cache_credit else None
         if cfg.fairness is not None:
             from repro.tenancy import FairnessState
 
             self.fairness: Optional["FairnessState"] = FairnessState(
                 cfg.fairness,
                 policy_factory=lambda: make_policy(
-                    cfg.policy, alpha=cfg.alpha, beta=cfg.beta
+                    cfg.policy, alpha=cfg.alpha, beta=cfg.beta,
+                    credit_fn=credit_fn,
                 ),
+                vtc=shared_vtc,
             )
             self.queue = self.fairness.queue
         else:
             self.fairness = None
             self.queue: PrefillQueue = make_policy(
-                cfg.policy, alpha=cfg.alpha, beta=cfg.beta
+                cfg.policy, alpha=cfg.alpha, beta=cfg.beta,
+                credit_fn=credit_fn,
             )
         # decoding membership is maintained INCREMENTALLY (insert on prefill
         # completion, O(1) pop on finish/preemption) — never rebuilt with a
@@ -182,6 +200,13 @@ class ChunkedPrefillScheduler:
 
     def _books(self) -> bool:
         return self.kv_pool is not None and self.kv_booking
+
+    def _cache_credit(self, req: Request) -> float:
+        """Cache-aware aging credit (``cfg.cache_credit`` per resident
+        token): evaluated whenever the queue (re-)keys the request."""
+        if self.kv_pool is None:
+            return 0.0
+        return self.cfg.cache_credit * self.kv_pool.resident_tokens(req.req_id)
 
     # -- engine slot wiring (late binding) -----------------------------------
     def attach_slot_binder(self, binder, releaser=None) -> None:
@@ -235,6 +260,66 @@ class ChunkedPrefillScheduler:
                 return True
         self.queue.add(req)
         return True
+
+    def submit_handoff(self, req: Request) -> None:
+        """Enqueue a request whose staged KV was just imported into this
+        scheduler's pool (cross-replica handoff).  Admission is NOT re-run —
+        the request was assessed once, at the prefill pool; charging its
+        token bucket on both sides of the link would double-bill the tenant.
+        The ordinary ``schedule()`` swap-restore path picks it up: it is
+        decode-resumable, so zero prefill tokens are ever scheduled for it
+        here."""
+        assert req.state == RequestState.WAITING and req.swapped, (
+            req.state, req.swapped,
+        )
+        self.queue.add(req)
+
+    def export_request(self, req: Request) -> None:
+        """Detach a request from this scheduler without releasing its pool
+        state (cross-replica handoff: the caller owns migrating the staged
+        KV).  The inverse of ``submit_handoff`` on the source side."""
+        self._decoding.pop(req.req_id, None)
+        self._bound_slots.discard(req.req_id)
+        if req in self.queue:
+            self.queue.remove(req)
+        if self.fairness is not None:
+            self.fairness.forget(req)
+        self.stats.exports += 1
+
+    def on_stop(self, req: Request, batch: Optional[ScheduledBatch] = None) -> None:
+        """A value-dependent stop (EOS) terminated ``req`` outside the normal
+        ``on_batch_done`` path — in a pipelined engine the real token id
+        lands one round LATE, so by the time the stop is observable the
+        request may already be booked into the next, not-yet-dispatched
+        round (``batch``), sitting in the queue as a preemption victim, or
+        host-staged mid-swap.  Unwind whatever the over-scheduled round
+        booked and retire the request everywhere."""
+        self._decoding.pop(req.req_id, None)
+        self._bound_slots.discard(req.req_id)
+        if req in self.queue:
+            self.queue.remove(req)
+        if batch is not None:
+            if req in batch.decode_reqs:
+                batch.decode_reqs.remove(req)
+                self.stats.scheduled_decode_tokens -= 1
+                self.stats.refunded_decode_tokens += 1
+            for i, (r, c) in enumerate(batch.prefill_chunks):
+                if r.req_id == req.req_id:
+                    batch.prefill_chunks.pop(i)
+                    self.stats.scheduled_prefill_tokens -= int(c)
+                    self.stats.scheduled_prefill_seqs -= 1
+                    break
+        if self._books():
+            # the booking refund: blocks the phantom round allocated go back
+            # with everything else the request held; a mid-swap victim's
+            # staging entry is dropped instead (no blocks on either side)
+            self.kv_pool.drop_swap(req.req_id)
+            self.kv_pool.release(req.req_id)
+        if self._slot_releaser is not None:
+            self._slot_releaser(req)
+        if self.fairness is not None:
+            self.fairness.forget(req)
+        self.stats.late_stops += 1
 
     @property
     def decoding(self) -> List[Request]:

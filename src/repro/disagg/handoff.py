@@ -1,0 +1,146 @@
+"""Cross-replica KV handoff staging and the handoff/colocate cost model.
+
+A disaggregated deployment splits prefill and decode onto separate engine
+replicas (separate schedulers, slots, and KV pools).  The migration unit is
+the host-side swap staging record the swap-preemption subsystem already
+produces: at prefill completion the source engine gathers the request's pages
+into a contiguous staging tensor (``JAXEngine.swap_out``), the async copy
+drains on the pipelined one-round-late path, and the SWAPPED_OUT record —
+payload, block-table shape, tenant, prompt hashes — is detached from the
+source pool (``export_swap``) into the ``KVHandoffStore`` here, then adopted
+by the chosen decode pool (``import_swap``).  The decode scheduler restores
+it through the ordinary swap-in path, so the request resumes DECODE-ONLY:
+zero prefill tokens are ever scheduled on the decode side.
+
+While staged here, a request's KV lives in exactly ONE place: not the source
+pool (export popped it), not the destination (import has not run).  The
+store is therefore a first-class location in the exactly-one-location
+invariant the property tests check.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+
+@dataclass
+class HandoffStats:
+    staged: int = 0            # records entered the store
+    delivered: int = 0         # records adopted by a decode pool
+    dropped: int = 0           # killed mid-handoff (late stop): staging discarded
+    colocated: int = 0         # prefill-completions the cost model kept local
+    bytes_moved: int = 0       # Σ payload bytes delivered across the link
+
+
+class KVHandoffStore:
+    """Host-side staging ground for in-flight cross-replica handoffs.
+
+    Entries are keyed by req_id and hold the exported ``(_SwapRecord,
+    _Registration)`` pair plus the source replica's name.  The store owns the
+    record between ``export_swap`` on the source pool and ``import_swap`` on
+    the destination — the only window in which neither pool accounts for the
+    request's KV.
+    """
+
+    def __init__(self):
+        self._entries: Dict[int, Tuple[object, object, str]] = {}
+        self.stats = HandoffStats()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, req_id: int) -> bool:
+        return req_id in self._entries
+
+    def req_ids(self) -> List[int]:
+        return list(self._entries)
+
+    def put(self, req_id: int, rec, reg, *, src: str = "?",
+            bytes_per_token: int = 0) -> None:
+        assert req_id not in self._entries, f"req {req_id} already staged"
+        self._entries[req_id] = (rec, reg, src)
+        self.stats.staged += 1
+        self.stats.bytes_moved += rec.tokens * max(bytes_per_token, 0)
+
+    def take(self, req_id: int) -> Tuple[object, object]:
+        """Hand the staged record to a destination pool (delivery)."""
+        rec, reg, _src = self._entries.pop(req_id)
+        self.stats.delivered += 1
+        return rec, reg
+
+    def drop(self, req_id: int) -> None:
+        """Discard a staged record whose request died mid-handoff."""
+        if self._entries.pop(req_id, None) is not None:
+            self.stats.dropped += 1
+
+    def staged_tokens(self, req_id: int) -> int:
+        entry = self._entries.get(req_id)
+        return entry[0].tokens if entry is not None else 0
+
+    def check_invariants(self) -> None:
+        """At quiesce the store must be empty: every exported record was
+        either delivered to a decode pool or explicitly dropped."""
+        assert not self._entries, (
+            f"handoff store leaked staged records: {sorted(self._entries)}"
+        )
+
+
+@dataclass(frozen=True)
+class HandoffCostConfig:
+    """Deterministic per-request handoff-vs-colocate pricing.
+
+    Handing off pays the KV transfer twice over the host link (source gather
+    →host, host→destination scatter) plus fixed launch costs; staying
+    colocated pays chunked-prefill interference on every remaining decode
+    token — on a prefill-pool replica each decode round shares its batch with
+    prefill chunks, the contention disaggregation exists to remove (the
+    c_mix term of the serving cost model).
+    """
+
+    link_ms_per_mb: float = 0.05      # ~20 GB/s effective host link
+    link_fixed_ms: float = 0.2        # per transfer launch (paid twice)
+    # expected extra latency per decode token executed on a prefill-busy
+    # replica: c_mix_ms x typical prefill tokens co-batched per round
+    contention_ms_per_token: float = 0.004
+
+
+class HandoffCostModel:
+    """Decides, per prefill completion, whether exporting the KV beats
+    keeping the decode colocated with the prefill pool."""
+
+    def __init__(self, cfg: Optional[HandoffCostConfig] = None,
+                 *, min_handoff_tokens: int = 0):
+        self.cfg = cfg or HandoffCostConfig()
+        self.min_handoff_tokens = min_handoff_tokens
+
+    def handoff_cost_ms(self, kv_tokens: int, bytes_per_token: int) -> float:
+        mb = kv_tokens * max(bytes_per_token, 0) / 2**20
+        return 2 * (self.cfg.link_fixed_ms + self.cfg.link_ms_per_mb * mb)
+
+    def colocated_cost_ms(self, remaining_decode_tokens: int) -> float:
+        return self.cfg.contention_ms_per_token * max(remaining_decode_tokens, 0)
+
+    def should_handoff(self, kv_tokens: int, remaining_decode_tokens: int,
+                       bytes_per_token: int) -> bool:
+        """Short prompts with short decodes stay colocated (moving their KV
+        costs more than the contention it avoids); everything past the floor
+        moves when the transfer amortizes over the remaining decode."""
+        if kv_tokens < self.min_handoff_tokens:
+            return False
+        return (
+            self.handoff_cost_ms(kv_tokens, bytes_per_token)
+            <= self.colocated_cost_ms(remaining_decode_tokens)
+        )
+
+
+class AlwaysHandoff:
+    """Degenerate policy: every prefill completion migrates (subject only to
+    the token floor).  The parity tests use it so each request exercises the
+    full export/import path."""
+
+    def __init__(self, min_handoff_tokens: int = 0):
+        self.min_handoff_tokens = min_handoff_tokens
+
+    def should_handoff(self, kv_tokens: int, remaining_decode_tokens: int,
+                       bytes_per_token: int) -> bool:
+        return kv_tokens >= self.min_handoff_tokens

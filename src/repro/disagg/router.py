@@ -1,0 +1,314 @@
+"""Disaggregated prefill/decode serving: pool-of-replicas router with
+cross-replica KV handoff.
+
+Topology: ``n_prefill`` replicas admit and chunk-prefill new requests;
+``n_decode`` replicas run steady-state decode.  Each replica is a full
+(scheduler, engine, pool) stack driven as a ``ReplicaServer`` inside ONE
+host loop — the router interleaves ``step()`` calls, so a single process
+serves the whole fleet deterministically (the real deployment would run one
+process per replica; nothing here depends on co-residency except the test
+harness's determinism).
+
+Handoff lifecycle (all on the pipelined one-round-late path):
+  1. a request completes its prefill on a prefill replica; the round's
+     ``on_prefill_complete`` hook asks the cost policy handoff-vs-colocate
+  2. handoff: the source engine gathers the KV into a staging tensor
+     (async device→host copy), the scheduler forgets the request
+     (``export_request``), and the request parks WAITING/swapped
+  3. when the copy drains (source drain finalizes it — the same drain that
+     patches the request's first REAL token, so the decode side never stages
+     a placeholder), the record leaves the source pool (``export_swap``)
+     through the ``KVHandoffStore`` into the chosen decode pool
+     (``import_swap``)
+  4. the decode scheduler restores it via the ordinary swap-in path —
+     decode-resumable, ``needs_replay`` staging the delivered first token —
+     so ZERO prefill tokens are ever scheduled on the decode side
+Placement is KV-locality- and load-aware: prefer the decode replica already
+holding the longest shared prefix (``probe_prefix``), tie-break by
+per-tenant then total outstanding work.  With fairness configured all
+replicas share ONE VirtualTokenCounter, so a tenant's service aggregates
+across the fleet — fanning out buys no extra share (anti-laundering).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.disagg.handoff import (
+    AlwaysHandoff, HandoffCostConfig, HandoffCostModel, KVHandoffStore,
+)
+from repro.engine.engine import (
+    EngineConfig, JAXEngine, ReplicaServer, compress_idle_gap,
+)
+from repro.engine.kv_cache import pool_for_model
+from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
+
+
+@dataclass
+class DisaggConfig:
+    n_prefill: int = 1
+    n_decode: int = 1
+    # prompts whose KV is shorter than this never migrate (floor under any
+    # cost policy — moving a tiny prefix is pure overhead)
+    min_handoff_tokens: int = 0
+    # None: every completion past the floor migrates (AlwaysHandoff).  A
+    # HandoffCostConfig prices transfer bytes against colocated contention
+    # per request, keeping short-prompt/short-decode requests local.
+    cost: Optional[HandoffCostConfig] = None
+
+
+@dataclass
+class DisaggResult:
+    report: LatencyReport
+    requests: List[Request]
+    rounds: int                         # Σ scheduling rounds over the fleet
+    wall_s: float
+    outputs: Dict[int, List[int]]
+    replica_rounds: List[int]           # per replica (prefill pool first)
+    handoffs: int                       # records delivered across the link
+    dropped_handoffs: int               # killed mid-handoff
+    colocated: int                      # completions the cost policy kept local
+    bytes_moved: int
+    memory: Optional[List[MemoryReport]] = None
+
+
+class DisaggregatedRouter:
+    """Fronts a prefill pool and a decode pool of ``ReplicaServer``s.
+
+    Admission goes to the least-loaded prefill replica; handoffs drain
+    through ``pump()``; ``serve_disagg`` drives the whole fleet.
+    """
+
+    def __init__(
+        self,
+        prefill: List[ReplicaServer],
+        decode: List[ReplicaServer],
+        cfg: Optional[DisaggConfig] = None,
+        store: Optional[KVHandoffStore] = None,
+    ):
+        assert prefill, "need at least one prefill replica"
+        assert decode, "need at least one decode replica"
+        self.cfg = cfg or DisaggConfig()
+        self.prefill = list(prefill)
+        self.decode = list(decode)
+        self.store = store if store is not None else KVHandoffStore()
+        if self.cfg.cost is not None:
+            self.policy = HandoffCostModel(
+                self.cfg.cost, min_handoff_tokens=self.cfg.min_handoff_tokens)
+        else:
+            self.policy = AlwaysHandoff(self.cfg.min_handoff_tokens)
+        # (request, source replica): exported, gather not yet host-resident
+        self._pending: List[Tuple[Request, ReplicaServer]] = []
+        for rs in self.prefill:
+            rs.on_prefill_complete = self._maybe_handoff
+
+    @property
+    def replicas(self) -> List[ReplicaServer]:
+        return self.prefill + self.decode
+
+    # -- admission -------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Admit to the least-loaded prefill replica (outstanding prefill +
+        decode tokens; replica index breaks ties deterministically)."""
+        best = min(
+            range(len(self.prefill)),
+            key=lambda i: (self.prefill[i].outstanding_work(), i),
+        )
+        self.prefill[best].submit(req)
+
+    # -- handoff: source side --------------------------------------------------
+    def _maybe_handoff(self, server: ReplicaServer, req: Request) -> None:
+        """Prefill just completed on ``server``.  Export the KV unless the
+        cost policy keeps the decode colocated."""
+        kv_tokens = server.kv_pool.lens.get(req.req_id, 0)
+        remaining = req.max_new_tokens - req.generated
+        if not self.policy.should_handoff(
+                kv_tokens, remaining, server.kv_pool.cfg.bytes_per_token):
+            self.store.stats.colocated += 1
+            return
+        # gather + async device→host copy + slot release + SWAPPING record —
+        # the engine still holds the slot here, so swap_out must precede the
+        # scheduler export (which only drops bookkeeping, never pool state)
+        server.engine.swap_out(req)
+        server.sched.export_request(req)
+        req.handoff()
+        self._pending.append((req, server))
+
+    # -- handoff: delivery -----------------------------------------------------
+    def pump(self) -> int:
+        """Move every handoff whose source gather has drained: source pool →
+        store → chosen decode pool.  A request that died while its copy was
+        in flight (a value-dependent stop applied at the source drain — which
+        already dropped the staging record via ``on_stop``) is discarded
+        without touching any pool.  Returns handoffs delivered."""
+        moved = 0
+        still: List[Tuple[Request, ReplicaServer]] = []
+        for req, src in self._pending:
+            if req.state == RequestState.FINISHED:
+                # killed mid-handoff: on_stop cleaned the source pool; make
+                # the cleanup idempotent here in case the stop landed through
+                # a path that did not (nothing may leak)
+                src.kv_pool.drop_swap(req.req_id)
+                src.kv_pool.release(req.req_id)
+                self.store.stats.dropped += 1
+                continue
+            if not src.kv_pool.swap_ready(req.req_id):
+                still.append((req, src))      # gather still in flight
+                continue
+            rec, reg = src.kv_pool.export_swap(req.req_id)
+            self.store.put(req.req_id, rec, reg, src=src.name,
+                           bytes_per_token=src.kv_pool.cfg.bytes_per_token)
+            dst = self._place(req)
+            dst.adopt_handoff(req, *self.store.take(req.req_id))
+            moved += 1
+        self._pending = still
+        return moved
+
+    def _place(self, req: Request) -> ReplicaServer:
+        """Decode placement: longest resident shared prefix first (restoring
+        next to cached KV makes future prefix hits free and keeps one
+        tenant's conversation tree on one replica), then per-tenant
+        outstanding work (spread a heavy tenant's decodes), then total load,
+        then replica index."""
+        def key(i: int):
+            rs = self.decode[i]
+            locality = rs.kv_pool.probe_prefix(req.prompt_tokens)
+            return (-locality, rs.tenant_outstanding(req.tenant),
+                    rs.outstanding_work(), i)
+        return self.decode[min(range(len(self.decode)), key=key)]
+
+    # -- invariants ------------------------------------------------------------
+    def kv_locations(self, req_id: int) -> int:
+        """How many places account for this request's KV right now: replica
+        pools (live table or staged swap record) plus the handoff store.
+        Live requests must always total exactly one."""
+        n = 0
+        for rs in self.replicas:
+            pool = rs.kv_pool
+            if pool.tables.get(req_id) or pool.swap_state(req_id) is not None:
+                n += 1
+        if req_id in self.store:
+            n += 1
+        return n
+
+    def check_invariants(self) -> None:
+        for rs in self.replicas:
+            rs.kv_pool.check_invariants()
+        self.store.check_invariants()
+
+
+def build_disagg(
+    model_cfg,
+    *,
+    cfg: Optional[DisaggConfig] = None,
+    engine_cfg: Optional[EngineConfig] = None,
+    sched_cfg: Optional[SchedulerConfig] = None,
+    n_blocks: int = 512,
+    block_size: int = 16,
+    prefix_cache: bool = True,
+    warmup: bool = False,
+) -> DisaggregatedRouter:
+    """Construct a whole fleet: per-replica engines (sharing ONE set of
+    parameters — every replica must hold identical weights for a handoff to
+    be exact), pools, and schedulers.  With fairness configured, one shared
+    VirtualTokenCounter spans all schedulers (VTC anti-laundering)."""
+    cfg = cfg or DisaggConfig()
+    engine_cfg = engine_cfg or EngineConfig()
+    sched_cfg = sched_cfg or SchedulerConfig()
+    shared_vtc = None
+    if sched_cfg.fairness is not None:
+        from repro.tenancy import make_shared_vtc
+
+        shared_vtc = make_shared_vtc(sched_cfg.fairness)
+    params = None
+    replicas: List[ReplicaServer] = []
+    for i in range(cfg.n_prefill + cfg.n_decode):
+        role = "prefill" if i < cfg.n_prefill else "decode"
+        engine = JAXEngine(model_cfg, engine_cfg, params=params)
+        params = engine.params             # replicas share one weight set
+        pool = pool_for_model(
+            model_cfg, n_blocks=n_blocks, block_size=block_size,
+            enable_prefix_cache=prefix_cache,
+        )
+        sched = ChunkedPrefillScheduler(sched_cfg, kv_pool=pool,
+                                        shared_vtc=shared_vtc)
+        rs = ReplicaServer(sched, engine, kv_pool=pool,
+                           name=f"{role}{i if role == 'prefill' else i - cfg.n_prefill}")
+        if warmup:
+            engine.warmup()
+        replicas.append(rs)
+    return DisaggregatedRouter(
+        replicas[: cfg.n_prefill], replicas[cfg.n_prefill:], cfg,
+    )
+
+
+def serve_disagg(
+    requests: List[Request],
+    router: DisaggregatedRouter,
+    *,
+    max_rounds: int = 200_000,
+) -> DisaggResult:
+    """Drive the fleet to completion: admit arrivals to the prefill pool,
+    round-robin one ``step()`` per replica per sweep, pump handoffs, and
+    compress idle gaps exactly like single-replica ``serve`` (one shared
+    clock across the fleet keeps aging/VTC comparable between replicas)."""
+    pending = sorted(requests, key=lambda r: r.arrival_time)
+    for r in pending:
+        assert r.prompt_tokens is not None, "attach_prompt_tokens() first"
+    next_i = 0
+    t_start = time.perf_counter()
+    for rs in router.replicas:
+        rs.start(t_start)
+    now = 0.0
+    sweeps = 0
+    while sweeps < max_rounds:
+        sweeps += 1
+        now = time.perf_counter() - t_start
+        while next_i < len(pending) and pending[next_i].arrival_time <= now:
+            router.submit(pending[next_i])
+            next_i += 1
+        statuses = [rs.step(now) for rs in router.replicas]
+        moved = router.pump()
+        progress = moved > 0 or any(
+            s in ("round", "drained", "finalized") for s in statuses)
+        # quiesce is judged AFTER the pump, against live replica state — a
+        # status computed before the pump is stale the moment a handoff
+        # lands: the delivering sweep read the decode replica as "idle", yet
+        # it now holds restorable work
+        if (not progress and not router._pending
+                and not any(rs.busy() for rs in router.replicas)):
+            if next_i >= len(pending):
+                break
+            compress_idle_gap(pending, next_i, now)
+        elif not progress:
+            time.sleep(0.0005)    # starved fleet: blocked on device/copies
+    for rs in router.replicas:
+        rs.finish()
+    router.pump()                 # a finish() drain can land a final gather
+    now = time.perf_counter() - t_start
+
+    outputs: Dict[int, List[int]] = {}
+    # prefill replicas first so a handed-off request's decode-side (complete)
+    # output wins over the source's prefill-era placeholder entry
+    for rs in router.prefill + router.decode:
+        outputs.update(rs.outputs)
+    stats = router.store.stats
+    return DisaggResult(
+        report=summarize(requests, makespan=now),
+        requests=requests,
+        rounds=sum(rs.rounds for rs in router.replicas),
+        wall_s=now,
+        outputs=outputs,
+        replica_rounds=[rs.rounds for rs in router.replicas],
+        handoffs=stats.delivered,
+        dropped_handoffs=stats.dropped,
+        colocated=stats.colocated,
+        bytes_moved=stats.bytes_moved,
+        memory=[
+            summarize_memory(rs.kv_pool, rs.sched.stats)
+            for rs in router.replicas
+        ],
+    )

@@ -636,6 +636,293 @@ def compress_idle_gap(pending: List[Request], next_i: int, now: float) -> None:
         pending[j].arrival_time += offset
 
 
+class ReplicaServer:
+    """One replica's continuous-batching state machine: the body of
+    ``serve()`` factored into admit/step/drain pieces so a multi-replica
+    driver (``repro.disagg.DisaggregatedRouter``) can interleave several
+    engines — each with its own scheduler and pool — inside one host loop,
+    while single-replica ``serve()`` stays a thin wrapper.
+
+    ``step(now)`` runs at most one scheduling round and reports what
+    happened:
+      * ``"round"``     — a batch was dispatched (pipelined) or executed
+      * ``"drained"``   — progress was made by draining the in-flight round
+      * ``"finalized"`` — pending swap-out copies were landed (no round ran)
+      * ``"starved"``   — runnable work exists but nothing could be placed
+      * ``"idle"``      — no queued or in-flight work at all
+
+    Value-dependent stop tokens (``Request.stop_token``) are honored here,
+    not in ``receive_token``: a pipelined engine learns token VALUES one
+    round late, so the stop is applied at drain time — by which point the
+    request may already be booked into the next, not-yet-dispatched round
+    (unwound via ``scheduler.on_stop``, which also refunds the
+    over-scheduled round's KV booking), preempted, or mid-handoff.  Greedy
+    outputs stay bit-identical to the synchronous engine, which observes the
+    same stop in the same round's ``on_batch_done``.
+    """
+
+    def __init__(
+        self,
+        scheduler: ChunkedPrefillScheduler,
+        engine: JAXEngine,
+        *,
+        kv_pool: Optional[KVBlockPool] = None,
+        collect_samples: bool = False,
+        on_prefill_complete=None,
+        name: str = "replica",
+    ):
+        self.sched = scheduler
+        self.engine = engine
+        self.kv_pool = kv_pool
+        self.collect_samples = collect_samples
+        # multi-replica hook: called once per request in the round its
+        # prefill completed (state DECODING, first token bookkept) — the
+        # disaggregated router decides there whether to export the KV
+        self.on_prefill_complete = on_prefill_complete
+        self.name = name
+        self.pipelined = engine.cfg.pipelined
+        self.inflight: Optional[InflightRound] = None
+        self.rounds = 0
+        self.outputs: Dict[int, List[int]] = {}
+        self.feats: List[np.ndarray] = []
+        self.lats: List[float] = []
+        self.t_start = time.perf_counter()
+
+        if kv_pool is not None:
+            if scheduler.kv_pool is None:
+                # the scheduler books blocks chunk-granularly inside schedule()
+                scheduler.attach_kv_pool(kv_pool)
+            engine.bind_kv_pool(kv_pool)
+        # slots bind at first schedule and free at preemption, not admission
+        scheduler.attach_slot_binder(engine.acquire_slot, releaser=engine.release)
+        if scheduler.kv_pool is not None and scheduler.kv_booking:
+            # preemption mode comes from the ENGINE config (it owns the
+            # physical swap path); the deterministic cost model prices swap
+            # bytes vs recompute FLOPs per victim
+            scheduler.attach_swap(
+                engine.swap_out, engine.swap_in,
+                cost_model=CostModel(CostModelConfig(noise_std=0.0)),
+                mode=engine.cfg.preemption_mode,
+            )
+        # bubble accounting is per-serve: drop any history (and the
+        # ready-stamp of a previous serve, which would read as one giant
+        # inter-serve bubble)
+        engine.bubble_ms = []
+        engine._t_ready = None
+
+    # -- clock ----------------------------------------------------------------
+    def start(self, t_start: float) -> None:
+        """Anchor this replica's clock (a multi-replica driver shares one)."""
+        self.t_start = t_start
+
+    def _now(self) -> float:
+        return time.perf_counter() - self.t_start
+
+    # -- intake ---------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        """Admit one request: pool registration (tenant + prompt hashes
+        only — the prefix-cache MATCH waits for first slot bind, so a parked
+        backlog pins no cached blocks and no tenant quota) plus scheduler
+        submission."""
+        if self.kv_pool is not None:
+            self.kv_pool.register_request(
+                req.req_id, tenant=req.tenant,
+                prompt_tokens=req.prompt_tokens, prompt_len=req.prompt_len,
+            )
+        if not self.sched.submit(req):         # admission-rejected: give back
+            if self.kv_pool is not None:
+                self.kv_pool.release(req.req_id)
+
+    def adopt_handoff(self, req: Request, rec, reg) -> None:
+        """Decode-pool side of a cross-replica handoff: land the exported
+        staging record in this replica's pool and enqueue the request.  The
+        ordinary swap-restore path inside ``schedule()`` then binds a slot,
+        re-charges the tenant's quota, scatters the payload, and resumes the
+        request decode-only (``needs_replay`` stages its last delivered
+        token) — no prefill chunk is ever scheduled for it here."""
+        self.kv_pool.import_swap(req.req_id, rec, reg)
+        self.sched.submit_handoff(req)
+
+    # -- introspection ---------------------------------------------------------
+    def has_work(self) -> bool:
+        return self.sched.has_work()
+
+    def has_inflight(self) -> bool:
+        return self.inflight is not None
+
+    def busy(self) -> bool:
+        return (self.sched.has_work() or self.inflight is not None
+                or self.engine.has_pending_swaps())
+
+    def outstanding_work(self) -> int:
+        """Tokens of runnable work currently on this replica (prefill left +
+        decode left over queued/decoding requests) — the router's load key."""
+        total = 0
+        for r in self.sched.queue.requests():
+            total += r.remaining_prefill + (r.max_new_tokens - r.generated)
+        for r in self.sched._decoding.values():
+            total += r.remaining_prefill + (r.max_new_tokens - r.generated)
+        return total
+
+    def tenant_outstanding(self, tenant: str) -> int:
+        total = 0
+        for r in list(self.sched.queue.requests()) + list(
+                self.sched._decoding.values()):
+            if r.tenant == tenant:
+                total += r.remaining_prefill + (r.max_new_tokens - r.generated)
+        return total
+
+    # -- one scheduling round --------------------------------------------------
+    def step(self, now: float) -> str:
+        sched, engine = self.sched, self.engine
+        drained_eagerly = False
+        if self.inflight is not None and self.inflight.toks.is_ready():
+            # device already finished: drain before (not after) the next
+            # schedule — tokens/timestamps stamp at true readiness and the
+            # bubble metric doesn't hide idle time behind the overlap
+            self._drain_inflight()
+            drained_eagerly = True
+        if not sched.has_work():
+            if self.inflight is not None:
+                self._drain_inflight()
+                return "drained"
+            if engine.has_pending_swaps():
+                # an exported (handoff) request's gather can be the only
+                # pending work on this replica — land it so the router can
+                # move the staged record on
+                engine.finalize_swaps()
+                return "finalized"
+            # an eager drain above counts as progress — it may have just
+            # finalized an exported gather the router is waiting on, so
+            # "idle" (a quiesce signal) would be premature this step
+            return "drained" if drained_eagerly else "idle"
+
+        # preemption victims' slots were already freed inside schedule() (the
+        # releaser hook) — a victim may even have re-bound a fresh slot and
+        # been rescheduled within the same round, so do NOT release here.
+        # In pipelined mode this schedule overlaps the in-flight round.
+        batch = sched.schedule(now)
+        if batch.is_empty():
+            if self.inflight is not None:
+                self._drain_inflight()
+                return "drained"
+            if engine.has_pending_swaps():
+                # nothing in flight to piggyback the staging drain on (e.g.
+                # every runnable request is a SWAPPING victim): finalize now
+                # so the next schedule() round can restore them
+                engine.finalize_swaps()
+                return "finalized"
+            return "drained" if drained_eagerly else "starved"
+
+        if self.pipelined:
+            if self.inflight is not None:
+                # round N-1's ids land BEFORE round N+1 stages anything that
+                # could embed them (a preemption fold re-prefills delivered
+                # tokens) — this is the pipeline's one-round visibility lag.
+                # The just-scheduled batch rides along so a late stop can be
+                # unwound from it before it dispatches.
+                self._drain_inflight(pending_batch=batch)
+            self.inflight = engine.dispatch(batch)
+            wall_ms = None
+        else:
+            wall_ms = engine.execute(batch)
+        if self.kv_pool is not None:
+            # newly sealed (full, hashed) prompt blocks become restorable
+            for r, _c in batch.prefill_chunks:
+                engine.capture_sealed(r)
+        if self.collect_samples:
+            self.feats.append(batch.state.features())
+            if wall_ms is not None:
+                self.lats.append(wall_ms)
+        self.rounds += 1
+
+        now2 = self._now()
+        sched.on_batch_done(batch, now2)       # releases finished KV refs
+
+        if self.pipelined:
+            # the placeholder each sampled request just received sits at the
+            # tail of its output_tokens; drain() patches the real id there
+            for req, _slot in self.inflight.sampled:
+                self.inflight.out_index[req.req_id] = len(req.output_tokens) - 1
+            # sampled ∩ prefill = chunks that completed their prefill this
+            # round: their prefill_end_time re-stamps at drain
+            self.inflight.prefill_ids = {r.req_id for r, _ in batch.prefill_chunks}
+
+        for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
+            self.outputs.setdefault(r.req_id, [])
+            if r.state == RequestState.FINISHED:
+                if self.pipelined:
+                    self.inflight.finished.append(r)
+                else:
+                    self.outputs[r.req_id] = list(r.output_tokens)
+                engine.release(r)
+
+        if not self.pipelined:
+            # synchronous engine: token values are already real (execute()
+            # drains internally), so stops and per-token timestamps apply in
+            # the same round
+            for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
+                if r.remaining_prefill == 0 and r.output_tokens:
+                    r.token_times.append(now2)
+                if (r.stop_token is not None
+                        and r.state == RequestState.DECODING
+                        and r.output_tokens
+                        and r.output_tokens[-1] == r.stop_token):
+                    r.finish_stopped(now2)
+                    self.outputs[r.req_id] = list(r.output_tokens)
+                    sched.on_stop(r)
+
+        if self.on_prefill_complete is not None:
+            for r, _c in batch.prefill_chunks:
+                if r.state == RequestState.DECODING and r.remaining_prefill == 0:
+                    self.on_prefill_complete(self, r)
+        return "round"
+
+    # -- drain -----------------------------------------------------------------
+    def _drain_inflight(self, pending_batch: Optional[ScheduledBatch] = None) -> None:
+        inflight, self.inflight = self.inflight, None
+        wall_ms = self.engine.drain(inflight)
+        if self.collect_samples:
+            self.lats.append(wall_ms)
+        # timestamps recorded against the placeholder `now` are re-stamped to
+        # the moment the ids actually became host-visible — the earliest a
+        # client could receive them — so pipelined LatencyReports are not
+        # systematically understated vs the synchronous engine's
+        now_v = self._now()
+        for req, _slot in inflight.sampled:
+            if inflight.out_index.get(req.req_id) == 0:
+                req.first_token_time = now_v
+            if req.req_id in inflight.prefill_ids:
+                req.prefill_end_time = now_v
+            req.token_times.append(now_v)
+        for r in inflight.finished:
+            r.finish_time = now_v
+            # patched ids are final only now — deliver them
+            self.outputs[r.req_id] = list(r.output_tokens)
+        # value-dependent stops, one round late: only now are the sampled ids
+        # real.  A stopping request may meanwhile have been booked into the
+        # next round (pending_batch — scheduled but not yet dispatched),
+        # preempted to the queue, swap-staged, or exported for a handoff;
+        # on_stop unwinds each of those (the over-scheduled round's KV
+        # booking is refunded with the release).
+        for req, _slot in inflight.sampled:
+            if req.stop_token is None or req.state == RequestState.FINISHED:
+                continue
+            idx = inflight.out_index.get(req.req_id)
+            if idx is None or req.output_tokens[idx] != req.stop_token:
+                continue
+            req.finish_stopped(now_v)
+            self.outputs[req.req_id] = list(req.output_tokens)
+            self.sched.on_stop(req, pending_batch)
+
+    def finish(self) -> None:
+        """End-of-serve cleanup: drain the last round and land any pending
+        swap copies (no staging entry is left mid-flight at exit)."""
+        if self.inflight is not None:
+            self._drain_inflight()
+        self.engine.finalize_swaps()
+
+
 def serve(
     requests: List[Request],
     scheduler: ChunkedPrefillScheduler,
@@ -660,176 +947,58 @@ def serve(
     token VALUES become host-visible one round late, which is fine because
     round bookkeeping (chunk deliveries, length-capped termination) is
     value-independent and the values themselves are only needed for
-    delivered outputs and preemption folds, both patched at drain time
-    before anything is staged from them.  ``collect_samples`` latencies in
-    pipelined mode are dispatch->drain walls (device time plus overlapped
-    host work).
+    delivered outputs, stop-token termination, and preemption folds, all
+    patched/applied at drain time before anything is staged from them.
+    ``collect_samples`` latencies in pipelined mode are dispatch->drain
+    walls (device time plus overlapped host work).
 
-    realtime_arrivals=False (default) admits requests by the engine's own
-    clock (wall time since start), compressing idle gaps — deterministic and
-    fast for tests; True sleeps to honor arrival times.
+    The loop body lives in ``ReplicaServer`` (one replica's admit/step/drain
+    state machine); this wrapper owns only arrival admission and idle-gap
+    handling.  realtime_arrivals=False (default) admits requests by the
+    engine's own clock (wall time since start), compressing idle gaps —
+    deterministic and fast for tests; True sleeps to honor arrival times.
     """
     pending = sorted(requests, key=lambda r: r.arrival_time)
     for r in pending:
         assert r.prompt_tokens is not None, "attach_prompt_tokens() first"
+    server = ReplicaServer(
+        scheduler, engine, kv_pool=kv_pool, collect_samples=collect_samples,
+    )
     next_i = 0
     t_start = time.perf_counter()
+    server.start(t_start)
     now = 0.0
-    rounds = 0
-    feats, lats = [], []
-    outputs: Dict[int, List[int]] = {}
-    pipelined = engine.cfg.pipelined
-    inflight: Optional[InflightRound] = None
-    if kv_pool is not None:
-        if scheduler.kv_pool is None:
-            # the scheduler books blocks chunk-granularly inside schedule()
-            scheduler.attach_kv_pool(kv_pool)
-        engine.bind_kv_pool(kv_pool)
-    # slots bind at first schedule and free at preemption, not admission
-    scheduler.attach_slot_binder(engine.acquire_slot, releaser=engine.release)
-    if scheduler.kv_pool is not None and scheduler.kv_booking:
-        # preemption mode comes from the ENGINE config (it owns the physical
-        # swap path); the deterministic cost model prices swap bytes vs
-        # recompute FLOPs per victim
-        scheduler.attach_swap(
-            engine.swap_out, engine.swap_in,
-            cost_model=CostModel(CostModelConfig(noise_std=0.0)),
-            mode=engine.cfg.preemption_mode,
-        )
-    # bubble accounting is per-serve: drop any history (and the ready-stamp
-    # of a previous serve, which would read as one giant inter-serve bubble)
-    engine.bubble_ms = []
-    engine._t_ready = None
 
-    def admit(now_s: float):
-        nonlocal next_i
-        while next_i < len(pending) and pending[next_i].arrival_time <= now_s:
-            req = pending[next_i]
-            if kv_pool is not None:
-                # registration only (tenant + prompt block hashes): the
-                # prefix-cache MATCH waits for first slot bind, so a parked
-                # backlog pins no cached blocks and no tenant quota
-                kv_pool.register_request(
-                    req.req_id, tenant=req.tenant,
-                    prompt_tokens=req.prompt_tokens, prompt_len=req.prompt_len,
-                )
-            if not scheduler.submit(req):      # admission-rejected: give back
-                if kv_pool is not None:
-                    kv_pool.release(req.req_id)
-            next_i += 1
-
-    def drain_inflight():
-        nonlocal inflight
-        wall_ms = engine.drain(inflight)
-        if collect_samples:
-            lats.append(wall_ms)
-        # timestamps recorded against the placeholder `now` are re-stamped to
-        # the moment the ids actually became host-visible — the earliest a
-        # client could receive them — so pipelined LatencyReports are not
-        # systematically understated vs the synchronous engine's
-        now_v = time.perf_counter() - t_start
-        for req, _slot in inflight.sampled:
-            if inflight.out_index.get(req.req_id) == 0:
-                req.first_token_time = now_v
-            if req.req_id in inflight.prefill_ids:
-                req.prefill_end_time = now_v
-        for r in inflight.finished:
-            r.finish_time = now_v
-            # patched ids are final only now — deliver them
-            outputs[r.req_id] = list(r.output_tokens)
-        inflight = None
-
-    while rounds < max_rounds:
+    while server.rounds < max_rounds:
         now = time.perf_counter() - t_start
-        admit(now)
-        if inflight is not None and inflight.toks.is_ready():
-            # device already finished: drain before (not after) the next
-            # schedule — tokens/timestamps stamp at true readiness and the
-            # bubble metric doesn't hide idle time behind the overlap
-            drain_inflight()
-        if not scheduler.has_work():
-            if inflight is not None:
-                drain_inflight()
-                continue
+        while next_i < len(pending) and pending[next_i].arrival_time <= now:
+            server.submit(pending[next_i])
+            next_i += 1
+        status = server.step(now)
+        if status == "idle":
             if next_i >= len(pending):
                 break
             if realtime_arrivals:
                 time.sleep(min(0.001, pending[next_i].arrival_time - now))
             else:
                 compress_idle_gap(pending, next_i, now)
-            continue
-
-        # preemption victims' slots were already freed inside schedule() (the
-        # releaser hook) — a victim may even have re-bound a fresh slot and
-        # been rescheduled within the same round, so do NOT release here.
-        # In pipelined mode this schedule overlaps the in-flight round.
-        batch = scheduler.schedule(now)
-        if batch.is_empty():
-            if inflight is not None:
-                drain_inflight()
-                continue
-            if engine.has_pending_swaps():
-                # nothing in flight to piggyback the staging drain on (e.g.
-                # every runnable request is a SWAPPING victim): finalize now
-                # so the next schedule() round can restore them
-                engine.finalize_swaps()
-                continue
+        elif status == "starved":
             time.sleep(0.0005)
-            continue
 
-        if pipelined:
-            if inflight is not None:
-                # round N-1's ids land BEFORE round N+1 stages anything that
-                # could embed them (a preemption fold re-prefills delivered
-                # tokens) — this is the pipeline's one-round visibility lag
-                drain_inflight()
-            inflight = engine.dispatch(batch)
-            wall_ms = None
-        else:
-            wall_ms = engine.execute(batch)
-        if kv_pool is not None:
-            # newly sealed (full, hashed) prompt blocks become restorable
-            for r, _c in batch.prefill_chunks:
-                engine.capture_sealed(r)
-        if collect_samples:
-            feats.append(batch.state.features())
-            if wall_ms is not None:
-                lats.append(wall_ms)
-        rounds += 1
+    server.finish()
+    now = time.perf_counter() - t_start
 
-        now = time.perf_counter() - t_start
-        scheduler.on_batch_done(batch, now)    # releases finished KV refs
-
-        if pipelined:
-            # the placeholder each sampled request just received sits at the
-            # tail of its output_tokens; drain() patches the real id there
-            for req, _slot in inflight.sampled:
-                inflight.out_index[req.req_id] = len(req.output_tokens) - 1
-            # sampled ∩ prefill = chunks that completed their prefill this
-            # round: their prefill_end_time re-stamps at drain
-            inflight.prefill_ids = {r.req_id for r, _ in batch.prefill_chunks}
-
-        for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
-            outputs.setdefault(r.req_id, [])
-            if r.state == RequestState.FINISHED:
-                if pipelined:
-                    inflight.finished.append(r)
-                else:
-                    outputs[r.req_id] = list(r.output_tokens)
-                engine.release(r)
-
-    if inflight is not None:
-        drain_inflight()
-    engine.finalize_swaps()    # no staging entry left mid-flight at exit
-
-    samples = (np.stack(feats), np.asarray(lats)) if collect_samples and feats else None
+    samples = (
+        (np.stack(server.feats), np.asarray(server.lats))
+        if collect_samples and server.feats else None
+    )
     return ServeResult(
         report=summarize(requests, makespan=now),
         requests=requests,
-        rounds=rounds,
+        rounds=server.rounds,
         wall_s=now,
         samples=samples,
-        outputs=outputs,
+        outputs=server.outputs,
         memory=(
             summarize_memory(kv_pool, scheduler.stats) if kv_pool is not None else None
         ),

@@ -88,6 +88,10 @@ class _SwapRecord:
     tenant: str = "default"
     state: BlockState = BlockState.SWAPPING
     payload: object = None            # engine K/V arrays once the copy drains
+    # cross-replica handoff: an imported record's restored prompt blocks are
+    # content-addressed on THIS pool at swap-in, so later placement probes
+    # (``probe_prefix``) see the prefix as resident here
+    seal_on_restore: bool = False
 
 
 @dataclass
@@ -119,6 +123,8 @@ class KVPoolStats:
     swap_ins: int = 0                 # requests restored from host staging
     swapped_out_tokens: int = 0       # Σ tokens moved device -> host
     swapped_in_tokens: int = 0        # Σ tokens moved host -> device
+    handoff_exports: int = 0          # staged records exported to another pool
+    handoff_imports: int = 0          # staged records imported from another pool
 
     @property
     def hit_rate(self) -> float:
@@ -575,12 +581,100 @@ class KVBlockPool:
         self._swap.pop(req_id)
         self.stats.swap_ins += 1
         self.stats.swapped_in_tokens += rec.tokens
+        if rec.seal_on_restore:
+            # imported handoff: content-address the restored prompt blocks so
+            # this pool's prefix index reflects what is now resident here —
+            # placement locality probes rely on it.  (No payload marker is
+            # stored: engine-side prefix matches require one, so a restore
+            # can never silently alias an imported block.)
+            self._seal(req_id)
         return got, rec.payload
 
     def drop_swap(self, req_id: int) -> None:
         """Discard a staging record without restoring (finished/cancelled
         victim, or a caller falling back to recompute).  Idempotent."""
         self._swap.pop(req_id, None)
+
+    # -- cross-replica KV handoff (disaggregated prefill/decode pools) ---------
+    def export_swap(self, req_id: int) -> Tuple[_SwapRecord, "_Registration"]:
+        """Detach a host-staged record from this pool for another pool to
+        ``import_swap``: the disaggregated handoff path.  The record must be
+        SWAPPED_OUT (payload host-resident — an in-flight gather can't leave
+        the machine) and the request's registration leaves with it, so this
+        pool retains no trace of the request."""
+        rec = self._swap.pop(req_id, None)
+        assert rec is not None, f"export_swap of unswapped req {req_id}"
+        assert rec.state == BlockState.SWAPPED_OUT, (
+            f"req {req_id} export while swap in flight ({rec.state})"
+        )
+        assert not self.tables.get(req_id), (
+            f"req {req_id} exported while holding a live table"
+        )
+        reg = self._reg.pop(req_id, None)
+        self.stats.handoff_exports += 1
+        return rec, reg
+
+    def import_swap(self, req_id: int, rec: _SwapRecord,
+                    reg: Optional["_Registration"] = None) -> None:
+        """Adopt a record exported from another pool's ``export_swap``: it
+        lands in this pool's staging store exactly as a local swap-out would
+        have, so the ordinary ``swap_in``/restore path resumes the request
+        decode-only — zero re-prefilled tokens.  The source registration
+        (tenant + prompt block hashes) carries over so quota charging and
+        prefix sealing work on this side of the link."""
+        assert req_id not in self._swap, f"req {req_id} already staged here"
+        assert not self.tables.get(req_id), (
+            f"req {req_id} imported over a live table"
+        )
+        assert rec.state == BlockState.SWAPPED_OUT, (
+            f"req {req_id} imported while swap in flight ({rec.state})"
+        )
+        if reg is not None:
+            fresh = _Registration(
+                tenant=reg.tenant, prompt_len=reg.prompt_len,
+                block_hashes=list(reg.block_hashes),
+            )
+            self._reg[req_id] = fresh
+        rec.seal_on_restore = self.cfg.enable_prefix_cache
+        self._swap[req_id] = rec
+        self.stats.handoff_imports += 1
+
+    def probe_prefix(self, prompt_tokens) -> int:
+        """Non-acquiring placement probe: how many leading prompt tokens are
+        content-addressed on THIS pool right now (cached or still referenced).
+        Unlike ``match_prefix`` nothing is refcounted, charged, or moved in
+        the LRU — routers call this per candidate replica to score KV
+        locality before deciding where a request's decode should land."""
+        if not self.cfg.enable_prefix_cache or prompt_tokens is None:
+            return 0
+        matched = 0
+        for h in self._chain_hashes(prompt_tokens, self.cfg.block_size):
+            if h not in self._cache_index:
+                break
+            matched += 1
+        return matched * self.cfg.block_size
+
+    def resident_tokens(self, req_id: int) -> int:
+        """Tokens of this request's context that are already materialized on
+        (or one restore round away from) this pool: blocks it holds, a
+        host-staged swap record, or — for a cold request — its longest
+        indexed prompt prefix.  The scheduler's cache-aware aging credit
+        scores queue candidates with this."""
+        held = self.lens.get(req_id, 0)
+        if held:
+            return held
+        rec = self._swap.get(req_id)
+        if rec is not None:
+            return rec.tokens
+        reg = self._reg.get(req_id)
+        if reg is None or not reg.block_hashes:
+            return 0
+        matched = 0
+        for h in reg.block_hashes:
+            if h not in self._cache_index:
+                break
+            matched += 1
+        return matched * self.cfg.block_size
 
     # -- accounting (LPRS features) --------------------------------------------
     @property

@@ -26,6 +26,7 @@ from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.costmodel import CostModel, CostModelConfig
 from repro.engine.metrics import FairnessReport, summarize, summarize_by_tenant
+from repro.tenancy import make_shared_vtc
 
 
 @dataclass
@@ -74,6 +75,11 @@ class RouterConfig:
     straggler_window: float = 3.0      # seconds of history for throughput
     scheduler: SchedulerConfig = field(default_factory=SchedulerConfig)
     cost: CostModelConfig = field(default_factory=CostModelConfig)
+    # one VirtualTokenCounter for the whole fleet: every replica's fair queue
+    # sees each tenant's AGGREGATE service, so a tenant cannot launder load by
+    # fanning requests across replicas.  Off => per-replica counters (the
+    # pre-disaggregation behavior: each replica only sees its local slice).
+    shared_vtc: bool = True
 
 
 class Router:
@@ -85,6 +91,11 @@ class Router:
         self.completed: Dict[int, Request] = {}
         self.clock = 0.0
         self.events: List[str] = []
+        self._shared_vtc = (
+            make_shared_vtc(cfg.scheduler.fairness)
+            if cfg.shared_vtc and cfg.scheduler.fairness is not None
+            else None
+        )
         for _ in range(n_replicas):
             self.add_replica()
 
@@ -92,7 +103,9 @@ class Router:
     def add_replica(self, speed: float = 1.0) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        sched = ChunkedPrefillScheduler(self.cfg.scheduler)
+        sched = ChunkedPrefillScheduler(
+            self.cfg.scheduler, shared_vtc=self._shared_vtc
+        )
         sim = ReplicaClock(sched, CostModel(self.cfg.cost), speed=speed)
         self.replicas[rid] = ReplicaState(
             rid=rid, scheduler=sched, sim=sim, last_heartbeat=self.clock,
@@ -193,7 +206,16 @@ class Router:
     def tenant_service(self) -> Dict[str, float]:
         """Actual tokens executed per tenant, summed across ALL replicas ever
         (dead ones included: their executed tokens were real service, even if
-        the prefill progress itself was lost and replayed elsewhere)."""
+        the prefill progress itself was lost and replayed elsewhere).
+
+        With a shared VTC every replica charges one counter, so it is read
+        ONCE — summing each replica's view of it would multiply the total by
+        the replica count."""
+        if self._shared_vtc is not None:
+            return {
+                t: float(self._shared_vtc.actual_tokens(t))
+                for t in self._shared_vtc.tenants()
+            }
         out: Dict[str, float] = {}
         for st in self.replicas.values():
             fairness = st.scheduler.fairness

@@ -1,8 +1,12 @@
-"""Pallas TPU kernels: KV page swap gather/scatter (swap-out preemption).
+"""Pallas TPU kernels: KV page swap gather/scatter (KV migration).
 
-Swap-out preemption migrates a victim's KV pages between device HBM and a
-host-side staging buffer instead of discarding them for recompute.  The
-device half of that move is pure data movement over the paged layout:
+Two subsystems move KV pages between device HBM and a host-side staging
+buffer through these kernels: swap-out preemption (stage a victim's pages
+instead of discarding them for recompute) and disaggregated prefill/decode
+serving (export a finished prefill's KV from a prefill-pool replica, through
+the host handoff store, into a decode-pool replica — gather on the source
+device, scatter on the destination).  Either way the device half of the move
+is pure data movement over the paged layout:
 
 * ``swap_gather_pages`` — collect a victim's scattered physical pages into
   ONE contiguous staging tensor ``(L, n_pages, page_size, Hkv, hd)``; the

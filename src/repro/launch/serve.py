@@ -51,6 +51,73 @@ def profile_and_train_predictor(
     return pred
 
 
+def run_disagg(args):
+    """--disagg: build a prefill pool + decode pool fleet and serve the same
+    workload through the cross-replica KV handoff path."""
+    from repro.disagg import (
+        DisaggConfig, HandoffCostConfig, build_disagg, serve_disagg,
+    )
+
+    model_cfg = get_config(args.arch) if args.full else tiny_config(args.arch)
+    router = build_disagg(
+        model_cfg,
+        cfg=DisaggConfig(
+            n_prefill=args.n_prefill,
+            n_decode=args.n_decode,
+            min_handoff_tokens=args.min_handoff_tokens,
+            cost=HandoffCostConfig() if args.handoff_cost else None,
+        ),
+        engine_cfg=EngineConfig(
+            n_slots=16, max_context=512, use_pallas=args.pallas,
+            paged_kv=not args.dense_kv, pipelined=not args.sync_engine,
+            pages_per_tile=args.pages_per_tile,
+            preemption_mode=args.preemption_mode,
+        ),
+        sched_cfg=SchedulerConfig(
+            policy=args.policy, alpha=args.alpha, beta=args.beta,
+            token_budget=args.token_budget, max_seqs=16,
+            apc=APCConfig(c_max=4, l_min=16) if args.apc else None,
+        ),
+        n_blocks=args.kv_blocks,
+        prefix_cache=args.prefix_cache,
+    )
+    reqs = sharegpt_like(WorkloadSpec(
+        n_requests=args.n_requests, inter_arrival_s=args.interval,
+        max_context=256, max_new_tokens=48, seed=1,
+    ))
+    attach_prompt_tokens(reqs, model_cfg.vocab_size, seed=1)
+    res = serve_disagg(reqs, router)
+    router.check_invariants()
+
+    row = res.report.row()
+    print(f"\n=== {args.arch} | DISAGG {args.n_prefill}P+{args.n_decode}D "
+          f"policy={args.policy} kv={'dense' if args.dense_kv else 'paged'} "
+          f"loop={'sync' if args.sync_engine else 'pipelined'} "
+          f"cost={'model' if args.handoff_cost else 'always'} ===")
+    print(f"finished {res.report.n_finished}/{res.report.n_total} "
+          f"in {res.wall_s:.2f}s  ({res.rounds} rounds over "
+          f"{len(router.replicas)} replicas)")
+    print(f"  handoffs={res.handoffs} colocated={res.colocated} "
+          f"dropped={res.dropped_handoffs} "
+          f"moved={res.bytes_moved / 2**20:.1f} MiB")
+    decode_prefill_tokens = sum(
+        rs.sched.stats.scheduled_prefill_tokens for rs in router.decode)
+    print(f"  decode-pool prefill tokens scheduled: {decode_prefill_tokens} "
+          f"(handoffs resume decode-only)")
+    for k, v in row.items():
+        print(f"  {k:16s} {v*1e3 if 'e2e' in k or 'ttft' in k or 'prefill' in k or 'tpot' in k else v:10.2f}"
+              + (" ms" if any(t in k for t in ("e2e", "ttft", "prefill", "tpot")) else ""))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({
+                "report": row, "rounds": res.rounds, "wall_s": res.wall_s,
+                "handoffs": res.handoffs, "colocated": res.colocated,
+                "dropped_handoffs": res.dropped_handoffs,
+                "bytes_moved": res.bytes_moved,
+                "decode_prefill_tokens": decode_prefill_tokens,
+            }, f)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen1.5-0.5b")
@@ -89,9 +156,26 @@ def main(argv=None):
                          "prompt reuse; hits skip the matched prefill compute)")
     ap.add_argument("--kv-blocks", type=int, default=2048,
                     help="KV pool size in blocks")
+    ap.add_argument("--disagg", action="store_true",
+                    help="disaggregated serving: separate prefill and decode "
+                         "replica pools with cross-replica KV handoff "
+                         "(greedy outputs are identical to single-engine)")
+    ap.add_argument("--n-prefill", type=int, default=1,
+                    help="prefill-pool replicas (with --disagg)")
+    ap.add_argument("--n-decode", type=int, default=1,
+                    help="decode-pool replicas (with --disagg)")
+    ap.add_argument("--min-handoff-tokens", type=int, default=0,
+                    help="prompts with fewer resident KV tokens than this "
+                         "never migrate (with --disagg)")
+    ap.add_argument("--handoff-cost", action="store_true",
+                    help="price each handoff against colocated contention "
+                         "instead of always migrating (with --disagg)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
+
+    if args.disagg:
+        return run_disagg(args)
 
     model_cfg = get_config(args.arch) if args.full else tiny_config(args.arch)
     engine = JAXEngine(model_cfg, EngineConfig(

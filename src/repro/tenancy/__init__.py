@@ -36,10 +36,21 @@ class FairnessState:
                               completed prefills, track decoding tenants
     """
 
-    def __init__(self, cfg: FairnessConfig, policy_factory: Callable[[], PrefillQueue]):
+    def __init__(
+        self,
+        cfg: FairnessConfig,
+        policy_factory: Callable[[], PrefillQueue],
+        *,
+        vtc: Optional[VirtualTokenCounter] = None,
+    ):
         self.cfg = cfg
         self.registry = TenantRegistry(cfg.tenants, auto_register=cfg.auto_register)
-        self.vtc = VirtualTokenCounter(
+        # an injected counter is SHARED across schedulers (multi-replica
+        # routers): every replica charges and reads the same per-tenant
+        # virtual service, so a heavy tenant cannot launder load by fanning
+        # requests across replicas — each replica's fair queue sees the
+        # tenant's aggregate service, not its local slice
+        self.vtc = vtc if vtc is not None else VirtualTokenCounter(
             self.registry,
             prefill_weight=cfg.prefill_charge_weight,
             decode_weight=cfg.decode_charge_weight,
@@ -97,6 +108,18 @@ class FairnessState:
         self.queue.retire(req)
         self._decoding.setdefault(req.tenant, set()).add(req.req_id)
 
+    def forget(self, req: Request) -> None:
+        """The request left this scheduler outside the normal finish path — a
+        value-dependent stop applied at drain, or a cross-replica handoff
+        export.  Drop every piece of activity bookkeeping it holds here:
+        queue ownership (the tenant stops counting as prefill-active) and
+        decode-active membership.  Service already charged stays charged —
+        tokens were really executed."""
+        self.queue.retire(req)
+        ids = self._decoding.get(req.tenant)
+        if ids is not None:
+            ids.discard(req.req_id)
+
     def on_round(self, now: float) -> None:
         self.queue.set_now(now)
 
@@ -139,6 +162,18 @@ class FairnessState:
         return {t: self.vtc.virtual_service(t) for t in self.vtc.tenants()}
 
 
+def make_shared_vtc(cfg: FairnessConfig) -> VirtualTokenCounter:
+    """One VirtualTokenCounter for a whole replica fleet: pass it as every
+    scheduler's ``shared_vtc`` so per-tenant service aggregates across
+    replicas (anti-laundering — see ``FairnessState``)."""
+    registry = TenantRegistry(cfg.tenants, auto_register=cfg.auto_register)
+    return VirtualTokenCounter(
+        registry,
+        prefill_weight=cfg.prefill_charge_weight,
+        decode_weight=cfg.decode_charge_weight,
+    )
+
+
 __all__ = [
     "AdmissionController",
     "AdmissionDecision",
@@ -151,4 +186,5 @@ __all__ = [
     "TenantSpec",
     "TokenBucket",
     "VirtualTokenCounter",
+    "make_shared_vtc",
 ]

@@ -1,0 +1,369 @@
+"""Disaggregated prefill/decode pools with cross-replica KV handoff.
+
+The acceptance bar mirrors the swap-preemption suite: GREEDY OUTPUT
+BIT-IDENTITY.  A 1-prefill + 1-decode fleet — every request's KV exported at
+prefill completion through the host-side handoff store and resumed
+decode-only on the other replica, with real KV-pressure preemptions racing
+the handoffs — must produce exactly the tokens of the same workload on a
+single unconstrained engine, in both KV layouts.  On top of that, the
+property invariants: every live request's KV accounted in exactly one of
+{source pool, handoff store, destination pool}; shared-VTC service balances
+to tokens actually executed fleet-wide; a request killed mid-handoff (late
+stop while its gather is in flight) leaks nothing anywhere.
+"""
+import pytest
+
+from repro.configs import tiny_config
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.disagg import (
+    DisaggConfig,
+    HandoffCostConfig,
+    HandoffCostModel,
+    build_disagg,
+    serve_disagg,
+)
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+from repro.engine.workload import shared_prefix
+
+
+def _two_wave(seed=5, n=12, new_tokens=10):
+    """Same deterministic two-wave pressure generator as the swap suite:
+    concurrency forces KV preemption on a small pool, with round structure
+    independent of wall-clock timing so output comparisons are exact."""
+    reqs = shared_prefix(n_requests=n, n_prefixes=2, prefix_len=48,
+                         suffix_range=(8, 16), max_new_tokens=new_tokens,
+                         inter_arrival_s=0.0, vocab_size=512, seed=seed)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.0 if i < n // 2 else 60.0
+    return reqs
+
+
+def _serve_single(reqs, *, paged=True, pipelined=True, n_blocks=400):
+    """Unconstrained single-engine reference (same weights: same seed)."""
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(n_slots=6, max_context=128,
+                                      paged_kv=paged, pipelined=pipelined,
+                                      seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=n_blocks, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True))
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6)
+    )
+    res = serve(reqs, sched, eng, kv_pool=pool)
+    pool.check_invariants()
+    return res
+
+
+def _build_pressured(*, paged=True, pipelined=True, n_blocks=11,
+                     n_prefill=1, n_decode=1, mode="swap", fairness=None,
+                     cost=None, min_handoff_tokens=0):
+    cfg = tiny_config("qwen1.5-0.5b")
+    return build_disagg(
+        cfg,
+        cfg=DisaggConfig(n_prefill=n_prefill, n_decode=n_decode,
+                         min_handoff_tokens=min_handoff_tokens, cost=cost),
+        engine_cfg=EngineConfig(n_slots=6, max_context=128, paged_kv=paged,
+                                pipelined=pipelined, preemption_mode=mode,
+                                seed=3),
+        sched_cfg=SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6,
+                                  fairness=fairness),
+        n_blocks=n_blocks, block_size=16,
+    )
+
+
+def _decode_prefill_tokens(router):
+    return sum(rs.sched.stats.scheduled_prefill_tokens for rs in router.decode)
+
+
+def _fleet_preemptions(router):
+    return sum(rs.sched.stats.preemptions for rs in router.replicas)
+
+
+# ---------------------------------------------------------------------------
+# greedy parity: disaggregated vs single engine, handoffs racing preemption
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("paged", [True, False], ids=["paged", "dense"])
+def test_disagg_outputs_identical_to_single_engine(paged):
+    # decodes long enough to grow past block boundaries on a 9-block pool:
+    # preemption fires on BOTH replicas, racing the in-flight handoffs
+    reqs_d = _two_wave(new_tokens=24)
+    router = _build_pressured(paged=paged, n_blocks=9)
+    res_d = serve_disagg(reqs_d, router)
+    reqs_r = _two_wave(new_tokens=24)
+    res_r = _serve_single(reqs_r, paged=paged)
+
+    assert res_d.report.n_finished == len(reqs_d)
+    assert res_r.report.n_finished == len(reqs_r)
+    # every request crossed the link exactly once, pressure actually bit on
+    # the small pools (handoffs raced live preemptions), and the decode pool
+    # never re-prefilled a single token
+    assert res_d.handoffs == len(reqs_d) and res_d.colocated == 0
+    assert _fleet_preemptions(router) > 0
+    assert _decode_prefill_tokens(router) == 0
+    assert any(t != 0 for out in res_d.outputs.values() for t in out)
+    # req_ids are globally assigned: compare by workload POSITION
+    for a, b in zip(reqs_d, reqs_r):
+        assert res_d.outputs[a.req_id] == res_r.outputs[b.req_id]
+    for r in reqs_d:
+        assert r.handoffs == 1
+    router.check_invariants()
+
+
+def test_disagg_sync_engine_matches_pipelined():
+    """The handoff path also runs under the synchronous round loop (the
+    gather finalizes through explicit ``finalize_swaps`` steps instead of
+    riding an in-flight drain)."""
+    reqs_p = _two_wave()
+    res_p = serve_disagg(reqs_p, _build_pressured(pipelined=True))
+    reqs_s = _two_wave()
+    router_s = _build_pressured(pipelined=False)
+    res_s = serve_disagg(reqs_s, router_s)
+    assert res_s.handoffs == len(reqs_s)
+    assert _decode_prefill_tokens(router_s) == 0
+    for a, b in zip(reqs_p, reqs_s):
+        assert res_p.outputs[a.req_id] == res_s.outputs[b.req_id]
+
+
+def test_cost_model_colocates_everything_when_link_is_expensive():
+    """With a prohibitively priced link every completion stays colocated:
+    decode runs to completion on the prefill replica, nothing ever enters
+    the store, outputs still match the reference."""
+    reqs = _two_wave()
+    router = _build_pressured(
+        n_blocks=64,
+        cost=HandoffCostConfig(link_fixed_ms=1e9, contention_ms_per_token=0.0),
+    )
+    res = serve_disagg(reqs, router)
+    reqs_r = _two_wave()
+    res_r = _serve_single(reqs_r)
+    assert res.handoffs == 0
+    assert res.colocated == len(reqs)
+    assert res.report.n_finished == len(reqs)
+    for a, b in zip(reqs, reqs_r):
+        assert res.outputs[a.req_id] == res_r.outputs[b.req_id]
+    router.check_invariants()
+
+
+def test_cost_model_decision_boundaries():
+    m = HandoffCostModel(HandoffCostConfig(), min_handoff_tokens=32)
+    # under the floor: never moves, no matter how long the decode
+    assert not m.should_handoff(16, 100_000, 4)
+    # transfer dwarfs the contention of one remaining token
+    assert not m.should_handoff(64, 1, 1 << 20)
+    # long decode amortizes the transfer
+    assert m.should_handoff(64, 10_000, 4)
+
+
+# ---------------------------------------------------------------------------
+# property: every live request's KV lives in exactly one place
+# ---------------------------------------------------------------------------
+
+
+def test_kv_accounted_in_exactly_one_location_throughout():
+    """Drive the fleet sweep-by-sweep (the serve_disagg loop, instrumented):
+    after every sweep each unfinished request's KV is accounted by AT MOST
+    one location — a decoding request by exactly one — and at quiesce the
+    store is empty and every pool's accounting balances."""
+    import time as _time
+
+    reqs = _two_wave(new_tokens=24)
+    router = _build_pressured(n_blocks=9)
+    pending = sorted(reqs, key=lambda r: r.arrival_time)
+    t_start = _time.perf_counter()
+    for rs in router.replicas:
+        rs.start(t_start)
+    next_i = 0
+    checks = 0
+    from repro.engine.engine import compress_idle_gap
+
+    for _ in range(200_000):
+        now = _time.perf_counter() - t_start
+        while next_i < len(pending) and pending[next_i].arrival_time <= now:
+            router.submit(pending[next_i])
+            next_i += 1
+        statuses = [rs.step(now) for rs in router.replicas]
+        moved = router.pump()
+        for r in pending[:next_i]:
+            if r.state == RequestState.FINISHED:
+                continue
+            n = router.kv_locations(r.req_id)
+            assert n <= 1, f"req {r.req_id} KV in {n} places"
+            if r.state == RequestState.DECODING or r.swapped:
+                assert n == 1, f"req {r.req_id} ({r.state}) KV nowhere"
+                checks += 1
+        progress = moved > 0 or any(
+            s in ("round", "drained", "finalized") for s in statuses)
+        if (not progress and not router._pending
+                and not any(rs.busy() for rs in router.replicas)):
+            if next_i >= len(pending):
+                break
+            compress_idle_gap(pending, next_i, now)
+    for rs in router.replicas:
+        rs.finish()
+    router.pump()
+
+    assert checks > 0
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert len(router.store) == 0
+    for r in reqs:
+        assert router.kv_locations(r.req_id) == 0
+    router.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# shared VTC: per-tenant service balances fleet-wide across the handoff
+# ---------------------------------------------------------------------------
+
+
+def test_shared_vtc_balances_across_handoff():
+    from repro.tenancy import FairnessConfig, TenantSpec
+
+    fairness = FairnessConfig(tenants=(
+        TenantSpec(name="a", weight=1.0), TenantSpec(name="b", weight=1.0),
+    ))
+    reqs = _two_wave()
+    for i, r in enumerate(reqs):
+        r.tenant = "a" if i % 2 == 0 else "b"
+    router = _build_pressured(fairness=fairness)
+    res = serve_disagg(reqs, router)
+    assert res.report.n_finished == len(reqs)
+    assert res.handoffs == len(reqs)
+
+    # one VirtualTokenCounter spans the whole fleet (anti-laundering): every
+    # scheduler charges the same object
+    vtcs = {id(rs.sched.fairness.vtc) for rs in router.replicas}
+    assert len(vtcs) == 1
+    vtc = router.replicas[0].sched.fairness.vtc
+
+    # the balance: tokens charged == tokens executed fleet-wide, plus the
+    # first output token riding each prefill-completion round.  A handoff
+    # charges its prefill on the source replica and its decode on the
+    # destination, both into the shared counter — never twice.
+    executed = sum(
+        rs.sched.stats.scheduled_prefill_tokens
+        + rs.sched.stats.scheduled_decode_tokens
+        for rs in router.replicas
+    )
+    first_tokens = sum(1 for r in reqs if r.prefill_end_time is not None)
+    charged = sum(vtc.actual_tokens(t) for t in vtc.tenants())
+    assert charged == executed + first_tokens
+    router.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# killed mid-handoff: a late stop racing the gather leaks nothing
+# ---------------------------------------------------------------------------
+
+
+def test_killed_mid_handoff_leaks_nothing():
+    """A stop token equal to a request's FIRST output id kills it at the
+    source drain — exactly the moment its export gather lands, while it sits
+    in the router's pending-handoff list.  The staging record must be
+    discarded (never delivered), every pool must balance, and all other
+    requests' outputs must match the no-stop reference truncated at their
+    own first stop occurrence."""
+    reqs_ref = _two_wave()
+    res_ref = _serve_single(reqs_ref)
+    stop = res_ref.outputs[reqs_ref[0].req_id][0]
+
+    reqs = _two_wave()
+    for r in reqs:
+        r.stop_token = stop
+    router = _build_pressured()
+    res = serve_disagg(reqs, router)
+
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    # request 0 (at least) died with its gather in flight
+    assert res.dropped_handoffs >= 1
+    assert reqs[0].stopped and len(res.outputs[reqs[0].req_id]) == 1
+    # the fleet-wide balance: every prefill completion either delivered,
+    # dropped, or stayed colocated
+    stats = router.store.stats
+    assert stats.colocated == 0
+    assert stats.delivered + res.dropped_handoffs == len(reqs)
+    # outputs: reference truncated at each request's own first stop
+    for a, b in zip(reqs, reqs_ref):
+        ref = res_ref.outputs[b.req_id]
+        want = ref[:ref.index(stop) + 1] if stop in ref else ref
+        assert res.outputs[a.req_id] == want
+        assert a.stopped == (stop in ref)
+    assert len(router.store) == 0
+    for r in reqs:
+        assert router.kv_locations(r.req_id) == 0
+    router.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# placement: KV locality dominates load
+# ---------------------------------------------------------------------------
+
+
+def test_placement_prefers_replica_with_resident_prefix():
+    """After one request's handoff lands (and its blocks are released into
+    the destination's prefix cache), a second request sharing its prompt
+    must place onto that replica even when it is the more loaded one; an
+    unrelated request follows load to the other replica."""
+    reqs = shared_prefix(n_requests=1, n_prefixes=1, prefix_len=48,
+                         suffix_range=(8, 16), max_new_tokens=6,
+                         inter_arrival_s=0.0, vocab_size=512, seed=9)
+    router = _build_pressured(n_blocks=64, n_decode=2)
+    res = serve_disagg(reqs, router)
+    assert res.handoffs == 1
+    # index tie-break sent the only handoff to decode replica 0, whose pool
+    # now content-addresses the prompt's full blocks
+    imports = [rs.kv_pool.stats.handoff_imports for rs in router.decode]
+    assert imports == [1, 0]
+    assert router.decode[0].kv_pool.probe_prefix(reqs[0].prompt_tokens) >= 48
+
+    # load decode0 with queued work: pure load placement would now pick
+    # decode1, locality must override it
+    dummy = Request(prompt_len=64, max_new_tokens=32,
+                    prompt_tokens=list(range(100, 164)))
+    router.decode[0].submit(dummy)
+    warm = Request(prompt_len=reqs[0].prompt_len, max_new_tokens=8,
+                   prompt_tokens=list(reqs[0].prompt_tokens))
+    assert router._place(warm) is router.decode[0]
+    cold = Request(prompt_len=64, max_new_tokens=8,
+                   prompt_tokens=list(range(300, 364)))
+    assert router._place(cold) is router.decode[1]
+
+
+# ---------------------------------------------------------------------------
+# cache-aware aging credit
+# ---------------------------------------------------------------------------
+
+
+def test_cache_credit_orders_resident_kv_first():
+    """Two equal-priority candidates: with ``cache_credit`` on, the one
+    whose KV is already materialized on the pool ranks first; with it off,
+    submission order wins."""
+
+    class _Pool:
+        def __init__(self):
+            self.resident = {}
+
+        def resident_tokens(self, req_id):
+            return self.resident.get(req_id, 0)
+
+    pool = _Pool()
+    cold = Request(prompt_len=64, max_new_tokens=4, arrival_time=0.0)
+    warm = Request(prompt_len=64, max_new_tokens=4, arrival_time=0.0)
+    pool.resident[warm.req_id] = 64
+
+    def order(credit):
+        sched = ChunkedPrefillScheduler(
+            SchedulerConfig(policy="aging", alpha=1.0, beta=-0.01,
+                            cache_credit=credit),
+            kv_pool=pool, kv_booking=False,
+        )
+        sched.submit(cold)
+        sched.submit(warm)
+        return sched.queue.pop()
+
+    assert order(credit=0.5) is warm
+    assert order(credit=0.0) is cold

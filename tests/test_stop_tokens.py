@@ -1,0 +1,112 @@
+"""Value-dependent stop tokens (EOS) in both serve loops.
+
+The pipelined engine learns token VALUES one round late, so a stop is only
+observable at drain time — by which point the scheduler may already have
+booked the request into the next, not-yet-dispatched round.  The contract:
+greedy outputs under a stop token are BIT-IDENTICAL between the synchronous
+and pipelined loops (both equal the no-stop reference truncated at the first
+stop occurrence), the over-scheduled round's bookings are refunded, and the
+pools balance — including under KV pressure with swap preemption racing the
+late stops.
+"""
+from repro.configs import tiny_config
+from repro.core.request import RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+from repro.engine.workload import shared_prefix
+
+
+def _two_wave(seed=5, n=12, new_tokens=10):
+    reqs = shared_prefix(n_requests=n, n_prefixes=2, prefix_len=48,
+                         suffix_range=(8, 16), max_new_tokens=new_tokens,
+                         inter_arrival_s=0.0, vocab_size=512, seed=seed)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.0 if i < n // 2 else 60.0
+    return reqs
+
+
+def _serve(reqs, *, pipelined, n_blocks=11, stop=None):
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(n_slots=6, max_context=128,
+                                      paged_kv=True, pipelined=pipelined,
+                                      preemption_mode="swap", seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=n_blocks, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True))
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6)
+    )
+    if stop is not None:
+        for r in reqs:
+            r.stop_token = stop
+    res = serve(reqs, sched, eng, kv_pool=pool)
+    pool.check_invariants()
+    assert not pool.swapped_requests()
+    return res, sched
+
+
+def test_stop_token_sync_and_pipelined_identical():
+    """Harvest a mid-stream token from the no-stop reference, then re-run
+    with it as the EOS: both loop modes must truncate every request at its
+    own first occurrence, produce identical outputs, and refund whatever the
+    pipelined loop had over-scheduled past the stop."""
+    reqs_ref = _two_wave()
+    res_ref, _ = _serve(reqs_ref, pipelined=True, n_blocks=400)
+    ref_out = {i: res_ref.outputs[r.req_id] for i, r in enumerate(reqs_ref)}
+    stop = ref_out[0][4]          # position-0 request's 5th token
+
+    reqs_p = _two_wave()
+    res_p, sched_p = _serve(reqs_p, pipelined=True, stop=stop)
+    reqs_s = _two_wave()
+    res_s, sched_s = _serve(reqs_s, pipelined=False, stop=stop)
+
+    assert all(r.state == RequestState.FINISHED for r in reqs_p + reqs_s)
+    for i, (a, b) in enumerate(zip(reqs_p, reqs_s)):
+        ref = ref_out[i]
+        first = ref.index(stop) if stop in ref else None
+        want = ref if first is None else ref[:first + 1]
+        assert res_p.outputs[a.req_id] == want
+        assert res_s.outputs[b.req_id] == want
+        # a stop landing exactly on the length-cap token is a length finish
+        # in both modes (FINISHED is handled before the stop check)
+        expect_stopped = first is not None and first < len(ref) - 1
+        assert a.stopped == b.stopped == expect_stopped
+    # the stop actually exercised the late path in both modes
+    assert sched_p.stats.late_stops > 0
+    assert sched_s.stats.late_stops > 0
+    assert sched_p.stats.late_stops == sched_s.stats.late_stops
+    # only the pipelined loop can over-schedule past a stop (it books round
+    # N+1 before round N's values are visible) — and when it does, the
+    # phantom bookings are refunded
+    assert sched_p.stats.refunded_decode_tokens > 0
+    assert sched_s.stats.refunded_decode_tokens == 0
+
+
+def test_stop_on_first_token_terminates_immediately():
+    """A stop equal to a request's FIRST sampled token: one output token,
+    stopped flag set, no decode rounds wasted, in both loop modes."""
+    reqs_ref = _two_wave()
+    res_ref, _ = _serve(reqs_ref, pipelined=True, n_blocks=400)
+    stop = res_ref.outputs[reqs_ref[0].req_id][0]
+
+    for pipelined in (True, False):
+        reqs = _two_wave()
+        res, sched = _serve(reqs, pipelined=pipelined, stop=stop)
+        assert reqs[0].stopped
+        assert res.outputs[reqs[0].req_id] == [stop]
+        assert reqs[0].generated == 1
+        assert sched.stats.late_stops > 0
+
+
+def test_no_stop_token_is_byte_identical_to_baseline():
+    """stop_token=None must leave the serve loops untouched: same outputs,
+    zero stop-path stats."""
+    reqs_a = _two_wave()
+    res_a, sched_a = _serve(reqs_a, pipelined=True)
+    assert sched_a.stats.late_stops == 0
+    assert sched_a.stats.refunded_decode_tokens == 0
+    assert all(not r.stopped for r in reqs_a)
+    assert all(len(res_a.outputs[r.req_id]) == r.max_new_tokens or
+               r.max_new_tokens >= len(res_a.outputs[r.req_id]) > 0
+               for r in reqs_a)
