@@ -75,13 +75,15 @@ def _workload(quick: bool, model_cfg):
 
 def run_config(name: str, *, pipelined: bool, paged: bool, quick: bool,
                use_pallas: bool = False, pages_per_tile: int = 1,
+               kv_layout: str = "split", buffering_depth: int = 1,
                reps: int = 2):
     """Best-of-``reps`` (by wall time, like bench_overhead): a shared CI box
     can stall any single run; outputs must be identical across reps anyway."""
     best = None
     for _ in range(reps):
         r = _run_once(name, pipelined=pipelined, paged=paged, quick=quick,
-                      use_pallas=use_pallas, pages_per_tile=pages_per_tile)
+                      use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+                      kv_layout=kv_layout, buffering_depth=buffering_depth)
         if best is not None:
             assert r["outputs"] == best["outputs"], f"{name}: nondeterministic"
         if best is None or r["wall_s"] < best["wall_s"]:
@@ -90,11 +92,13 @@ def run_config(name: str, *, pipelined: bool, paged: bool, quick: bool,
 
 
 def _run_once(name: str, *, pipelined: bool, paged: bool, quick: bool,
-              use_pallas: bool = False, pages_per_tile: int = 1):
+              use_pallas: bool = False, pages_per_tile: int = 1,
+              kv_layout: str = "split", buffering_depth: int = 1):
     model_cfg = tiny_config("qwen1.5-0.5b")
     eng = JAXEngine(model_cfg, EngineConfig(
         n_slots=8, max_context=256, paged_kv=paged, pipelined=pipelined,
         use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+        kv_layout=kv_layout, buffering_depth=buffering_depth,
         chunk_buckets=(1, 16, 32, 64),
     ))
     eng.warmup()      # steady-state: bubbles/walls must not include jit
@@ -124,6 +128,8 @@ def _run_once(name: str, *, pipelined: bool, paged: bool, quick: bool,
         "paged": paged,
         "use_pallas": use_pallas,
         "pages_per_tile": pages_per_tile,
+        "kv_layout": kv_layout,
+        "buffering_depth": buffering_depth,
         "finished": res.report.n_finished,
         "rounds": res.rounds,
         "wall_s": wall_s,
@@ -222,6 +228,10 @@ def main(argv=None):
     ap.add_argument("--pallas", action="store_true",
                     help="also sweep pages_per_tile through the paged Pallas "
                          "kernels (interpret mode on CPU)")
+    ap.add_argument("--sweep-buffering", action="store_true",
+                    help="also sweep {split,fused} KV layout x DMA buffering "
+                         "depth {1,2} through the pipelined paged engine "
+                         "(with --pallas: through the Pallas kernels)")
     ap.add_argument("--reps", type=int, default=2,
                     help="best-of-N runs per config (noise robustness)")
     ap.add_argument("--check-regression", action="store_true",
@@ -244,6 +254,13 @@ def main(argv=None):
                 pipelined=True, paged=True, use_pallas=True,
                 pages_per_tile=ppt,
             )
+    if args.sweep_buffering:
+        for layout in ("split", "fused"):
+            for depth in (1, 2):
+                cfg_by_name[f"pipelined/paged/{layout}/depth={depth}"] = dict(
+                    pipelined=True, paged=True, use_pallas=args.pallas,
+                    kv_layout=layout, buffering_depth=depth,
+                )
     results = [
         run_config(name, quick=args.quick, reps=args.reps, **kw)
         for name, kw in cfg_by_name.items()
@@ -274,6 +291,42 @@ def main(argv=None):
               f"({shrink:+.1%})  throughput {gain:+.1%}")
         assert identical, f"{layout}: pipelined outputs diverged from sync"
 
+    buffering = fused_layout = None
+    if args.sweep_buffering:
+        def sweep(layout, depth):
+            return by[f"pipelined/paged/{layout}/depth={depth}"]
+        # the knobs are pure data movement: greedy outputs must not budge
+        # across any (layout, depth) cell vs the plain pipelined/paged run
+        for layout in ("split", "fused"):
+            for depth in (1, 2):
+                assert sweep(layout, depth)["outputs"] == \
+                    by["pipelined/paged"]["outputs"], (
+                        f"{layout}/depth={depth}: outputs diverged")
+        buffering = {}
+        for layout in ("split", "fused"):
+            d1, d2 = sweep(layout, 1), sweep(layout, 2)
+            ratio = d2["out_tok_s"] / d1["out_tok_s"]
+            buffering[layout] = {
+                "depth1_out_tok_s": d1["out_tok_s"],
+                "depth2_out_tok_s": d2["out_tok_s"],
+                "depth2_vs_depth1": ratio,
+            }
+            print(f"  buffering {layout}: depth 1 -> 2 throughput "
+                  f"x{ratio:.3f}")
+            # wall-clock gate on full runs only (repo convention: quick runs
+            # are too short for stable ratios); interpret mode can't show a
+            # real overlap win, so depth 2 must merely not REGRESS
+            if not args.quick:
+                assert ratio >= 1.0 - REGRESSION_TOL, (
+                    f"{layout}: depth-2 throughput regressed x{ratio:.3f}")
+        fused_layout = {
+            f"depth={d}": sweep("fused", d)["out_tok_s"]
+            / sweep("split", d)["out_tok_s"]
+            for d in (1, 2)
+        }
+        for k, v in fused_layout.items():
+            print(f"  fused vs split ({k}): throughput x{v:.3f}")
+
     mode_key = "quick" if args.quick else "full"
     stripped = [{k: v for k, v in r.items() if k != "outputs"}
                 for r in results]
@@ -289,6 +342,11 @@ def main(argv=None):
             "workload": {"quick": args.quick, "seed": 12},
             "results": stripped,
         }
+        if buffering is not None:
+            # layout/depth summary ratios: the sweep's per-config rows are in
+            # "results" (and under the --check-regression gate by name)
+            data[mode_key]["buffering"] = buffering
+            data[mode_key]["fused_layout"] = fused_layout
         with open(ROOT_JSON, "w") as f:
             json.dump(data, f, indent=1)
         print(f"  wrote {os.path.normpath(ROOT_JSON)} [{mode_key}]")

@@ -274,6 +274,19 @@ class ChunkedPrefillScheduler:
         )
         self.queue.add(req)
 
+    def retract_handoff(self, req: Request) -> None:
+        """Inverse of ``submit_handoff`` BEFORE the restore ran: the request
+        died (late stop applied at the source drain) after its staged KV was
+        prefetched into this scheduler's pool.  Remove it from the queue and
+        drop the imported staging record + registration — nothing was
+        booked, bound, or fairness-charged here yet, so nothing else needs
+        unwinding."""
+        if req in self.queue:
+            self.queue.remove(req)
+        if self.kv_pool is not None:
+            self.kv_pool.drop_swap(req.req_id)
+            self.kv_pool.release(req.req_id)
+
     def export_request(self, req: Request) -> None:
         """Detach a request from this scheduler without releasing its pool
         state (cross-replica handoff: the caller owns migrating the staged

@@ -30,6 +30,8 @@ class HandoffStats:
     dropped: int = 0           # killed mid-handoff (late stop): staging discarded
     colocated: int = 0         # prefill-completions the cost model kept local
     bytes_moved: int = 0       # Σ payload bytes delivered across the link
+    prefetched: int = 0        # records adopted while the source gather was
+                               # still in flight (DisaggConfig.prefetch)
 
 
 class KVHandoffStore:

@@ -58,6 +58,14 @@ class DisaggConfig:
     # HandoffCostConfig prices transfer bytes against colocated contention
     # per request, keeping short-prompt/short-decode requests local.
     cost: Optional[HandoffCostConfig] = None
+    # Prefetch: start the decode-side import while the source gather is still
+    # draining — the record (still SWAPPING) moves source pool → store →
+    # decode pool in the SAME pump that observed the prefill completion,
+    # instead of parking in ``_pending`` until ``swap_ready``.  The decode
+    # restore stays correct because ``_try_restore`` gates on ``swap_ready``,
+    # which only flips once the source drain finalizes the (shared) record.
+    # Late stops are unwound through ``ReplicaServer.on_stopped``.
+    prefetch: bool = True
 
 
 @dataclass
@@ -104,6 +112,7 @@ class DisaggregatedRouter:
         self._pending: List[Tuple[Request, ReplicaServer]] = []
         for rs in self.prefill:
             rs.on_prefill_complete = self._maybe_handoff
+            rs.on_stopped = self._on_source_stop
 
     @property
     def replicas(self) -> List[ReplicaServer]:
@@ -139,11 +148,17 @@ class DisaggregatedRouter:
 
     # -- handoff: delivery -----------------------------------------------------
     def pump(self) -> int:
-        """Move every handoff whose source gather has drained: source pool →
-        store → chosen decode pool.  A request that died while its copy was
-        in flight (a value-dependent stop applied at the source drain — which
-        already dropped the staging record via ``on_stop``) is discarded
-        without touching any pool.  Returns handoffs delivered."""
+        """Move handoffs: source pool → store → chosen decode pool.
+
+        Without prefetch a record waits in ``_pending`` until the source
+        gather has drained (``swap_ready``); with prefetch it is exported
+        immediately (``allow_inflight``) and adopted while still SWAPPING —
+        the decode scheduler cannot restore it early because ``_try_restore``
+        gates on ``swap_ready``, and the source drain finalizes the shared
+        record in place wherever it lives.  A request that died while its
+        copy was in flight (a value-dependent stop applied at the source
+        drain — which already dropped the staging record via ``on_stop``) is
+        discarded without touching any pool.  Returns handoffs delivered."""
         moved = 0
         still: List[Tuple[Request, ReplicaServer]] = []
         for req, src in self._pending:
@@ -155,17 +170,43 @@ class DisaggregatedRouter:
                 src.kv_pool.release(req.req_id)
                 self.store.stats.dropped += 1
                 continue
-            if not src.kv_pool.swap_ready(req.req_id):
+            ready = src.kv_pool.swap_ready(req.req_id)
+            if not ready and not self.cfg.prefetch:
                 still.append((req, src))      # gather still in flight
                 continue
-            rec, reg = src.kv_pool.export_swap(req.req_id)
+            rec, reg = src.kv_pool.export_swap(
+                req.req_id, allow_inflight=not ready)
             self.store.put(req.req_id, rec, reg, src=src.name,
                            bytes_per_token=src.kv_pool.cfg.bytes_per_token)
             dst = self._place(req)
             dst.adopt_handoff(req, *self.store.take(req.req_id))
+            if not ready:
+                self.store.stats.prefetched += 1
             moved += 1
         self._pending = still
         return moved
+
+    def _on_source_stop(self, server: ReplicaServer, req: Request) -> None:
+        """A late (value-dependent) stop landed at the source drain for a
+        request whose staged KV may already have been PREFETCHED onward.
+        ``on_stop`` cleaned the source pool; this hook chases the record to
+        wherever the pump moved it.  A delivered-then-dropped record counts
+        as dropped, not delivered, so ``delivered + dropped`` still equals
+        the number of handoffs attempted."""
+        rid = req.req_id
+        if any(r.req_id == rid for r, _ in self._pending):
+            return                    # not exported yet: pump() cleans it up
+        if rid in self.store:
+            self.store.drop(rid)      # exported, not yet adopted
+            return
+        for rs in self.decode:
+            # adopted but not restored: staged record, no live block table
+            if (rs.kv_pool.swap_state(rid) is not None
+                    and not rs.kv_pool.tables.get(rid)):
+                rs.sched.retract_handoff(req)
+                self.store.stats.delivered -= 1
+                self.store.stats.dropped += 1
+                return
 
     def _place(self, req: Request) -> ReplicaServer:
         """Decode placement: longest resident shared prefix first (restoring
@@ -238,7 +279,9 @@ def build_disagg(
         rs = ReplicaServer(sched, engine, kv_pool=pool,
                            name=f"{role}{i if role == 'prefill' else i - cfg.n_prefill}")
         if warmup:
-            engine.warmup()
+            # handoff moves KV through the swap gather/scatter kernels on
+            # every replica regardless of preemption mode — prewarm them
+            engine.warmup(include_swap=True)
         replicas.append(rs)
     return DisaggregatedRouter(
         replicas[: cfg.n_prefill], replicas[cfg.n_prefill:], cfg,

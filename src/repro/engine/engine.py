@@ -61,6 +61,15 @@ class EngineConfig:
     paged_kv: bool = True             # block-table pages; False = dense slots
     kv_block_size: int = 16           # page size when the engine owns its pool
     pages_per_tile: int = 1           # pages DMA-gathered per paged-kernel tile
+    # physical page-pool layout: "split" keeps separate K and V pools;
+    # "fused" interleaves them on the head axis ([K0,V0,K1,V1,...]) so the
+    # paged kernels fetch each page's K+V with ONE DMA (half the page-table
+    # reads and issue count).  Paged-kv only.
+    kv_layout: str = "split"
+    # VMEM tile buffers per paged-kernel grid: tile t+depth-1's gather is
+    # issued before tile t's wait, so DMA overlaps the MXU dot (1 = the
+    # synchronous issue-then-wait path)
+    buffering_depth: int = 1
     pipelined: bool = True            # overlap schedule(N+1) with execute(N)
     # preemption mode: "recompute" discards a victim's KV (re-prefill from
     # scratch, the A/B default); "swap" stages it host-side and restores it
@@ -119,10 +128,12 @@ class JAXEngine:
         self._t_ready: Optional[float] = None
 
         # swap-out preemption: device->host gathers whose async host copy has
-        # not drained yet — (req_id, k_staged, v_staged); finalize_swaps()
-        # lands them in the pool's staging store (same one-round-late path as
-        # the sampled-token readback)
-        self._pending_swaps: List[Tuple[int, jax.Array, jax.Array]] = []
+        # not drained yet — (req_id, staging record, per-cache-tensor
+        # arrays); finalize_swaps() attaches the payload to the record
+        # DIRECTLY (not through the pool), so a record the disagg router
+        # prefetched into the handoff store or a destination pool still
+        # finalizes — same one-round-late path as the sampled-token readback
+        self._pending_swaps: List[Tuple[int, object, Tuple[jax.Array, ...]]] = []
 
         self.kv_pool: Optional[KVBlockPool] = kv_pool
         # the engine books blocks itself only while it owns a private pool;
@@ -146,6 +157,12 @@ class JAXEngine:
         impl = self.model.impl
         use_pallas = cfg.use_pallas
         pages_per_tile = cfg.pages_per_tile
+        assert cfg.kv_layout in ("split", "fused"), cfg.kv_layout
+        assert cfg.buffering_depth >= 1, cfg.buffering_depth
+        self._fused = cfg.paged_kv and cfg.kv_layout == "fused"
+        assert self._fused or cfg.kv_layout == "split", (
+            "kv_layout='fused' requires paged_kv=True"
+        )
 
         def _inject_last(tokens, use_last, last_token):
             """Decode lanes consume the device-resident last sampled token
@@ -169,8 +186,8 @@ class JAXEngine:
             self._n_phys = self.kv_pool.cfg.n_blocks + 1
             self._sink = self.kv_pool.cfg.n_blocks
             self.max_pages = math.ceil(S / bs) + 1
-            kv_shape = (model_cfg.n_layers, self._n_phys, bs,
-                        model_cfg.n_kv_heads, hd)
+            n_kv = model_cfg.n_kv_heads * (2 if self._fused else 1)
+            kv_shape = (model_cfg.n_layers, self._n_phys, bs, n_kv, hd)
             # device-resident block tables, refreshed with DIRTY-SLOT
             # incremental updates; _bt_host mirrors exactly what the device
             # holds, _bt_len tracks per-slot entries already uploaded
@@ -185,6 +202,8 @@ class JAXEngine:
                 logits, cache = impl.chunked_step_paged(
                     params, tokens, cache, lens, chunk_lens, block_tables,
                     use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+                    kv_layout=cfg.kv_layout,
+                    buffering_depth=cfg.buffering_depth,
                 )
                 return _fused_tail(logits, cache, lens, chunk_lens,
                                    last_token, sample_mask, rng)
@@ -205,7 +224,10 @@ class JAXEngine:
 
             donate = (2, 3, 5)     # cache, lens, last_token
 
-        self.cache = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
+        if self._fused:
+            self.cache = {"kv": jnp.zeros(kv_shape, dt)}
+        else:
+            self.cache = {"k": jnp.zeros(kv_shape, dt), "v": jnp.zeros(kv_shape, dt)}
         self.lens = jnp.zeros((B,), jnp.int32)
         self.last_token = jnp.zeros((B,), jnp.int32)   # device-resident
         self._step = jax.jit(step, donate_argnums=donate)
@@ -223,9 +245,24 @@ class JAXEngine:
         if self.cfg.paged_kv:
             self._build_state()
 
-    def warmup(self) -> None:
+    def _cache_names(self) -> Tuple[str, ...]:
+        """The cache dict's tensor keys, in swap payload order: the fused
+        layout stores ONE head-interleaved pool, split stores two."""
+        return ("kv",) if self._fused else ("k", "v")
+
+    def warmup(self, *, include_swap: Optional[bool] = None) -> None:
         """Compile every bucket shape once so profiling sees steady-state
         latencies, not jit compilation (the paper's 'cleaned' samples).
+
+        Every jitted shape the serving loop can hit under the CONFIGURED
+        ``(kv_layout, buffering_depth, pages_per_tile)`` combination is
+        covered: the step compiles per chunk bucket with those knobs baked
+        in, the dirty-row block-table scatter per power-of-two row bucket,
+        and — when this engine can swap (``preemption_mode="swap"``) or the
+        caller says it will export/import KV (``include_swap=True``, the
+        disagg handoff path, which rides the same gather/scatter kernels
+        regardless of preemption mode) — the swap kernels per page-id
+        bucket.
 
         Order matters with an EXTERNAL pool: ``bind_kv_pool`` rebuilds the
         physical page array (page ids must equal the pool's block ids),
@@ -255,29 +292,29 @@ class JAXEngine:
                     jnp.asarray(self._bt_host[idx])
                 )
             jax.block_until_ready(self.block_tables)
-        if self.cfg.preemption_mode == "swap":
+        if include_swap is None:
+            include_swap = self.cfg.preemption_mode == "swap"
+        if include_swap:
             self._prewarm_swap_shapes()
 
     def _prewarm_swap_shapes(self) -> None:
         """Compile the swap gather/scatter for every page-id bucket a swap
         can hit (paged) or the slot row copy (dense), so the first real
-        preemption doesn't pay jit compilation inside a serving round."""
+        preemption — or disagg handoff export/import — doesn't pay jit
+        compilation inside a serving round."""
+        names = self._cache_names()
         if self.cfg.paged_kv:
             buckets = sorted({_pow2_bucket(n)
                               for n in range(1, self.max_pages + 1)})
             for k in buckets:
                 ids = jnp.full((k,), self._sink, jnp.int32)   # sink-only: no-op
-                staged_k = gather_swap_pages(self.cache["k"], ids,
-                                             use_pallas=self.cfg.use_pallas)
-                staged_v = gather_swap_pages(self.cache["v"], ids,
-                                             use_pallas=self.cfg.use_pallas)
-                self.cache["k"] = scatter_swap_pages(
-                    self.cache["k"], ids, staged_k,
-                    use_pallas=self.cfg.use_pallas)
-                self.cache["v"] = scatter_swap_pages(
-                    self.cache["v"], ids, staged_v,
-                    use_pallas=self.cfg.use_pallas)
-            jax.block_until_ready(self.cache["k"])
+                for nm in names:
+                    staged = gather_swap_pages(self.cache[nm], ids,
+                                               use_pallas=self.cfg.use_pallas)
+                    self.cache[nm] = scatter_swap_pages(
+                        self.cache[nm], ids, staged,
+                        use_pallas=self.cfg.use_pallas)
+            jax.block_until_ready(self.cache[names[0]])
         else:
             k_row = np.asarray(self.cache["k"][:, 0])
             self.cache["k"] = self.cache["k"].at[:, 0].set(jnp.asarray(k_row))
@@ -359,32 +396,39 @@ class JAXEngine:
         if self.cfg.paged_kv:
             ids, _n = self._swap_page_ids(req.req_id)
             jids = jnp.asarray(ids)
-            k = gather_swap_pages(self.cache["k"], jids,
+            arrays = tuple(
+                gather_swap_pages(self.cache[nm], jids,
                                   use_pallas=self.cfg.use_pallas)
-            v = gather_swap_pages(self.cache["v"], jids,
-                                  use_pallas=self.cfg.use_pallas)
+                for nm in self._cache_names()
+            )
         else:
             # dense layout: the whole slot row (static shape — positions past
             # the stored length are never attended to after restore)
-            k = self.cache["k"][:, slot]
-            v = self.cache["v"][:, slot]
-        k.copy_to_host_async()
-        v.copy_to_host_async()
-        self._pending_swaps.append((req.req_id, k, v))
-        pool.swap_out(req.req_id)              # state: SWAPPING
+            arrays = (self.cache["k"][:, slot], self.cache["v"][:, slot])
+        for a in arrays:
+            a.copy_to_host_async()
+        # keep the RECORD, not just the id: finalize must find it wherever
+        # the disagg router's prefetch may have moved it by drain time
+        rec = pool.swap_out(req.req_id)        # state: SWAPPING
+        self._pending_swaps.append((req.req_id, rec, arrays))
         self.release(req)
 
     def finalize_swaps(self) -> None:
         """Drain pending swap-out copies: block until each staged tensor is
         host-side (the copies were dispatched before the current round's
-        step, so this wait is bounded) and mark the pool records
-        SWAPPED_OUT.  Called from ``drain`` — swap traffic retires on the
-        same one-round-late path as sampled tokens — and by the serve loop
-        when no round is in flight to piggyback on."""
+        step, so this wait is bounded) and mark the staging records
+        SWAPPED_OUT.  The payload attaches to the record object itself —
+        location-transparent: under handoff PREFETCH the record may already
+        sit in the ``KVHandoffStore`` or a destination pool's staging store
+        rather than this engine's pool.  Called from ``drain`` — swap
+        traffic retires on the same one-round-late path as sampled tokens —
+        and by the serve loop when no round is in flight to piggyback on."""
         if not self._pending_swaps:
             return
-        for req_id, k, v in self._pending_swaps:
-            self.kv_pool.finish_swap_out(req_id, (np.asarray(k), np.asarray(v)))
+        for _req_id, rec, arrays in self._pending_swaps:
+            KVBlockPool.finalize_record(
+                rec, tuple(np.asarray(a) for a in arrays)
+            )
         self._pending_swaps.clear()
 
     def has_pending_swaps(self) -> bool:
@@ -398,28 +442,30 @@ class JAXEngine:
         slot = self.slot_of.get(req.req_id)
         assert slot is not None, f"swap_in of unbound req {req.req_id}"
         assert payload is not None, f"swap_in of req {req.req_id} without payload"
-        k, v = payload
+        names = self._cache_names()
+        assert len(payload) == len(names), (
+            f"req {req.req_id}: payload arity {len(payload)} != cache layout "
+            f"{names} — swapped under a different kv_layout?"
+        )
         tokens = self.kv_pool.lens.get(req.req_id, 0)
         if self.cfg.paged_kv:
             ids, n = self._swap_page_ids(req.req_id)
-            assert n and ids.shape[0] == k.shape[1], (
+            assert n and ids.shape[0] == payload[0].shape[1], (
                 f"req {req.req_id}: restore bucket {ids.shape[0]} != staged "
-                f"{k.shape[1]}"
+                f"{payload[0].shape[1]}"
             )
             jids = jnp.asarray(ids)
-            self.cache["k"] = scatter_swap_pages(
-                self.cache["k"], jids, jnp.asarray(k),
-                use_pallas=self.cfg.use_pallas)
-            self.cache["v"] = scatter_swap_pages(
-                self.cache["v"], jids, jnp.asarray(v),
-                use_pallas=self.cfg.use_pallas)
+            for nm, a in zip(names, payload):
+                self.cache[nm] = scatter_swap_pages(
+                    self.cache[nm], jids, jnp.asarray(a),
+                    use_pallas=self.cfg.use_pallas)
             # table changed wholesale: force a full device row rewrite
             self._bt_host[slot, :] = self._sink
             self._bt_len[slot] = 0
             self._bt_dirty.add(slot)
         else:
-            self.cache["k"] = self.cache["k"].at[:, slot].set(jnp.asarray(k))
-            self.cache["v"] = self.cache["v"].at[:, slot].set(jnp.asarray(v))
+            for nm, a in zip(names, payload):
+                self.cache[nm] = self.cache[nm].at[:, slot].set(jnp.asarray(a))
         self.lens = self.lens.at[slot].set(tokens)
 
     # -- prefix-cache payloads -------------------------------------------------
@@ -669,6 +715,7 @@ class ReplicaServer:
         kv_pool: Optional[KVBlockPool] = None,
         collect_samples: bool = False,
         on_prefill_complete=None,
+        on_stopped=None,
         name: str = "replica",
     ):
         self.sched = scheduler
@@ -679,6 +726,10 @@ class ReplicaServer:
         # prefill completed (state DECODING, first token bookkept) — the
         # disaggregated router decides there whether to export the KV
         self.on_prefill_complete = on_prefill_complete
+        # multi-replica hook: called after a value-dependent stop is applied
+        # (scheduler.on_stop already ran) — the router chases a prefetched
+        # handoff record to whatever pool it moved on to and unwinds it there
+        self.on_stopped = on_stopped
         self.name = name
         self.pipelined = engine.cfg.pipelined
         self.inflight: Optional[InflightRound] = None
@@ -871,6 +922,8 @@ class ReplicaServer:
                     r.finish_stopped(now2)
                     self.outputs[r.req_id] = list(r.output_tokens)
                     sched.on_stop(r)
+                    if self.on_stopped is not None:
+                        self.on_stopped(self, r)
 
         if self.on_prefill_complete is not None:
             for r, _c in batch.prefill_chunks:
@@ -914,6 +967,8 @@ class ReplicaServer:
             req.finish_stopped(now_v)
             self.outputs[req.req_id] = list(req.output_tokens)
             self.sched.on_stop(req, pending_batch)
+            if self.on_stopped is not None:
+                self.on_stopped(self, req)
 
     def finish(self) -> None:
         """End-of-serve cleanup: drain the last round and land any pending

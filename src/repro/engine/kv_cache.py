@@ -513,6 +513,16 @@ class KVBlockPool:
         record restorable (``SWAPPED_OUT``)."""
         rec = self._swap.get(req_id)
         assert rec is not None, f"finish_swap_out of unswapped req {req_id}"
+        self.finalize_record(rec, payload)
+
+    @staticmethod
+    def finalize_record(rec: _SwapRecord, payload: object = None) -> None:
+        """Finalize a staging record DIRECTLY, wherever it currently lives.
+        Under handoff PREFETCH a SWAPPING record may already have been
+        exported into the ``KVHandoffStore`` — or imported by a destination
+        pool — before its gather drains; the source engine holds the record
+        object and finalizes it here, and the destination's ``swap_ready``
+        gate turns true the moment the payload is host-side."""
         if payload is not None:
             rec.payload = payload
         rec.state = BlockState.SWAPPED_OUT
@@ -596,21 +606,27 @@ class KVBlockPool:
         self._swap.pop(req_id, None)
 
     # -- cross-replica KV handoff (disaggregated prefill/decode pools) ---------
-    def export_swap(self, req_id: int) -> Tuple[_SwapRecord, "_Registration"]:
+    def export_swap(self, req_id: int, *, allow_inflight: bool = False
+                    ) -> Tuple[_SwapRecord, "_Registration"]:
         """Detach a host-staged record from this pool for another pool to
-        ``import_swap``: the disaggregated handoff path.  The record must be
-        SWAPPED_OUT (payload host-resident — an in-flight gather can't leave
-        the machine) and the request's registration leaves with it, so this
-        pool retains no trace of the request."""
-        rec = self._swap.pop(req_id, None)
+        ``import_swap``: the disaggregated handoff path.  By default the
+        record must be SWAPPED_OUT (payload host-resident); the PREFETCH
+        path passes ``allow_inflight=True`` to move a still-SWAPPING record
+        early — the source engine holds the record object and attaches the
+        payload via ``finalize_record`` when the gather drains, and the
+        destination's restore stays gated on ``swap_ready``.  Either way the
+        request's registration leaves with the record, so this pool retains
+        no trace of the request."""
+        rec = self._swap.get(req_id)
         assert rec is not None, f"export_swap of unswapped req {req_id}"
-        assert rec.state == BlockState.SWAPPED_OUT, (
+        assert allow_inflight or rec.state == BlockState.SWAPPED_OUT, (
             f"req {req_id} export while swap in flight ({rec.state})"
         )
         assert not self.tables.get(req_id), (
             f"req {req_id} exported while holding a live table"
         )
-        reg = self._reg.pop(req_id, None)
+        del self._swap[req_id]           # validate first: a rejected export
+        reg = self._reg.pop(req_id, None)       # must leave the pool intact
         self.stats.handoff_exports += 1
         return rec, reg
 
@@ -619,15 +635,15 @@ class KVBlockPool:
         """Adopt a record exported from another pool's ``export_swap``: it
         lands in this pool's staging store exactly as a local swap-out would
         have, so the ordinary ``swap_in``/restore path resumes the request
-        decode-only — zero re-prefilled tokens.  The source registration
-        (tenant + prompt block hashes) carries over so quota charging and
-        prefix sealing work on this side of the link."""
+        decode-only — zero re-prefilled tokens.  A PREFETCHED record may
+        still be SWAPPING (source gather in flight): it is adoptable because
+        every restore path gates on ``swap_ready``, which turns true only
+        when the source engine finalizes the record.  The source
+        registration (tenant + prompt block hashes) carries over so quota
+        charging and prefix sealing work on this side of the link."""
         assert req_id not in self._swap, f"req {req_id} already staged here"
         assert not self.tables.get(req_id), (
             f"req {req_id} imported over a live table"
-        )
-        assert rec.state == BlockState.SWAPPED_OUT, (
-            f"req {req_id} imported while swap in flight ({rec.state})"
         )
         if reg is not None:
             fresh = _Registration(

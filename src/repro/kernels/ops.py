@@ -12,8 +12,14 @@ from repro.kernels import ref
 from repro.kernels.chunked_prefill_attention import chunked_prefill_attention
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.fused_swiglu import fused_swiglu
-from repro.kernels.paged_decode_attention import paged_decode_attention
-from repro.kernels.paged_prefill_attention import paged_prefill_attention
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention,
+    paged_decode_attention_fused,
+)
+from repro.kernels.paged_prefill_attention import (
+    paged_prefill_attention,
+    paged_prefill_attention_fused,
+)
 from repro.kernels.swap import swap_gather_pages, swap_scatter_pages
 
 _ON_TPU = None
@@ -50,30 +56,67 @@ def flash_decode_attention(q, k_cache, v_cache, kv_lens, *,
 
 def paged_prefill_chunk_attention(q, k_pages, v_pages, block_tables, kv_lens,
                                   q_offset, *, use_pallas: bool = True,
-                                  block_q: int = 128, pages_per_tile: int = 1):
+                                  block_q: int = 128, pages_per_tile: int = 1,
+                                  buffering_depth: int = 1):
     """(B, Sq, Hq, hd) chunk vs a (n_pages, ps, Hkv, hd) physical page pool
     addressed through per-sequence block tables, with causal offset.
     ``pages_per_tile`` pages are DMA-gathered into one MXU K/V tile per grid
-    step (the oracle is tile-size-agnostic: indirection is data movement)."""
+    step (the oracle is tile-size-agnostic: indirection is data movement);
+    ``buffering_depth`` gathers run ahead of the dot (1 = synchronous)."""
     if not use_pallas:
         return ref.paged_prefill_attention_ref(
             q, k_pages, v_pages, block_tables, kv_lens, q_offset)
     return paged_prefill_attention(
         q, k_pages, v_pages, block_tables, kv_lens, q_offset,
-        block_q=block_q, pages_per_tile=pages_per_tile, interpret=not on_tpu(),
+        block_q=block_q, pages_per_tile=pages_per_tile,
+        buffering_depth=buffering_depth, interpret=not on_tpu(),
+    )
+
+
+def paged_prefill_chunk_attention_fused(q, kv_pages, block_tables, kv_lens,
+                                        q_offset, *, use_pallas: bool = True,
+                                        block_q: int = 128,
+                                        pages_per_tile: int = 1,
+                                        buffering_depth: int = 1):
+    """``paged_prefill_chunk_attention`` over a fused head-interleaved pool
+    ``(n_pages, ps, 2*Hkv, hd)`` — one DMA per page feeds both K and V."""
+    if not use_pallas:
+        return ref.paged_prefill_attention_fused_ref(
+            q, kv_pages, block_tables, kv_lens, q_offset)
+    return paged_prefill_attention_fused(
+        q, kv_pages, block_tables, kv_lens, q_offset,
+        block_q=block_q, pages_per_tile=pages_per_tile,
+        buffering_depth=buffering_depth, interpret=not on_tpu(),
     )
 
 
 def paged_flash_decode_attention(q, k_pages, v_pages, block_tables, kv_lens, *,
                                  use_pallas: bool = True,
-                                 pages_per_tile: int = 1):
+                                 pages_per_tile: int = 1,
+                                 buffering_depth: int = 1):
     """(B, Hq, hd) single-token decode vs a paged pool + block tables."""
     if not use_pallas:
         return ref.paged_decode_attention_ref(
             q, k_pages, v_pages, block_tables, kv_lens)
     return paged_decode_attention(
         q, k_pages, v_pages, block_tables, kv_lens,
-        pages_per_tile=pages_per_tile, interpret=not on_tpu(),
+        pages_per_tile=pages_per_tile, buffering_depth=buffering_depth,
+        interpret=not on_tpu(),
+    )
+
+
+def paged_flash_decode_attention_fused(q, kv_pages, block_tables, kv_lens, *,
+                                       use_pallas: bool = True,
+                                       pages_per_tile: int = 1,
+                                       buffering_depth: int = 1):
+    """``paged_flash_decode_attention`` over a fused head-interleaved pool."""
+    if not use_pallas:
+        return ref.paged_decode_attention_fused_ref(
+            q, kv_pages, block_tables, kv_lens)
+    return paged_decode_attention_fused(
+        q, kv_pages, block_tables, kv_lens,
+        pages_per_tile=pages_per_tile, buffering_depth=buffering_depth,
+        interpret=not on_tpu(),
     )
 
 

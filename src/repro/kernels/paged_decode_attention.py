@@ -17,6 +17,25 @@ the MXU 16-row slivers and feeding it full 128-row tiles — the per-tile
 online-softmax (m, l, acc) scratch carries across tiles exactly as the dense
 ``decode_attention`` kernel carries across KV blocks.  Tiles entirely past
 ``kv_len`` are skipped before any DMA is issued.
+
+Two orthogonal knobs hide the gather latency behind the MXU dot:
+
+* ``buffering_depth`` — the VMEM tile scratch and DMA semaphores carry a
+  leading ``depth`` axis; tile ``t`` lands in buffer slot ``t % depth``.  At
+  tile 0 a prologue issues the copies for tiles ``0..depth-2``; every step
+  then issues tile ``t+depth-1`` *before* waiting on tile ``t``'s
+  semaphores, so the next gather is in flight while the current tile's dot
+  runs.  ``depth=1`` degenerates to the synchronous issue-then-wait path.
+  Reuse is safe because slot ``(t+depth-1) % depth`` last held tile
+  ``t-1``, whose compute retired in the previous (sequential) grid step.
+  Live tiles form a contiguous prefix of the table, so every issued copy is
+  waited within the same inner tile loop — dead tiles still skip DMA
+  entirely.
+* ``fused`` — the pool carries the head-interleaved layout
+  ``[K0,V0,K1,V1,...]`` (``kv_pages: (n_pages, page_size, 2*Hkv, hd)``,
+  viewed kernel-side as ``(n_pages, Hkv, 2, ps, hd)``), so ONE async copy
+  per page fetches both the K and V rows: half the page-table reads and
+  half the DMA issue count of the split layout.
 """
 from __future__ import annotations
 
@@ -31,66 +50,109 @@ import jax.experimental.pallas.tpu as pltpu
 NEG_INF = -1e30
 
 
+def _tile_copies(block_tables_ref, kv_h, t, slot, rest, *,
+                 page_size, pages_per_tile, fused, b):
+    """Async-copy descriptors gathering tile ``t`` into buffer ``slot``.
+
+    The same descriptors are built twice — once to ``start()`` the DMAs,
+    once to ``wait()`` them (a descriptor is just (src, dst, sem))."""
+    out = []
+    for j in range(pages_per_tile):
+        pid = block_tables_ref[b, t * pages_per_tile + j]
+        if fused:
+            kv_hbm, kv_tile, sem = rest
+            # one copy moves the page's full (2, ps, hd) K+V block
+            out.append(pltpu.make_async_copy(
+                kv_hbm.at[pid, kv_h], kv_tile.at[slot, j], sem.at[slot, 0, j]
+            ))
+        else:
+            k_hbm, v_hbm, k_tile, v_tile, sem = rest
+            dst = pl.ds(j * page_size, page_size)
+            out.append(pltpu.make_async_copy(
+                k_hbm.at[pid, kv_h], k_tile.at[slot, dst, :], sem.at[slot, 0, j]
+            ))
+            out.append(pltpu.make_async_copy(
+                v_hbm.at[pid, kv_h], v_tile.at[slot, dst, :], sem.at[slot, 1, j]
+            ))
+    return out
+
+
 def _paged_decode_kernel(
     block_tables_ref,   # (B, n_tiles * pages_per_tile) scalar prefetch
     kv_len_ref,         # (B,) scalar prefetch
     q_ref,              # (group, hd)
-    k_hbm,              # (n_pages, Hkv, page_size, hd) — ANY memory space
-    v_hbm,              # (n_pages, Hkv, page_size, hd)
-    o_ref,              # (group, hd)
-    m_ref,              # (group,) f32
-    l_ref,              # (group,) f32
-    acc_ref,            # (group, hd) f32
-    k_tile,             # (pages_per_tile * page_size, hd) pool dtype
-    v_tile,             # (pages_per_tile * page_size, hd)
-    sem,                # DMA sems (2, pages_per_tile): [0]=K, [1]=V
-    *,
+    *refs,              # split: k_hbm, v_hbm | fused: kv_hbm; then o_ref + scratch
     page_size: int,
     pages_per_tile: int,
     sm_scale: float,
+    depth: int,
+    n_tiles: int,
+    fused: bool,
 ):
+    if fused:
+        kv_hbm, o_ref, m_ref, l_ref, acc_ref, kv_tile, sem = refs
+        dma_refs = (kv_hbm, kv_tile, sem)
+    else:
+        k_hbm, v_hbm, o_ref, m_ref, l_ref, acc_ref, k_tile, v_tile, sem = refs
+        dma_refs = (k_hbm, v_hbm, k_tile, v_tile, sem)
+
     b = pl.program_id(0)
     h = pl.program_id(1)
     tile_i = pl.program_id(2)
-    n_tiles = pl.num_programs(2)
     tile = page_size * pages_per_tile
+
+    kv_len = kv_len_ref[b]
+
+    def live(t):
+        # whole-tile skip: tiles past the valid length issue no DMA at all
+        return t * tile < kv_len
+
+    def copies(t, slot):
+        return _tile_copies(
+            block_tables_ref, h, t, slot, dma_refs, page_size=page_size,
+            pages_per_tile=pages_per_tile, fused=fused, b=b,
+        )
 
     @pl.when(tile_i == 0)
     def _init():
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        # prologue: put tiles 0..depth-2 in flight before the first wait
+        for d in range(min(depth - 1, n_tiles)):
+            @pl.when(live(d))
+            def _issue_ahead(d=d):
+                for c in copies(d, d % depth):
+                    c.start()
 
-    kv_len = kv_len_ref[b]
-    tile_start = tile_i * tile
+    # steady state: issue tile t+depth-1 before waiting on tile t (depth=1:
+    # issue tile t itself — the synchronous path)
+    nxt = tile_i + (depth - 1)
+    @pl.when((nxt < n_tiles) & live(nxt))
+    def _issue():
+        for c in copies(nxt, nxt % depth):
+            c.start()
 
-    # whole-tile skip: tiles past the valid length issue no DMA at all
-    @pl.when(tile_start < kv_len)
+    slot = tile_i % depth
+
+    @pl.when(live(tile_i))
     def _compute():
-        for j in range(pages_per_tile):
-            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
-            dst = pl.ds(j * page_size, page_size)
-            pltpu.make_async_copy(
-                k_hbm.at[pid, h], k_tile.at[dst, :], sem.at[0, j]
-            ).start()
-            pltpu.make_async_copy(
-                v_hbm.at[pid, h], v_tile.at[dst, :], sem.at[1, j]
-            ).start()
-        for j in range(pages_per_tile):
-            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
-            dst = pl.ds(j * page_size, page_size)
-            pltpu.make_async_copy(
-                k_hbm.at[pid, h], k_tile.at[dst, :], sem.at[0, j]
-            ).wait()
-            pltpu.make_async_copy(
-                v_hbm.at[pid, h], v_tile.at[dst, :], sem.at[1, j]
-            ).wait()
+        for c in copies(tile_i, slot):
+            c.wait()
+        if fused:
+            kv = kv_tile[slot]                                # (ppt, 2, ps, hd)
+            hd = kv.shape[-1]
+            k = kv[:, 0].reshape(tile, hd)
+            v = kv[:, 1].reshape(tile, hd)
+        else:
+            k = k_tile[slot]                                  # (tile, hd)
+            v = v_tile[slot]
 
+        tile_start = tile_i * tile
         k_pos = tile_start + jax.lax.iota(jnp.int32, tile)
         q = q_ref[...].astype(jnp.float32) * sm_scale         # (g, hd)
-        k = k_tile[...].astype(jnp.float32)                   # (tile, hd)
         s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )                                                     # (g, tile)
         mask = k_pos[None, :] < kv_len
@@ -103,7 +165,7 @@ def _paged_decode_kernel(
 
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v_tile[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new
@@ -130,20 +192,39 @@ def _pad_tables(block_tables, pages_per_tile):
     return block_tables, n_tiles
 
 
-@functools.partial(jax.jit, static_argnames=("pages_per_tile", "interpret"))
-def paged_decode_attention(
-    q,              # (B, Hq, hd) one token per sequence
-    k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
-    v_pages,        # (n_pages, page_size, Hkv, hd)
-    block_tables,   # (B, max_pages) int32 physical page ids (pad: any valid id)
-    kv_lens,        # (B,) int32 valid token counts
-    *,
-    pages_per_tile: int = 1,
-    interpret: bool = True,
-):
+def _fused_kernel_view(kv_pages):
+    """(n_pages, ps, 2*Hkv, hd) head-interleaved pool -> the kernel-side
+    (n_pages, Hkv, 2, ps, hd) view: ``.at[pid, kv_h]`` is one page's K+V."""
+    n_pages, ps, H2, hd = kv_pages.shape
+    return kv_pages.reshape(n_pages, ps, H2 // 2, 2, hd).transpose(0, 2, 3, 1, 4)
+
+
+def _decode_scratch(depth, tile, pages_per_tile, page_size, hd, group,
+                    dtype, fused):
+    base = [
+        pltpu.VMEM((group,), jnp.float32),
+        pltpu.VMEM((group,), jnp.float32),
+        pltpu.VMEM((group, hd), jnp.float32),
+    ]
+    if fused:
+        return base + [
+            pltpu.VMEM((depth, pages_per_tile, 2, page_size, hd), dtype),
+            pltpu.SemaphoreType.DMA((depth, 1, pages_per_tile)),
+        ]
+    return base + [
+        pltpu.VMEM((depth, tile, hd), dtype),
+        pltpu.VMEM((depth, tile, hd), dtype),
+        pltpu.SemaphoreType.DMA((depth, 2, pages_per_tile)),
+    ]
+
+
+def _paged_decode_call(q, pools, block_tables, kv_lens, *, pages_per_tile,
+                       buffering_depth, interpret, fused):
     B, Hq, hd = q.shape
-    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    page_size = pools[0].shape[1]
+    Hkv = pools[0].shape[2] // (2 if fused else 1)
     assert Hq % Hkv == 0, (Hq, Hkv)
+    assert buffering_depth >= 1, buffering_depth
     group = Hq // Hkv
 
     block_tables, n_tiles = _pad_tables(
@@ -154,12 +235,15 @@ def paged_decode_attention(
     kernel = functools.partial(
         _paged_decode_kernel, page_size=page_size,
         pages_per_tile=pages_per_tile, sm_scale=1.0 / math.sqrt(hd),
+        depth=buffering_depth, n_tiles=n_tiles, fused=fused,
     )
 
     q_g = q.reshape(B, Hkv, group, hd)
-    # pages laid out (n_pages, Hkv, page_size, hd): contiguous (ps, hd) tiles
-    k_t = k_pages.transpose(0, 2, 1, 3)
-    v_t = v_pages.transpose(0, 2, 1, 3)
+    if fused:
+        pool_ops = (_fused_kernel_view(pools[0]),)
+    else:
+        # pages laid out (n_pages, Hkv, page_size, hd): contiguous (ps, hd) tiles
+        pool_ops = (pools[0].transpose(0, 2, 1, 3), pools[1].transpose(0, 2, 1, 3))
 
     tile = page_size * pages_per_tile
     out = pl.pallas_call(
@@ -174,24 +258,60 @@ def paged_decode_attention(
                 ),
                 # K/V stay unblocked: the kernel gathers pages itself via
                 # per-page async copies steered by the prefetched table
-                pl.BlockSpec(memory_space=pltpu.ANY),
-                pl.BlockSpec(memory_space=pltpu.ANY),
+                *([pl.BlockSpec(memory_space=pltpu.ANY)] * len(pool_ops)),
             ],
             out_specs=pl.BlockSpec(
                 (None, None, group, hd),
                 lambda b, h, ti, *_: (b, h, 0, 0),
             ),
-            scratch_shapes=[
-                pltpu.VMEM((group,), jnp.float32),
-                pltpu.VMEM((group,), jnp.float32),
-                pltpu.VMEM((group, hd), jnp.float32),
-                pltpu.VMEM((tile, hd), k_pages.dtype),
-                pltpu.VMEM((tile, hd), v_pages.dtype),
-                pltpu.SemaphoreType.DMA((2, pages_per_tile)),
-            ],
+            scratch_shapes=_decode_scratch(
+                buffering_depth, tile, pages_per_tile, page_size, hd, group,
+                pools[0].dtype, fused,
+            ),
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hkv, group, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, kv_lens.astype(jnp.int32), q_g, k_t, v_t)
+    )(block_tables, kv_lens.astype(jnp.int32), q_g, *pool_ops)
 
     return out.reshape(B, Hq, hd)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pages_per_tile", "buffering_depth", "interpret")
+)
+def paged_decode_attention(
+    q,              # (B, Hq, hd) one token per sequence
+    k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
+    v_pages,        # (n_pages, page_size, Hkv, hd)
+    block_tables,   # (B, max_pages) int32 physical page ids (pad: any valid id)
+    kv_lens,        # (B,) int32 valid token counts
+    *,
+    pages_per_tile: int = 1,
+    buffering_depth: int = 1,
+    interpret: bool = True,
+):
+    return _paged_decode_call(
+        q, (k_pages, v_pages), block_tables, kv_lens,
+        pages_per_tile=pages_per_tile, buffering_depth=buffering_depth,
+        interpret=interpret, fused=False,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("pages_per_tile", "buffering_depth", "interpret")
+)
+def paged_decode_attention_fused(
+    q,              # (B, Hq, hd)
+    kv_pages,       # (n_pages, page_size, 2*Hkv, hd) head-interleaved pool
+    block_tables,   # (B, max_pages) int32
+    kv_lens,        # (B,) int32
+    *,
+    pages_per_tile: int = 1,
+    buffering_depth: int = 1,
+    interpret: bool = True,
+):
+    return _paged_decode_call(
+        q, (kv_pages,), block_tables, kv_lens,
+        pages_per_tile=pages_per_tile, buffering_depth=buffering_depth,
+        interpret=interpret, fused=True,
+    )

@@ -16,6 +16,15 @@ scratch carries across tiles exactly as the dense kernel carries across KV
 blocks.  Tiles entirely above the causal diagonal or past ``kv_len`` are
 skipped before any DMA is issued, so work stays ~O(prefix + chunk^2/2) per
 sequence regardless of pool size.
+
+``buffering_depth`` and the fused head-interleaved layout work exactly as in
+``paged_decode_attention`` (see its module docstring): tile ``t`` computes
+out of buffer slot ``t % depth`` while tile ``t+depth-1``'s gather is
+already in flight, and the fused pool needs only ONE async copy per page to
+feed both K and V.  Live tiles form a contiguous prefix (the causal bound
+``tile_start <= q_pos[-1]`` and the length bound ``tile_start < kv_len`` are
+both monotone in the tile index), so every issued copy is waited within the
+same inner tile loop.
 """
 from __future__ import annotations
 
@@ -27,7 +36,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from repro.kernels.paged_decode_attention import _pad_tables
+from repro.kernels.paged_decode_attention import (
+    _fused_kernel_view,
+    _pad_tables,
+    _tile_copies,
+)
 
 DEFAULT_BLOCK_Q = 128
 
@@ -41,74 +54,87 @@ def _paged_prefill_kernel(
     q_offset_ref,       # (B,) absolute position of q[:, 0]
     # blocked operands
     q_ref,              # (blk_q, hd)
-    k_hbm,              # (n_pages, Hkv, page_size, hd) — ANY memory space
-    v_hbm,              # (n_pages, Hkv, page_size, hd)
-    # blocked output
-    o_ref,              # (blk_q, hd)
-    # scratch
-    m_ref,              # (blk_q,) f32
-    l_ref,              # (blk_q,) f32
-    acc_ref,            # (blk_q, hd) f32
-    k_tile,             # (pages_per_tile * page_size, hd) pool dtype
-    v_tile,             # (pages_per_tile * page_size, hd)
-    sem,                # DMA sems (2, pages_per_tile): [0]=K, [1]=V
-    *,
+    *refs,              # split: k_hbm, v_hbm | fused: kv_hbm; then o_ref + scratch
     block_q: int,
     page_size: int,
     pages_per_tile: int,
     group: int,
     sm_scale: float,
+    depth: int,
+    n_tiles: int,
+    fused: bool,
 ):
+    if fused:
+        kv_hbm, o_ref, m_ref, l_ref, acc_ref, kv_tile, sem = refs
+        dma_refs = (kv_hbm, kv_tile, sem)
+    else:
+        k_hbm, v_hbm, o_ref, m_ref, l_ref, acc_ref, k_tile, v_tile, sem = refs
+        dma_refs = (k_hbm, v_hbm, k_tile, v_tile, sem)
+
     b = pl.program_id(0)
     h = pl.program_id(1)
     tile_i = pl.program_id(3)
-    n_tiles = pl.num_programs(3)
     tile = page_size * pages_per_tile
-
-    @pl.when(tile_i == 0)
-    def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
 
     kv_len = kv_len_ref[b]
     q_off = q_offset_ref[b]
 
     q_i = pl.program_id(2)
     q_pos = q_off + q_i * block_q + jax.lax.iota(jnp.int32, block_q)
-    tile_start = tile_i * tile
 
-    # whole-tile skip: above the causal diagonal or past the valid length —
-    # dead tiles issue no DMA
-    tile_live = (tile_start <= q_pos[-1]) & (tile_start < kv_len)
+    def live(t):
+        # whole-tile skip: above the causal diagonal or past the valid
+        # length — dead tiles issue no DMA
+        return (t * tile <= q_pos[-1]) & (t * tile < kv_len)
 
-    @pl.when(tile_live)
+    kv_h = h // group
+
+    def copies(t, slot):
+        return _tile_copies(
+            block_tables_ref, kv_h, t, slot, dma_refs, page_size=page_size,
+            pages_per_tile=pages_per_tile, fused=fused, b=b,
+        )
+
+    @pl.when(tile_i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        # prologue: put tiles 0..depth-2 in flight before the first wait
+        for d in range(min(depth - 1, n_tiles)):
+            @pl.when(live(d))
+            def _issue_ahead(d=d):
+                for c in copies(d, d % depth):
+                    c.start()
+
+    # steady state: issue tile t+depth-1 before waiting on tile t (depth=1:
+    # issue tile t itself — the synchronous path)
+    nxt = tile_i + (depth - 1)
+    @pl.when((nxt < n_tiles) & live(nxt))
+    def _issue():
+        for c in copies(nxt, nxt % depth):
+            c.start()
+
+    slot = tile_i % depth
+
+    @pl.when(live(tile_i))
     def _compute():
-        kv_h = h // group
-        for j in range(pages_per_tile):
-            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
-            dst = pl.ds(j * page_size, page_size)
-            pltpu.make_async_copy(
-                k_hbm.at[pid, kv_h], k_tile.at[dst, :], sem.at[0, j]
-            ).start()
-            pltpu.make_async_copy(
-                v_hbm.at[pid, kv_h], v_tile.at[dst, :], sem.at[1, j]
-            ).start()
-        for j in range(pages_per_tile):
-            pid = block_tables_ref[b, tile_i * pages_per_tile + j]
-            dst = pl.ds(j * page_size, page_size)
-            pltpu.make_async_copy(
-                k_hbm.at[pid, kv_h], k_tile.at[dst, :], sem.at[0, j]
-            ).wait()
-            pltpu.make_async_copy(
-                v_hbm.at[pid, kv_h], v_tile.at[dst, :], sem.at[1, j]
-            ).wait()
+        for c in copies(tile_i, slot):
+            c.wait()
+        if fused:
+            kv = kv_tile[slot]                                # (ppt, 2, ps, hd)
+            hd = kv.shape[-1]
+            k = kv[:, 0].reshape(tile, hd)
+            v = kv[:, 1].reshape(tile, hd)
+        else:
+            k = k_tile[slot]                                  # (tile, hd)
+            v = v_tile[slot]
 
+        tile_start = tile_i * tile
         k_pos = tile_start + jax.lax.iota(jnp.int32, tile)
         q = q_ref[...].astype(jnp.float32) * sm_scale
-        k = k_tile[...].astype(jnp.float32)
         s = jax.lax.dot_general(
-            q, k, (((1,), (1,)), ((), ())),
+            q, k.astype(jnp.float32), (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         )                                                   # (blk_q, tile)
         mask = (k_pos[None, :] <= q_pos[:, None]) & (k_pos[None, :] < kv_len)
@@ -121,7 +147,7 @@ def _paged_prefill_kernel(
 
         l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
         acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v_tile[...].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         m_ref[...] = m_new
@@ -133,24 +159,33 @@ def _paged_prefill_kernel(
         o_ref[...] = (acc_ref[...] / safe_l[:, None]).astype(o_ref.dtype)
 
 
-@functools.partial(
-    jax.jit, static_argnames=("block_q", "pages_per_tile", "interpret")
-)
-def paged_prefill_attention(
-    q,              # (B, Sq, Hq, hd) the prefill chunk's queries
-    k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
-    v_pages,        # (n_pages, page_size, Hkv, hd)
-    block_tables,   # (B, max_pages) int32 physical page ids
-    kv_lens,        # (B,) int32 valid KV length (prefix + chunk)
-    q_offset,       # (B,) int32 absolute position of q[:, 0]
-    *,
-    block_q: int = DEFAULT_BLOCK_Q,
-    pages_per_tile: int = 1,
-    interpret: bool = True,
-):
+def _prefill_scratch(depth, tile, pages_per_tile, page_size, hd, block_q,
+                     dtype, fused):
+    base = [
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q,), jnp.float32),
+        pltpu.VMEM((block_q, hd), jnp.float32),
+    ]
+    if fused:
+        return base + [
+            pltpu.VMEM((depth, pages_per_tile, 2, page_size, hd), dtype),
+            pltpu.SemaphoreType.DMA((depth, 1, pages_per_tile)),
+        ]
+    return base + [
+        pltpu.VMEM((depth, tile, hd), dtype),
+        pltpu.VMEM((depth, tile, hd), dtype),
+        pltpu.SemaphoreType.DMA((depth, 2, pages_per_tile)),
+    ]
+
+
+def _paged_prefill_call(q, pools, block_tables, kv_lens, q_offset, *,
+                        block_q, pages_per_tile, buffering_depth, interpret,
+                        fused):
     B, Sq, Hq, hd = q.shape
-    page_size, Hkv = k_pages.shape[1], k_pages.shape[2]
+    page_size = pools[0].shape[1]
+    Hkv = pools[0].shape[2] // (2 if fused else 1)
     assert Hq % Hkv == 0, (Hq, Hkv)
+    assert buffering_depth >= 1, buffering_depth
     group = Hq // Hkv
 
     block_q = min(block_q, Sq)
@@ -164,12 +199,15 @@ def paged_prefill_attention(
     kernel = functools.partial(
         _paged_prefill_kernel, block_q=block_q, page_size=page_size,
         pages_per_tile=pages_per_tile, group=group,
-        sm_scale=1.0 / math.sqrt(hd),
+        sm_scale=1.0 / math.sqrt(hd), depth=buffering_depth, n_tiles=n_tiles,
+        fused=fused,
     )
 
     q_t = q.transpose(0, 2, 1, 3)          # (B, Hq, Sq, hd)
-    k_t = k_pages.transpose(0, 2, 1, 3)    # (n_pages, Hkv, ps, hd)
-    v_t = v_pages.transpose(0, 2, 1, 3)
+    if fused:
+        pool_ops = (_fused_kernel_view(pools[0]),)
+    else:
+        pool_ops = (pools[0].transpose(0, 2, 1, 3), pools[1].transpose(0, 2, 1, 3))
 
     tile = page_size * pages_per_tile
     out = pl.pallas_call(
@@ -184,27 +222,69 @@ def paged_prefill_attention(
                 ),
                 # K/V stay unblocked: the kernel gathers pages itself via
                 # per-page async copies steered by the prefetched table
-                pl.BlockSpec(memory_space=pltpu.ANY),
-                pl.BlockSpec(memory_space=pltpu.ANY),
+                *([pl.BlockSpec(memory_space=pltpu.ANY)] * len(pool_ops)),
             ],
             out_specs=pl.BlockSpec(
                 (None, None, block_q, hd),
                 lambda b, h, qi, ti, *_: (b, h, qi, 0),
             ),
-            scratch_shapes=[
-                pltpu.VMEM((block_q,), jnp.float32),
-                pltpu.VMEM((block_q,), jnp.float32),
-                pltpu.VMEM((block_q, hd), jnp.float32),
-                pltpu.VMEM((tile, hd), k_pages.dtype),
-                pltpu.VMEM((tile, hd), v_pages.dtype),
-                pltpu.SemaphoreType.DMA((2, pages_per_tile)),
-            ],
+            scratch_shapes=_prefill_scratch(
+                buffering_depth, tile, pages_per_tile, page_size, hd, block_q,
+                pools[0].dtype, fused,
+            ),
         ),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
         interpret=interpret,
     )(
         block_tables, kv_lens.astype(jnp.int32), q_offset.astype(jnp.int32),
-        q_t, k_t, v_t,
+        q_t, *pool_ops,
     )
 
     return out.transpose(0, 2, 1, 3)       # (B, Sq, Hq, hd)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "pages_per_tile", "buffering_depth", "interpret"),
+)
+def paged_prefill_attention(
+    q,              # (B, Sq, Hq, hd) the prefill chunk's queries
+    k_pages,        # (n_pages, page_size, Hkv, hd) physical page pool
+    v_pages,        # (n_pages, page_size, Hkv, hd)
+    block_tables,   # (B, max_pages) int32 physical page ids
+    kv_lens,        # (B,) int32 valid KV length (prefix + chunk)
+    q_offset,       # (B,) int32 absolute position of q[:, 0]
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    pages_per_tile: int = 1,
+    buffering_depth: int = 1,
+    interpret: bool = True,
+):
+    return _paged_prefill_call(
+        q, (k_pages, v_pages), block_tables, kv_lens, q_offset,
+        block_q=block_q, pages_per_tile=pages_per_tile,
+        buffering_depth=buffering_depth, interpret=interpret, fused=False,
+    )
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "pages_per_tile", "buffering_depth", "interpret"),
+)
+def paged_prefill_attention_fused(
+    q,              # (B, Sq, Hq, hd)
+    kv_pages,       # (n_pages, page_size, 2*Hkv, hd) head-interleaved pool
+    block_tables,   # (B, max_pages) int32
+    kv_lens,        # (B,) int32
+    q_offset,       # (B,) int32
+    *,
+    block_q: int = DEFAULT_BLOCK_Q,
+    pages_per_tile: int = 1,
+    buffering_depth: int = 1,
+    interpret: bool = True,
+):
+    return _paged_prefill_call(
+        q, (kv_pages,), block_tables, kv_lens, q_offset,
+        block_q=block_q, pages_per_tile=pages_per_tile,
+        buffering_depth=buffering_depth, interpret=interpret, fused=True,
+    )

@@ -106,6 +106,40 @@ def paged_decode_attention_ref(
     )
 
 
+def split_fused_pages(kv_pages):
+    """Un-interleave a fused head-interleaved pool: head axis
+    ``[K0,V0,K1,V1,...]`` -> split ``(k_pages, v_pages)`` views.
+
+    kv_pages: (n_pages, page_size, 2*Hkv, hd) -> two
+    (n_pages, page_size, Hkv, hd) tensors.  The fused layout must be pure
+    data movement, so every fused oracle is the split oracle over these
+    strided views.
+    """
+    return kv_pages[:, :, 0::2], kv_pages[:, :, 1::2]
+
+
+def fuse_pages(k_pages, v_pages):
+    """Inverse of ``split_fused_pages``: interleave split K/V pools onto the
+    head axis (``(n_pages, ps, Hkv, hd)`` x2 -> ``(n_pages, ps, 2*Hkv, hd)``)."""
+    n_pages, ps, Hkv, hd = k_pages.shape
+    return jnp.stack([k_pages, v_pages], axis=3).reshape(n_pages, ps, 2 * Hkv, hd)
+
+
+def paged_prefill_attention_fused_ref(q, kv_pages, block_tables, kv_lens,
+                                      q_offset):
+    """Fused-layout paged chunked-prefill oracle (un-interleave + split oracle)."""
+    k_pages, v_pages = split_fused_pages(kv_pages)
+    return paged_prefill_attention_ref(
+        q, k_pages, v_pages, block_tables, kv_lens, q_offset
+    )
+
+
+def paged_decode_attention_fused_ref(q, kv_pages, block_tables, kv_lens):
+    """Fused-layout paged flash-decode oracle."""
+    k_pages, v_pages = split_fused_pages(kv_pages)
+    return paged_decode_attention_ref(q, k_pages, v_pages, block_tables, kv_lens)
+
+
 def fused_swiglu_ref(x, w_gate, w_up, w_down):
     """x: (M, D); w_gate/w_up: (D, F); w_down: (F, D) -> (M, D), f32 math."""
     xf = x.astype(jnp.float32)

@@ -71,6 +71,7 @@ def run_disagg(args):
             n_slots=16, max_context=512, use_pallas=args.pallas,
             paged_kv=not args.dense_kv, pipelined=not args.sync_engine,
             pages_per_tile=args.pages_per_tile,
+            kv_layout=args.kv_layout, buffering_depth=args.buffering_depth,
             preemption_mode=args.preemption_mode,
         ),
         sched_cfg=SchedulerConfig(
@@ -144,6 +145,17 @@ def main(argv=None):
     ap.add_argument("--pages-per-tile", type=int, default=1,
                     help="physical pages gathered per paged-attention K/V "
                          "tile (MXU efficiency at small page sizes)")
+    ap.add_argument("--kv-layout", default="split",
+                    choices=["split", "fused"],
+                    help="paged KV pool layout: 'split' keeps separate K and "
+                         "V pools; 'fused' interleaves K/V on the head axis "
+                         "so one gather per page feeds both operands "
+                         "(greedy outputs are identical)")
+    ap.add_argument("--buffering-depth", type=int, default=1,
+                    help="page-DMA buffering depth in the paged attention "
+                         "kernels: depth N issues tile t+N-1's gather before "
+                         "waiting on tile t, overlapping copies with compute "
+                         "(greedy outputs are identical at any depth)")
     ap.add_argument("--preemption-mode", default="recompute",
                     choices=["recompute", "swap"],
                     help="KV-pressure eviction strategy: 'recompute' discards "
@@ -182,6 +194,7 @@ def main(argv=None):
         n_slots=16, max_context=512, use_pallas=args.pallas,
         paged_kv=not args.dense_kv, pipelined=not args.sync_engine,
         pages_per_tile=args.pages_per_tile,
+        kv_layout=args.kv_layout, buffering_depth=args.buffering_depth,
         preemption_mode=args.preemption_mode,
     ))
 
@@ -216,7 +229,8 @@ def main(argv=None):
     row = res.report.row()
     print(f"\n=== {args.arch} | policy={args.policy} lprs={args.lprs} "
           f"apc={args.apc} pallas={args.pallas} "
-          f"kv={'dense' if args.dense_kv else 'paged'} "
+          f"kv={'dense' if args.dense_kv else 'paged'}"
+          f"{'' if args.dense_kv else f'/{args.kv_layout}/d{args.buffering_depth}'} "
           f"loop={'sync' if args.sync_engine else 'pipelined'} "
           f"prefix_cache={args.prefix_cache} "
           f"preempt={args.preemption_mode} ===")

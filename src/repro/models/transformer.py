@@ -291,7 +291,9 @@ class TransformerLM:
 
     def chunked_step_paged(self, params, tokens, kv_pages, lens, chunk_lens,
                            block_tables, *, use_pallas: bool = False,
-                           pages_per_tile: int = 1):
+                           pages_per_tile: int = 1,
+                           kv_layout: str = "split",
+                           buffering_depth: int = 1):
         """``chunked_step`` against a *paged* KV cache (vLLM layout).
 
         Same Sarathi round semantics and bit-level math as the dense path, but
@@ -303,6 +305,13 @@ class TransformerLM:
         into the last physical page (the sink, which block tables also use as
         their pad value) and are never read back (``kv_lens`` masks them).
 
+        ``kv_layout="fused"`` stores the pool head-interleaved
+        (``kv_pages["kv"]: (L, n_phys, ps, 2*Hkv, hd)``, heads
+        ``[K0,V0,K1,V1,...]``): the round's new K/V interleave into ONE
+        scatter per layer and the attention kernel fetches each page's K+V
+        with one DMA.  ``buffering_depth`` gathers run ahead of the kernels'
+        dots (1 = synchronous).
+
         Attention is the paged chunked-prefill kernel (or the paged flash-
         decode kernel when the bucket is a pure single-token round) with a
         pure-jnp gather oracle behind the same ``use_pallas`` flag.
@@ -311,8 +320,10 @@ class TransformerLM:
 
         cfg = self.cfg
         assert not cfg.sliding_window, "engine demo path supports linear caches"
+        fused = kv_layout == "fused"
         B, C = tokens.shape
-        n_phys, ps = kv_pages["k"].shape[1], kv_pages["k"].shape[2]
+        pool = kv_pages["kv"] if fused else kv_pages["k"]
+        n_phys, ps = pool.shape[1], pool.shape[2]
         positions = lens[:, None] + jnp.arange(C)[None, :]
         write_mask = jnp.arange(C)[None, :] < chunk_lens[:, None]
         bidx = jnp.arange(B)
@@ -326,42 +337,75 @@ class TransformerLM:
         x = params["embed"][tokens]
         x = constrain(x, ("batch", "seq", "embed"))
 
+        def scatter(pages, new):
+            return pages.reshape(n_phys * ps, *pages.shape[2:]).at[
+                write_pos].set(new).reshape(pages.shape)
+
         def body(carry, xs):
-            lp, ck, cv = xs                     # (n_phys, ps, Hkv, hd)
-            h = L.rms_norm(carry, lp["attn_norm"], cfg.norm_eps)
-            q, k_new, v_new = L.qkv_project(lp["attn"], h, cfg, positions)
+            h = L.rms_norm(carry, xs[0]["attn_norm"], cfg.norm_eps)
+            q, k_new, v_new = L.qkv_project(xs[0]["attn"], h, cfg, positions)
             # masked lanes land in the SHARED sink page: write zeros, never
             # lane values — idle rows carry NaN (all-masked softmax, same as
             # the dense path) and a NaN parked in shared storage would
             # poison other rows' masked-position 0*V products downstream
             k_new = jnp.where(write_mask[:, :, None, None], k_new, 0)
             v_new = jnp.where(write_mask[:, :, None, None], v_new, 0)
-            ck = ck.reshape(n_phys * ps, *ck.shape[2:]).at[write_pos].set(
-                k_new).reshape(ck.shape)
-            cv = cv.reshape(n_phys * ps, *cv.shape[2:]).at[write_pos].set(
-                v_new).reshape(cv.shape)
-            if C == 1:
-                attn = kops.paged_flash_decode_attention(
-                    q[:, 0], ck, cv, block_tables, kv_lens,
-                    use_pallas=use_pallas, pages_per_tile=pages_per_tile,
-                )[:, None]
+            if fused:
+                lp, ckv = xs                   # (n_phys, ps, 2*Hkv, hd)
+                Hkv, hd = k_new.shape[2], k_new.shape[3]
+                # interleave onto the head axis: ONE scatter writes K and V
+                kv_new = jnp.stack([k_new, v_new], axis=3).reshape(
+                    B, C, 2 * Hkv, hd)
+                ckv = scatter(ckv, kv_new)
+                if C == 1:
+                    attn = kops.paged_flash_decode_attention_fused(
+                        q[:, 0], ckv, block_tables, kv_lens,
+                        use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+                        buffering_depth=buffering_depth,
+                    )[:, None]
+                else:
+                    attn = kops.paged_prefill_chunk_attention_fused(
+                        q, ckv, block_tables, kv_lens, lens,
+                        use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+                        buffering_depth=buffering_depth,
+                    )
+                new_pages = (ckv,)
             else:
-                attn = kops.paged_prefill_chunk_attention(
-                    q, ck, cv, block_tables, kv_lens, lens,
-                    use_pallas=use_pallas, pages_per_tile=pages_per_tile,
-                )
+                lp, ck, cv = xs                # (n_phys, ps, Hkv, hd)
+                ck = scatter(ck, k_new)
+                cv = scatter(cv, v_new)
+                if C == 1:
+                    attn = kops.paged_flash_decode_attention(
+                        q[:, 0], ck, cv, block_tables, kv_lens,
+                        use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+                        buffering_depth=buffering_depth,
+                    )[:, None]
+                else:
+                    attn = kops.paged_prefill_chunk_attention(
+                        q, ck, cv, block_tables, kv_lens, lens,
+                        use_pallas=use_pallas, pages_per_tile=pages_per_tile,
+                        buffering_depth=buffering_depth,
+                    )
+                new_pages = (ck, cv)
             y = carry + L.attn_output(lp["attn"], attn, cfg)
             y = _block_ffn(lp, y, cfg)
-            return y, (ck, cv)
+            return y, new_pages
 
-        x, (nk, nv) = jax.lax.scan(
-            body, x, (params["layers"], kv_pages["k"], kv_pages["v"])
-        )
+        if fused:
+            x, (nkv,) = jax.lax.scan(
+                body, x, (params["layers"], kv_pages["kv"])
+            )
+            new_cache = {"kv": nkv}
+        else:
+            x, (nk, nv) = jax.lax.scan(
+                body, x, (params["layers"], kv_pages["k"], kv_pages["v"])
+            )
+            new_cache = {"k": nk, "v": nv}
         x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
         last = jnp.maximum(chunk_lens - 1, 0)
         x_last = x[bidx, last]                       # (B, D)
         logits = self._unembed(params, x_last)
-        return constrain(logits, ("batch", "vocab")), {"k": nk, "v": nv}
+        return constrain(logits, ("batch", "vocab")), new_cache
 
     # -- cache/spec helpers ---------------------------------------------------
     def cache_struct(self, batch: int, seq_len: int):

@@ -59,14 +59,18 @@ def _serve_single(reqs, *, paged=True, pipelined=True, n_blocks=400):
 
 def _build_pressured(*, paged=True, pipelined=True, n_blocks=11,
                      n_prefill=1, n_decode=1, mode="swap", fairness=None,
-                     cost=None, min_handoff_tokens=0):
+                     cost=None, min_handoff_tokens=0, prefetch=True,
+                     kv_layout="split", buffering_depth=1):
     cfg = tiny_config("qwen1.5-0.5b")
     return build_disagg(
         cfg,
         cfg=DisaggConfig(n_prefill=n_prefill, n_decode=n_decode,
-                         min_handoff_tokens=min_handoff_tokens, cost=cost),
+                         min_handoff_tokens=min_handoff_tokens, cost=cost,
+                         prefetch=prefetch),
         engine_cfg=EngineConfig(n_slots=6, max_context=128, paged_kv=paged,
                                 pipelined=pipelined, preemption_mode=mode,
+                                kv_layout=kv_layout if paged else "split",
+                                buffering_depth=buffering_depth,
                                 seed=3),
         sched_cfg=SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6,
                                   fairness=fairness),
@@ -129,6 +133,45 @@ def test_disagg_sync_engine_matches_pipelined():
         assert res_p.outputs[a.req_id] == res_s.outputs[b.req_id]
 
 
+def test_disagg_prefetch_off_matches_prefetch_on():
+    """Prefetch (adopting the record while the source gather is still in
+    flight) is a pure latency optimization: outputs must be bit-identical to
+    the wait-for-swap-ready path, and the counters must show the two paths
+    actually diverged."""
+    reqs_p = _two_wave()
+    router_p = _build_pressured(prefetch=True)
+    res_p = serve_disagg(reqs_p, router_p)
+    reqs_w = _two_wave()
+    router_w = _build_pressured(prefetch=False)
+    res_w = serve_disagg(reqs_w, router_w)
+    assert res_p.handoffs == res_w.handoffs == len(reqs_p)
+    # pipelined: the gather drains one round late, so every prefetch-mode
+    # adoption happens while the copy is still in flight
+    assert router_p.store.stats.prefetched > 0
+    assert router_w.store.stats.prefetched == 0
+    for a, b in zip(reqs_p, reqs_w):
+        assert res_p.outputs[a.req_id] == res_w.outputs[b.req_id]
+    router_p.check_invariants()
+    router_w.check_invariants()
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_disagg_fused_layout_outputs_identical(depth):
+    """The fused head-interleaved pool rides the whole handoff path (gather,
+    host staging, cross-pool import, scatter-restore) with single-tensor
+    payloads; outputs must match the split layout bit-for-bit."""
+    reqs_f = _two_wave()
+    router_f = _build_pressured(kv_layout="fused", buffering_depth=depth)
+    res_f = serve_disagg(reqs_f, router_f)
+    reqs_s = _two_wave()
+    res_s = serve_disagg(reqs_s, _build_pressured())
+    assert res_f.handoffs == len(reqs_f)
+    assert _decode_prefill_tokens(router_f) == 0
+    for a, b in zip(reqs_f, reqs_s):
+        assert res_f.outputs[a.req_id] == res_s.outputs[b.req_id]
+    router_f.check_invariants()
+
+
 def test_cost_model_colocates_everything_when_link_is_expensive():
     """With a prohibitively priced link every completion stays colocated:
     decode runs to completion on the prefill replica, nothing ever enters
@@ -164,15 +207,18 @@ def test_cost_model_decision_boundaries():
 # ---------------------------------------------------------------------------
 
 
-def test_kv_accounted_in_exactly_one_location_throughout():
+@pytest.mark.parametrize("prefetch", [True, False], ids=["prefetch", "wait"])
+def test_kv_accounted_in_exactly_one_location_throughout(prefetch):
     """Drive the fleet sweep-by-sweep (the serve_disagg loop, instrumented):
     after every sweep each unfinished request's KV is accounted by AT MOST
     one location — a decoding request by exactly one — and at quiesce the
-    store is empty and every pool's accounting balances."""
+    store is empty and every pool's accounting balances.  Prefetch moves a
+    still-SWAPPING record across pools; the invariant must hold through that
+    window too."""
     import time as _time
 
     reqs = _two_wave(new_tokens=24)
-    router = _build_pressured(n_blocks=9)
+    router = _build_pressured(n_blocks=9, prefetch=prefetch)
     pending = sorted(reqs, key=lambda r: r.arrival_time)
     t_start = _time.perf_counter()
     for rs in router.replicas:
@@ -260,13 +306,16 @@ def test_shared_vtc_balances_across_handoff():
 # ---------------------------------------------------------------------------
 
 
-def test_killed_mid_handoff_leaks_nothing():
+@pytest.mark.parametrize("prefetch", [True, False], ids=["prefetch", "wait"])
+def test_killed_mid_handoff_leaks_nothing(prefetch):
     """A stop token equal to a request's FIRST output id kills it at the
-    source drain — exactly the moment its export gather lands, while it sits
-    in the router's pending-handoff list.  The staging record must be
-    discarded (never delivered), every pool must balance, and all other
-    requests' outputs must match the no-stop reference truncated at their
-    own first stop occurrence."""
+    source drain — exactly the moment its export gather lands.  Without
+    prefetch the record sits in the router's pending-handoff list; WITH
+    prefetch it was already adopted by the decode pool, and the stop hook
+    must chase it there and retract it.  Either way the staging record is
+    discarded (never counted delivered), every pool balances, and all other
+    requests' outputs match the no-stop reference truncated at their own
+    first stop occurrence."""
     reqs_ref = _two_wave()
     res_ref = _serve_single(reqs_ref)
     stop = res_ref.outputs[reqs_ref[0].req_id][0]
@@ -274,7 +323,7 @@ def test_killed_mid_handoff_leaks_nothing():
     reqs = _two_wave()
     for r in reqs:
         r.stop_token = stop
-    router = _build_pressured()
+    router = _build_pressured(prefetch=prefetch)
     res = serve_disagg(reqs, router)
 
     assert all(r.state == RequestState.FINISHED for r in reqs)

@@ -180,6 +180,51 @@ def test_paged_and_dense_greedy_outputs_identical_with_preemption():
 
 
 # ---------------------------------------------------------------------------
+# warmup coverage: the first serving round never pays a cold compile
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kv_layout,depth",
+                         [("split", 1), ("split", 2),
+                          ("fused", 1), ("fused", 2)],
+                         ids=["split-d1", "split-d2", "fused-d1", "fused-d2"])
+def test_warmup_covers_every_configured_shape(kv_layout, depth):
+    """After ``warmup(include_swap=True)`` a pressured serve — every chunk
+    bucket, forced swap-outs and restores — must add ZERO new entries to the
+    engine step's jit cache or the swap kernels', for every configured
+    ``(kv_layout, buffering_depth)``: no serving round ever eats a cold XLA
+    compile."""
+    from repro.kernels.swap import swap_gather_pages, swap_scatter_pages
+
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(n_slots=6, max_context=128,
+                                      paged_kv=True, pipelined=True,
+                                      kv_layout=kv_layout,
+                                      buffering_depth=depth,
+                                      preemption_mode="swap", seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=11, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True))
+    # bind BEFORE warmup: the pool's geometry shapes the cache array
+    eng.bind_kv_pool(pool)
+    eng.warmup(include_swap=True)
+    n_step = eng._step._cache_size()
+    n_gather = swap_gather_pages._cache_size()
+    n_scatter = swap_scatter_pages._cache_size()
+
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6)
+    )
+    reqs = _two_wave_shared_prefix()
+    res = serve(reqs, sched, eng, kv_pool=pool)
+    assert res.report.n_finished == len(reqs)
+    assert sched.stats.swap_preemptions > 0        # pressure actually bit
+    assert eng._step._cache_size() == n_step
+    assert swap_gather_pages._cache_size() == n_gather
+    assert swap_scatter_pages._cache_size() == n_scatter
+
+
+# ---------------------------------------------------------------------------
 # late slot binding (slot lifecycle regression)
 # ---------------------------------------------------------------------------
 

@@ -471,6 +471,47 @@ def test_double_swap_and_empty_swap_are_rejected():
     pool.check_invariants()
 
 
+def test_export_swap_inflight_requires_opt_in():
+    """Detaching a record whose gather has not drained is only legal on the
+    prefetch path (``allow_inflight=True``); the default still insists on
+    SWAPPED_OUT."""
+    pool = mk_pool(n_blocks=8, block_size=16)
+    pool.register_request(1)
+    pool.allocate(1, 20)
+    rec = pool.swap_out(1)               # SWAPPING: gather in flight
+    assert rec.state == BlockState.SWAPPING
+    with pytest.raises(AssertionError):
+        pool.export_swap(1)
+    rec2, reg = pool.export_swap(1, allow_inflight=True)
+    assert rec2 is rec and pool.swap_state(1) is None
+    pool.check_invariants()
+
+
+def test_finalize_record_is_location_transparent():
+    """Prefetch handoff lifecycle: a SWAPPING record exported from the source
+    pool and adopted by a destination pool is finalized IN PLACE by the
+    source drain (``finalize_record`` on the shared record object) — the
+    destination's ``swap_ready`` gate flips without the source pool ever
+    seeing the record again.  Payload arity is layout-dependent (two tensors
+    split, one fused); the pool must not care."""
+    for payload in (("k", "v"), ("kv",)):          # split / fused layouts
+        src, dst = mk_pool(), mk_pool()
+        src.register_request(1)
+        src.allocate(1, 40)
+        rec = src.swap_out(1)                      # gather still in flight
+        exported, reg = src.export_swap(1, allow_inflight=True)
+        dst.import_swap(1, exported, reg)
+        assert dst.swap_state(1) == BlockState.SWAPPING
+        assert not dst.swap_ready(1)               # restore must wait
+        KVBlockPool.finalize_record(rec, payload)  # source drain lands
+        assert dst.swap_ready(1)
+        ids, got = dst.swap_in(1)
+        assert got == payload and len(ids) == 3
+        assert src.swap_state(1) is None           # source holds nothing
+        src.check_invariants()
+        dst.check_invariants()
+
+
 def test_swap_in_raises_when_pool_exhausted():
     pool = mk_pool(n_blocks=4, block_size=16)
     pool.allocate(1, 60)                 # all 4 blocks

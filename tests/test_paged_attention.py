@@ -12,8 +12,14 @@ import pytest
 
 from repro.configs import tiny_config
 from repro.kernels import ref
-from repro.kernels.paged_decode_attention import paged_decode_attention
-from repro.kernels.paged_prefill_attention import paged_prefill_attention
+from repro.kernels.paged_decode_attention import (
+    paged_decode_attention,
+    paged_decode_attention_fused,
+)
+from repro.kernels.paged_prefill_attention import (
+    paged_prefill_attention,
+    paged_prefill_attention_fused,
+)
 from repro.models.model import build_model
 
 TOL_F32 = 1e-5
@@ -159,6 +165,101 @@ def test_paged_decode_tile_width_invariance(rng, pages_per_tile):
 
 
 # ---------------------------------------------------------------------------
+# double-buffered page DMA + fused head-interleaved layout
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+@pytest.mark.parametrize("pages_per_tile", [1, 2])
+def test_paged_decode_buffering_depth_invariance(rng, depth, pages_per_tile):
+    """Buffering depth is a pure DMA-schedule knob: every depth must
+    reproduce the gather oracle on ragged, non-tile-aligned kv_lens (a tail
+    shorter than the prologue's lookahead included)."""
+    B, Hq, Hkv, hd, ps, mp = 5, 8, 2, 32, 16, 5
+    q = _rand(rng, (B, Hq, hd), jnp.float32)
+    k_pages, v_pages, bt = _paged_setup(rng, B, Hkv, hd, ps, mp, jnp.float32)
+    kv_lens = jnp.asarray(
+        [1, ps - 1, pages_per_tile * ps + 1, 3 * ps + 7, mp * ps], jnp.int32
+    )
+    out = paged_decode_attention(q, k_pages, v_pages, bt, kv_lens,
+                                 pages_per_tile=pages_per_tile,
+                                 buffering_depth=depth)
+    want = ref.paged_decode_attention_ref(q, k_pages, v_pages, bt, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=TOL_F32, rtol=TOL_F32)
+
+
+@pytest.mark.parametrize("depth", [1, 2, 4])
+def test_paged_prefill_buffering_depth_invariance(rng, depth):
+    """Same for the chunked-prefill kernel: causal offset + ragged prefixes
+    under every DMA lookahead depth."""
+    B, Sq, Hq, Hkv, hd, ps, mp = 3, 32, 8, 2, 32, 16, 5
+    q = _rand(rng, (B, Sq, Hq, hd), jnp.float32)
+    k_pages, v_pages, bt = _paged_setup(rng, B, Hkv, hd, ps, mp, jnp.float32)
+    q_off = jnp.asarray([0, 7, mp * ps - Sq - 3], jnp.int32)
+    kv_lens = q_off + Sq
+    out = paged_prefill_attention(q, k_pages, v_pages, bt, kv_lens, q_off,
+                                  block_q=16, buffering_depth=depth)
+    want = ref.paged_prefill_attention_ref(
+        q, k_pages, v_pages, bt, kv_lens, q_off
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=TOL_F32, rtol=TOL_F32)
+
+
+def test_fused_layout_roundtrip(rng):
+    """fuse_pages interleaves K/V on the head axis; split_fused_pages must be
+    its exact inverse (the layout is pure data movement)."""
+    k = _rand(rng, (7, 16, 3, 32), jnp.float32)
+    v = _rand(rng, (7, 16, 3, 32), jnp.float32)
+    kv = ref.fuse_pages(k, v)
+    assert kv.shape == (7, 16, 6, 32)
+    k2, v2 = ref.split_fused_pages(kv)
+    np.testing.assert_array_equal(np.asarray(k2), np.asarray(k))
+    np.testing.assert_array_equal(np.asarray(v2), np.asarray(v))
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+@pytest.mark.parametrize("pages_per_tile", [1, 2])
+def test_paged_decode_fused_layout(rng, depth, pages_per_tile):
+    """The fused head-interleaved kernel (one DMA per page feeding both K
+    and V) must agree with the split kernel and with its own oracle."""
+    B, Hq, Hkv, hd, ps, mp = 4, 8, 2, 32, 16, 5
+    q = _rand(rng, (B, Hq, hd), jnp.float32)
+    k_pages, v_pages, bt = _paged_setup(rng, B, Hkv, hd, ps, mp, jnp.float32)
+    kv_pages = ref.fuse_pages(k_pages, v_pages)
+    kv_lens = jnp.asarray([1, ps - 1, 3 * ps + 7, mp * ps], jnp.int32)
+    out = paged_decode_attention_fused(q, kv_pages, bt, kv_lens,
+                                       pages_per_tile=pages_per_tile,
+                                       buffering_depth=depth)
+    split = paged_decode_attention(q, k_pages, v_pages, bt, kv_lens,
+                                   pages_per_tile=pages_per_tile,
+                                   buffering_depth=depth)
+    want = ref.paged_decode_attention_fused_ref(q, kv_pages, bt, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(split), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=TOL_F32, rtol=TOL_F32)
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_paged_prefill_fused_layout(rng, depth):
+    B, Sq, Hq, Hkv, hd, ps, mp = 3, 32, 8, 2, 32, 16, 5
+    q = _rand(rng, (B, Sq, Hq, hd), jnp.float32)
+    k_pages, v_pages, bt = _paged_setup(rng, B, Hkv, hd, ps, mp, jnp.float32)
+    kv_pages = ref.fuse_pages(k_pages, v_pages)
+    q_off = jnp.asarray([0, 7, mp * ps - Sq - 3], jnp.int32)
+    kv_lens = q_off + Sq
+    out = paged_prefill_attention_fused(q, kv_pages, bt, kv_lens, q_off,
+                                        block_q=16, buffering_depth=depth)
+    split = paged_prefill_attention(q, k_pages, v_pages, bt, kv_lens, q_off,
+                                    block_q=16, buffering_depth=depth)
+    want = ref.paged_prefill_attention_fused_ref(q, kv_pages, bt, kv_lens, q_off)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(split), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=TOL_F32, rtol=TOL_F32)
+
+
+# ---------------------------------------------------------------------------
 # paged chunked-prefill
 # ---------------------------------------------------------------------------
 
@@ -284,3 +385,69 @@ def test_chunked_step_paged_matches_dense(use_pallas):
         )
         assert (np.argmax(np.asarray(lp, np.float32), -1)
                 == np.argmax(np.asarray(ld, np.float32), -1)).all()
+
+
+@pytest.mark.parametrize("use_pallas", [False, True])
+@pytest.mark.parametrize("depth", [1, 2])
+def test_chunked_step_paged_fused_matches_split(use_pallas, depth):
+    """The fused head-interleaved cache through the same multi-round mixed
+    schedule must reproduce the split-layout logits EXACTLY (same dtype,
+    same accumulation order — only the scatter/gather layout changes)."""
+    cfg = tiny_config("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    impl = model.impl
+    B, S, bs = 2, 64, 16
+    hd = cfg.resolved_head_dim
+    rng = np.random.default_rng(11)
+    tokens_all = rng.integers(1, cfg.vocab_size, (B, S))
+
+    max_pages = S // bs
+    n_phys = 2 * B * max_pages + 1
+    split = {
+        "k": jnp.zeros((cfg.n_layers, n_phys, bs, cfg.n_kv_heads, hd), jnp.bfloat16),
+        "v": jnp.zeros((cfg.n_layers, n_phys, bs, cfg.n_kv_heads, hd), jnp.bfloat16),
+    }
+    fused = {
+        "kv": jnp.zeros((cfg.n_layers, n_phys, bs, 2 * cfg.n_kv_heads, hd),
+                        jnp.bfloat16),
+    }
+    ids = rng.permutation(n_phys - 1)[: B * max_pages]
+    bt = jnp.asarray(ids.reshape(B, max_pages), jnp.int32)
+
+    lens = jnp.zeros((B,), jnp.int32)
+    schedules = [
+        (np.asarray([16, 16]), 16),
+        (np.asarray([1, 16]), 16),
+        (np.asarray([1, 1]), 1),
+    ]
+    pos = np.zeros((B,), int)
+    for chunk_lens, C in schedules:
+        toks = np.ones((B, C), np.int64)
+        for b in range(B):
+            c = chunk_lens[b]
+            toks[b, :c] = tokens_all[b, pos[b] : pos[b] + c]
+            pos[b] += c
+        cl = jnp.asarray(chunk_lens, jnp.int32)
+        ls, split = impl.chunked_step_paged(
+            params, jnp.asarray(toks), split, lens, cl, bt,
+            use_pallas=use_pallas,
+        )
+        lf, fused = impl.chunked_step_paged(
+            params, jnp.asarray(toks), fused, lens, cl, bt,
+            use_pallas=use_pallas, kv_layout="fused", buffering_depth=depth,
+        )
+        lens = lens + cl
+        np.testing.assert_allclose(
+            np.asarray(lf, np.float32), np.asarray(ls, np.float32),
+            atol=2e-5, rtol=2e-5,
+        )
+        assert (np.argmax(np.asarray(lf, np.float32), -1)
+                == np.argmax(np.asarray(ls, np.float32), -1)).all()
+        # the fused pool holds exactly the split pool's content, interleaved
+        # on the head axis (even heads = K, odd heads = V)
+        kv = np.asarray(fused["kv"], np.float32)
+        np.testing.assert_array_equal(
+            kv[:, :, :, 0::2], np.asarray(split["k"], np.float32))
+        np.testing.assert_array_equal(
+            kv[:, :, :, 1::2], np.asarray(split["v"], np.float32))

@@ -36,11 +36,14 @@ def _two_wave_shared_prefix(seed=5, n=12, new_tokens=10):
 
 
 def _serve_pressured(*, mode: str, pipelined: bool, paged: bool,
-                     n_blocks: int = 11, use_pallas: bool = False):
+                     n_blocks: int = 11, use_pallas: bool = False,
+                     kv_layout: str = "split", buffering_depth: int = 1):
     cfg = tiny_config("qwen1.5-0.5b")
     eng = JAXEngine(cfg, EngineConfig(n_slots=6, max_context=128,
                                       paged_kv=paged, pipelined=pipelined,
                                       use_pallas=use_pallas,
+                                      kv_layout=kv_layout,
+                                      buffering_depth=buffering_depth,
                                       preemption_mode=mode, seed=3))
     pool = KVBlockPool(KVPoolConfig(n_blocks=n_blocks, block_size=16,
                                     bytes_per_token=4,
@@ -93,6 +96,52 @@ def test_swap_with_pallas_kernels_matches_dense_oracle():
     kernels + pipelined loop vs the dense sync pure-jnp oracle."""
     res_k, sched_k, _, reqs_k = _serve_pressured(
         mode="swap", pipelined=True, paged=True, use_pallas=True)
+    res_o, _, _, reqs_o = _serve_pressured(
+        mode="recompute", pipelined=False, paged=False)
+    assert sched_k.stats.swap_preemptions > 0
+    for a, b in zip(reqs_k, reqs_o):
+        assert res_k.outputs[a.req_id] == res_o.outputs[b.req_id]
+
+
+# ---------------------------------------------------------------------------
+# fused KV layout + double-buffered DMA: swap parity must survive both knobs
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def split_swap_baseline():
+    """One pressured split-layout sync swap run shared by the layout/depth
+    parity matrix below."""
+    res, sched, _, reqs = _serve_pressured(
+        mode="swap", pipelined=False, paged=True)
+    assert sched.stats.swap_preemptions > 0
+    return res, reqs
+
+
+@pytest.mark.parametrize("pipelined", [True, False], ids=["pipelined", "sync"])
+@pytest.mark.parametrize("depth", [1, 2])
+def test_fused_layout_swap_outputs_bit_identical(split_swap_baseline,
+                                                 pipelined, depth):
+    """Greedy outputs under the fused head-interleaved pool, at every
+    buffering depth, in both loop modes, must be bit-identical to the split
+    layout through real forced swap preemptions — the pool layout and the
+    DMA schedule are pure data movement."""
+    base_res, base_reqs = split_swap_baseline
+    res, sched, _, reqs = _serve_pressured(
+        mode="swap", pipelined=pipelined, paged=True,
+        kv_layout="fused", buffering_depth=depth)
+    assert sched.stats.swap_preemptions > 0
+    assert sched.stats.swap_restores == sched.stats.swap_preemptions
+    for a, b in zip(reqs, base_reqs):
+        assert res.outputs[a.req_id] == base_res.outputs[b.req_id]
+
+
+def test_fused_swap_with_pallas_kernels_matches_dense_oracle():
+    """Deepest stack: fused layout + depth-2 double buffering + pallas swap
+    and attention kernels + pipelined loop vs the dense sync jnp oracle."""
+    res_k, sched_k, _, reqs_k = _serve_pressured(
+        mode="swap", pipelined=True, paged=True, use_pallas=True,
+        kv_layout="fused", buffering_depth=2)
     res_o, _, _, reqs_o = _serve_pressured(
         mode="recompute", pipelined=False, paged=False)
     assert sched_k.stats.swap_preemptions > 0
@@ -228,8 +277,11 @@ def test_swapping_record_defers_restore_until_finalized():
 
 
 @pytest.mark.parametrize("use_pallas", [False, True], ids=["jnp", "pallas"])
-def test_swap_gather_scatter_roundtrip(use_pallas, rng):
-    L, P, bs, H, hd = 2, 9, 8, 2, 16
+@pytest.mark.parametrize("H", [2, 4], ids=["split", "fused"])
+def test_swap_gather_scatter_roundtrip(use_pallas, H, rng):
+    # H=4 is the fused head-interleaved pool shape (2*Hkv on the head axis):
+    # the swap kernels must be shape-generic over the trailing dims
+    L, P, bs, hd = 2, 9, 8, 16
     pages = jnp.asarray(rng.normal(size=(L, P, bs, H, hd)).astype(np.float32))
     ids = jnp.asarray(np.array([5, 2, 7], np.int32))
     staged = swap_gather_pages(pages, ids, use_pallas=use_pallas)
