@@ -21,6 +21,7 @@ class APCStats:
     blocked_by_cap: int = 0
     blocked_by_min_chunk: int = 0
     warm_starts: int = 0
+    slo_overrides: int = 0  # urgent chunks that bypassed the cap/min-chunk gates
 
 
 def activity_cap(
@@ -31,11 +32,16 @@ def activity_cap(
     token_budget: int,      # B_max
     committed: int,         # U_t
 ) -> int:
-    """Eq. 12 — C_t = min(C_max, S_max - |D_t|, floor((B_max - U_t)/L_min))."""
-    return min(
-        cfg.c_max,
-        max_seqs - n_decode,
-        (token_budget - committed) // cfg.l_min,
+    """Eq. 12 — C_t = min(C_max, S_max - |D_t|, floor((B_max - U_t)/L_min)),
+    clamped to >= 0: an over-committed round (U_t > B_max) or a decode set
+    at S_max means *no* prefill slots, not a negative count."""
+    return max(
+        0,
+        min(
+            cfg.c_max,
+            max_seqs - n_decode,
+            (token_budget - committed) // cfg.l_min,
+        ),
     )
 
 
@@ -53,11 +59,20 @@ def apply(
     upper_bound: int,       # h_i
     n_active_prefills: int, # |P_t| — unfinished prefills already in this batch
     cap: int,               # C_t from activity_cap()
+    urgent: bool = False,   # SLO tier: deadline-critical request (apc_protect)
 ) -> int:
-    """Eq. 14 — returns the final chunk c_i (0 = blocked this round)."""
+    """Eq. 14 — returns the final chunk c_i (0 = blocked this round).
+
+    ``urgent`` is the SLO tier's protection valve: a request whose deadline
+    is feasible only if served now is never blocked by the activity cap or
+    the min-chunk rule — it gets the deadline-feasible chunk regardless.
+    """
     m_i = min_effective_progress(cfg, remaining)
     if n_active_prefills < cap and proposed >= m_i and proposed > 0:
         return proposed
+    if urgent and upper_bound >= 1:
+        stats.slo_overrides += 1
+        return proposed if proposed > 0 else min(upper_bound, m_i)
     if proposed < m_i and n_active_prefills == 0 and upper_bound >= 1:
         stats.warm_starts += 1
         return min(upper_bound, m_i)

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 import numpy as np
 
@@ -69,8 +70,13 @@ def select_chunk(
     processed: int,                 # request's historical prefill progress
     predictor,                      # .predict((n,16)) -> (n,) ms
     cfg: LPRSConfig,
+    target_ms: Optional[float] = None,  # deadline-derived T* override (SLO tier)
 ) -> int:
-    """Algorithm 1 — returns c_i^* (0 = skip this round)."""
+    """Algorithm 1 — returns c_i^* (0 = skip this round).
+
+    ``target_ms`` lets the SLO tier substitute the *tightest admitted
+    deadline's* per-round budget for the static ``cfg.target_latency_ms``.
+    """
     h_i = min(remaining, token_budget - committed)
     if h_i <= 0:
         return 0
@@ -81,7 +87,8 @@ def select_chunk(
         [batch_state.with_extra_prefill(int(c), processed).features() for c in cands]
     )
     preds = np.asarray(predictor.predict(feats), np.float64).reshape(-1)
-    scores = score(preds, cfg.target_latency_ms, cfg.lambda_under, cfg.lambda_over)
+    target = cfg.target_latency_ms if target_ms is None else float(target_ms)
+    scores = score(preds, target, cfg.lambda_under, cfg.lambda_over)
 
     # arg-min; ties broken toward the larger chunk (Algorithm 1 lines 16-21)
     best = 0

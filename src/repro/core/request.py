@@ -70,6 +70,12 @@ class Request:
     # with the old slot, so the first post-restore decode round must stage
     # the last delivered token id from the host instead of consuming it
     needs_replay: bool = False
+    # SLO load shedding: the request was retired WITHOUT service completion
+    # because its deadline was projected infeasible ("admission" at submit,
+    # "deadline" from the queue).  Shed requests are FINISHED with
+    # finish_time None — they count in the shed attainment bucket, never as
+    # violations.
+    shed_reason: Optional[str] = None
 
     @property
     def remaining_prefill(self) -> int:

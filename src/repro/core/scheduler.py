@@ -26,6 +26,7 @@ from repro.core.features import BatchState
 from repro.core.lprs import LPRSConfig, predicted_resume_rounds, select_chunk
 from repro.core.policies import PrefillQueue, make_policy
 from repro.core.request import Request, RequestState
+from repro.core.slo import SLOConfig, SLOTracker
 
 if TYPE_CHECKING:  # imported lazily at runtime: tenancy itself imports core
     from repro.tenancy import FairnessState
@@ -42,6 +43,10 @@ class SchedulerConfig:
     lprs: Optional[LPRSConfig] = None # None = static token-budget chunking
     apc: Optional[APCConfig] = None   # None = APC off
     fairness: Optional["FairnessConfig"] = None  # None = single-tenant queue
+    # SLO serving tier: per-tenant TTFT/E2E deadlines drive LPRS targets,
+    # victim selection, APC protection, and load shedding.  Requires
+    # ``fairness`` (the deadlines live on TenantSpec); None = tier off.
+    slo: Optional[SLOConfig] = None
     # cache-aware aging credit: priority bonus per token of the request's
     # context already materialized on the attached pool (held blocks, a
     # host-staged swap record one restore round from runnable, or an indexed
@@ -103,6 +108,7 @@ class SchedulerStats:
     late_stops: int = 0                 # stop-token terminations applied at drain
     refunded_decode_tokens: int = 0     # over-scheduled decodes unwound by stops
     exports: int = 0                    # requests detached for cross-replica handoff
+    sheds: int = 0                      # SLO load shedding (admission + queue)
     apc: APCStats = field(default_factory=APCStats)
 
     @property
@@ -159,6 +165,21 @@ class ChunkedPrefillScheduler:
                 cfg.policy, alpha=cfg.alpha, beta=cfg.beta,
                 credit_fn=credit_fn,
             )
+        # SLO tier: the tracker projects deadlines/feasibility; the fairness
+        # subsystem gains the admission shed gate + fair-queue urgency
+        self.slo: Optional[SLOTracker] = None
+        if cfg.slo is not None:
+            if self.fairness is None:
+                raise ValueError(
+                    "SchedulerConfig.slo requires fairness: deadlines live on "
+                    "TenantSpec (ttft_slo_s / e2e_slo_s)"
+                )
+            self.slo = SLOTracker(
+                cfg.slo, self.fairness.registry, token_budget=cfg.token_budget
+            )
+            self.fairness.attach_slo(self.slo)
+        self._prev_round_busy = False
+        self._now = 0.0                 # last schedule() clock (victim ranking)
         # decoding membership is maintained INCREMENTALLY (insert on prefill
         # completion, O(1) pop on finish/preemption) — never rebuilt with a
         # full-population comprehension inside the per-round hot path
@@ -254,6 +275,12 @@ class ChunkedPrefillScheduler:
             decision = self.fairness.admit(req)
             if not decision.admitted:
                 req.state = RequestState.FINISHED
+                if decision.shed:
+                    # SLO load shedding: the deadline was infeasible on
+                    # arrival — shed, not rejected-for-rate (finish_time
+                    # stays None either way; metrics split on shed_reason)
+                    req.shed_reason = "admission"
+                    self.stats.sheds += 1
                 return False
             if decision.delayed:
                 self.queue.add_delayed(req, decision.ready_at)
@@ -349,6 +376,11 @@ class ChunkedPrefillScheduler:
         batch = ScheduledBatch(round_idx=self._round)
         self._round += 1
         self.stats.rounds += 1
+        self._now = now
+        if self.slo is not None:
+            # fold the previous round's wall time into the EWMA round cost
+            # that prices every deadline projection this round
+            self.slo.begin_round(now, self._prev_round_busy)
         if self.fairness is not None:
             self.fairness.on_round(now)
         if self.kv_pool is not None:
@@ -388,6 +420,21 @@ class ChunkedPrefillScheduler:
             st.hbm_allocated_mb = self.kv_pool.allocated_mb
             st.hbm_reserved_mb = self.kv_pool.reserved_mb
 
+        # deadline-aware LPRS: the tightest admitted deadline (decode set +
+        # queued backlog) replaces the static T* for every chunk search this
+        # round — slack is spread over predicted_resume_rounds per request
+        slo_target_ms = None
+        if (
+            self.slo is not None
+            and self.slo.cfg.deadline_lprs
+            and cfg.lprs is not None
+        ):
+            slo_target_ms = self.slo.round_target_ms(
+                list(batch.decode_reqs) + list(self.queue.requests()),
+                now,
+                cfg.lprs.target_latency_ms,
+            )
+
         # 2.-3. rank prefill candidates, allocate residual budget in order
         cap = (
             activity_cap(
@@ -423,6 +470,19 @@ class ChunkedPrefillScheduler:
             req = self.queue.pop()
             if req is None:
                 break
+
+            # SLO load shedding, queue leg: a waiting request whose deadline
+            # can no longer be met even at max priority is retired now —
+            # burning budget on a guaranteed miss would only push OTHER
+            # requests past their deadlines.  (Admission sheds on arrival;
+            # this catches deadlines that died while queued or swapped out.)
+            if (
+                self.slo is not None
+                and self.slo.cfg.shed
+                and not self.slo.feasible(req, now)
+            ):
+                self.shed_request(req, reason="deadline")
+                continue
 
             # swap-out victims come back through the SAME fair queue, but a
             # restore (swap-in) replaces the recompute prefill: one round, not
@@ -477,12 +537,20 @@ class ChunkedPrefillScheduler:
                     processed=req.prefill_done,
                     predictor=self.predictor,
                     cfg=cfg.lprs,
+                    target_ms=slo_target_ms,
                 )
             else:
                 c = h_i
 
-            # APC gate (Eq. 14)
+            # APC gate (Eq. 14); a deadline-urgent request's chunk bypasses
+            # the cap/min-chunk blocks (SLO tier: a protected tenant's
+            # prefill is never blocked below the deadline-feasible chunk)
             if cfg.apc is not None:
+                urgent = (
+                    self.slo is not None
+                    and self.slo.cfg.apc_protect
+                    and self.slo.urgent(req, now)
+                )
                 c = apc_apply(
                     cfg.apc,
                     self.stats.apc,
@@ -491,6 +559,7 @@ class ChunkedPrefillScheduler:
                     upper_bound=h_i,
                     n_active_prefills=n_active_prefills,
                     cap=cap,
+                    urgent=urgent,
                 )
 
             # KV gate: shrink the chunk to what the pool (and the tenant's
@@ -545,7 +614,30 @@ class ChunkedPrefillScheduler:
         self.stats.scheduled_prefill_seqs += len(batch.prefill_chunks)
         self.stats.scheduled_prefill_tokens += batch.prefill_tokens
         self.stats.scheduled_decode_tokens += batch.decode_tokens
+        self._prev_round_busy = not batch.is_empty()
         return batch
+
+    def shed_request(self, req: Request, *, reason: str) -> None:
+        """SLO load shedding: retire a request whose deadline is projected
+        infeasible.  Mirrors the ``on_stop`` unwinding (minus the phantom
+        batch): queue membership, KV blocks AND any host-staged swap record
+        are refunded, the engine slot frees, fairness bookkeeping forgets it.
+        The request ends FINISHED with ``finish_time`` None and
+        ``shed_reason`` set — the shed attainment bucket, never a violation."""
+        self._decoding.pop(req.req_id, None)
+        self._bound_slots.discard(req.req_id)
+        if req in self.queue:
+            self.queue.remove(req)
+        if self._books():
+            self.kv_pool.drop_swap(req.req_id)
+            self.kv_pool.release(req.req_id)
+        if self._slot_releaser is not None:
+            self._slot_releaser(req)
+        if self.fairness is not None:
+            self.fairness.forget(req)
+        req.shed_reason = reason
+        req.state = RequestState.FINISHED
+        self.stats.sheds += 1
 
     # -- KV booking / preemption ---------------------------------------------
     def _book_decode_blocks(
@@ -657,14 +749,23 @@ class ChunkedPrefillScheduler:
         requests and queued (partially prefilled) requests, excluding anything
         already committed to this round's batch.  Only a STRICTLY younger
         victim is eligible — an older request is never preempted for a newer
-        one, which makes eviction thrash-free (total order on arrivals)."""
+        one, which makes eviction thrash-free (total order on arrivals).
+
+        With the SLO tier's ``victim_weighting`` on, eligible victims are
+        ranked by projected SLO attainment first (a request already violating
+        or infeasible sheds before best-effort traffic; a protected,
+        deadline-feasible request sheds last), youngest-arrival within a
+        class.  Eligibility itself stays strictly-younger in every mode —
+        the thrash-freedom total order is load-bearing."""
         pool = self.kv_pool
         best: Optional[Request] = None
+        best_key = None
         candidates = (
             list(self._decoding.values())
             + list(self.queue.requests())
             + list(self._deferred_this_round)
         )
+        weighted = self.slo is not None and self.slo.cfg.victim_weighting
         for r in candidates:
             if r.req_id == requester.req_id or r.req_id in scheduled_ids:
                 continue
@@ -674,9 +775,11 @@ class ChunkedPrefillScheduler:
                 continue
             if (r.arrival_time, r.req_id) <= (requester.arrival_time, requester.req_id):
                 continue
-            if best is None or (r.arrival_time, r.req_id) > (best.arrival_time,
-                                                             best.req_id):
-                best = r
+            key = (r.arrival_time, r.req_id)
+            if weighted:
+                key = (self.slo.victim_class(r, self._now),) + key
+            if best_key is None or key > best_key:
+                best, best_key = r, key
         return best
 
     def _preempt(self, victim: Request, batch: ScheduledBatch) -> None:

@@ -44,7 +44,10 @@ from repro.engine.engine import (
     EngineConfig, JAXEngine, ReplicaServer, compress_idle_gap,
 )
 from repro.engine.kv_cache import pool_for_model
-from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
+from repro.engine.metrics import (
+    LatencyReport, MemoryReport, SLOReport, summarize, summarize_memory,
+    summarize_slo,
+)
 
 
 @dataclass
@@ -81,6 +84,7 @@ class DisaggResult:
     colocated: int                      # completions the cost policy kept local
     bytes_moved: int
     memory: Optional[List[MemoryReport]] = None
+    slo: Optional[SLOReport] = None     # fleet-wide per-tenant attainment
 
 
 class DisaggregatedRouter:
@@ -354,4 +358,12 @@ def serve_disagg(
             summarize_memory(rs.kv_pool, rs.sched.stats)
             for rs in router.replicas
         ],
+        # attainment is a property of the request set, not a replica: one
+        # fleet-wide report against the prefill pool's registry (all replicas
+        # share the tenant specs via the common FairnessConfig)
+        slo=(
+            summarize_slo(requests, router.prefill[0].sched.fairness.registry)
+            if router.prefill and router.prefill[0].sched.fairness is not None
+            else None
+        ),
     )

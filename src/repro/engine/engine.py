@@ -46,7 +46,10 @@ from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch
 from repro.engine.costmodel import CostModel, CostModelConfig
 from repro.engine.kv_cache import KVBlockPool, KVPoolConfig, PAGED_RESIDENT
-from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
+from repro.engine.metrics import (
+    LatencyReport, MemoryReport, SLOReport, summarize, summarize_memory,
+    summarize_slo,
+)
 from repro.kernels.ops import gather_swap_pages, scatter_swap_pages
 from repro.engine.sampler import SamplerConfig, sample_tokens
 from repro.models.model import Model, build_model
@@ -671,6 +674,7 @@ class ServeResult:
     outputs: Optional[Dict[int, List[int]]] = None
     memory: Optional[MemoryReport] = None     # KV pool lifecycle summary
     host_bubble_ms: Optional[List[float]] = None   # device-idle gap per round
+    slo: Optional[SLOReport] = None           # per-tenant attainment gauges
 
 
 def compress_idle_gap(pending: List[Request], next_i: int, now: float) -> None:
@@ -1058,4 +1062,8 @@ def serve(
             summarize_memory(kv_pool, scheduler.stats) if kv_pool is not None else None
         ),
         host_bubble_ms=list(engine.bubble_ms),
+        slo=(
+            summarize_slo(requests, scheduler.fairness.registry)
+            if scheduler.fairness is not None else None
+        ),
     )

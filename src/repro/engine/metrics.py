@@ -11,7 +11,7 @@ from typing import Dict, Iterable, List, Optional, Sequence
 
 import numpy as np
 
-from repro.core.request import Request
+from repro.core.request import Request, RequestState
 
 PCTS = (50, 80, 90, 95, 99)
 
@@ -232,4 +232,126 @@ def summarize_by_tenant(
         normalized_service=normalized,
         jain=jain_index(vals),
         max_service_delta=delta,
+    )
+
+
+# ---------------------------------------------------------------------------
+# SLO attainment metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class SLOTenantReport:
+    """Attainment buckets for one tenant — every terminal request lands in
+    exactly ONE of {attained, violated, shed, rejected}:
+
+      * ``attained``  — served to completion, every configured SLO met
+        (vacuously attained when the tenant has no SLOs)
+      * ``violated``  — served to completion past a TTFT or E2E target
+      * ``shed``      — retired WITHOUT service by SLO load shedding
+        (``Request.shed_reason``: "admission" or "deadline")
+      * ``rejected``  — refused without service for a non-SLO reason
+        (hard token-bucket quota)
+
+    ``finished`` is attained + violated (requests that completed service);
+    the bucket identity attained + violated + shed == finished + rejected +
+    (shed - rejected) reduces to the partition check
+    attained + violated + shed + rejected == terminal requests, which the
+    property suite fuzzes.  ``attainment`` counts sheds against the tenant:
+    attained / (attained + violated + shed)."""
+
+    attained: int
+    violated: int
+    shed: int
+    rejected: int
+    finished: int
+    attainment: float
+    ttft_slack_s: Dict[str, float]   # percentiles of (ttft_slo - ttft), finished reqs
+    e2e_slack_s: Dict[str, float]    # percentiles of (e2e_slo - e2e), finished reqs
+
+
+@dataclass
+class SLOReport:
+    """Per-tenant SLO-attainment gauges for one serving run (the llmserve
+    prometheus-exporter shape, aggregated at end of run)."""
+
+    per_tenant: Dict[str, SLOTenantReport]
+    attained: int
+    violated: int
+    shed: int
+    rejected: int
+    attainment: float
+
+    def row(self) -> Dict[str, float]:
+        out = {
+            "attained": float(self.attained),
+            "violated": float(self.violated),
+            "shed": float(self.shed),
+            "attainment": self.attainment,
+        }
+        for t, rep in self.per_tenant.items():
+            out[f"{t}/attainment"] = rep.attainment
+            out[f"{t}/violated"] = float(rep.violated)
+            out[f"{t}/shed"] = float(rep.shed)
+        return out
+
+
+def summarize_slo(requests: Iterable[Request], registry) -> SLOReport:
+    """Classify every request into the attainment buckets against its
+    tenant's ``ttft_slo_s``/``e2e_slo_s``.  ``registry`` is duck-typed:
+    ``.get(name) -> spec`` (a ``TenantRegistry`` works).  Requests still in
+    flight (not FINISHED) are not counted in any bucket."""
+    by_tenant: Dict[str, List[Request]] = {}
+    for r in requests:
+        by_tenant.setdefault(r.tenant, []).append(r)
+
+    per_tenant: Dict[str, SLOTenantReport] = {}
+    for t, rs in sorted(by_tenant.items()):
+        spec = registry.get(t)
+        ttft_slo = getattr(spec, "ttft_slo_s", None)
+        e2e_slo = getattr(spec, "e2e_slo_s", None)
+        attained = violated = shed = rejected = 0
+        ttft_slack: List[float] = []
+        e2e_slack: List[float] = []
+        for r in rs:
+            if r.finish_time is not None:
+                viol = False
+                if ttft_slo is not None and r.ttft() is not None:
+                    ttft_slack.append(ttft_slo - r.ttft())
+                    viol |= r.ttft() > ttft_slo
+                if e2e_slo is not None and r.e2e_latency() is not None:
+                    e2e_slack.append(e2e_slo - r.e2e_latency())
+                    viol |= r.e2e_latency() > e2e_slo
+                if viol:
+                    violated += 1
+                else:
+                    attained += 1
+            elif r.state == RequestState.FINISHED:
+                # terminal without service: SLO shed or hard-quota reject
+                if r.shed_reason is not None:
+                    shed += 1
+                else:
+                    rejected += 1
+        per_tenant[t] = SLOTenantReport(
+            attained=attained,
+            violated=violated,
+            shed=shed,
+            rejected=rejected,
+            finished=attained + violated,
+            attainment=attained / max(attained + violated + shed, 1),
+            ttft_slack_s=percentiles(ttft_slack),
+            e2e_slack_s=percentiles(e2e_slack),
+        )
+
+    tot_a = sum(r.attained for r in per_tenant.values())
+    tot_v = sum(r.violated for r in per_tenant.values())
+    tot_s = sum(r.shed for r in per_tenant.values())
+    tot_r = sum(r.rejected for r in per_tenant.values())
+    return SLOReport(
+        per_tenant=per_tenant,
+        attained=tot_a,
+        violated=tot_v,
+        shed=tot_s,
+        rejected=tot_r,
+        attainment=tot_a / max(tot_a + tot_v + tot_s, 1),
     )

@@ -36,7 +36,10 @@ from repro.core.request import Request, RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
 from repro.engine.costmodel import CostModel
 from repro.engine.kv_cache import KVBlockPool
-from repro.engine.metrics import LatencyReport, MemoryReport, summarize, summarize_memory
+from repro.engine.metrics import (
+    LatencyReport, MemoryReport, SLOReport, summarize, summarize_memory,
+    summarize_slo,
+)
 
 
 @dataclass
@@ -48,6 +51,7 @@ class SimResult:
     samples: Optional[Tuple[np.ndarray, np.ndarray]] = None  # (features, latency_ms)
     scheduler_stats: Optional[object] = None
     memory: Optional[MemoryReport] = None     # KV pool lifecycle summary
+    slo: Optional[SLOReport] = None           # per-tenant attainment gauges
 
 
 class ServingSimulator:
@@ -163,6 +167,10 @@ class ServingSimulator:
             memory=(
                 summarize_memory(self.kv_pool, self.sched.stats)
                 if self.kv_pool is not None else None
+            ),
+            slo=(
+                summarize_slo(requests, self.sched.fairness.registry)
+                if self.sched.fairness is not None else None
             ),
         )
 

@@ -16,6 +16,8 @@ from repro.core.apc import APCConfig
 from repro.core.lprs import LPRSConfig
 from repro.core.predictor import LatencyPredictor, PredictorConfig, bucket_and_downsample
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.core.slo import SLOConfig
+from repro.tenancy.tenants import FairnessConfig, TenantSpec
 from repro.engine.engine import EngineConfig, JAXEngine, serve
 from repro.engine.kv_cache import pool_for_model
 from repro.engine.workload import (
@@ -182,6 +184,15 @@ def main(argv=None):
     ap.add_argument("--handoff-cost", action="store_true",
                     help="price each handoff against colocated contention "
                          "instead of always migrating (with --disagg)")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="time-to-first-token SLO in seconds for the serving "
+                         "tenant (0 = off).  Setting either SLO enables the "
+                         "SLO tier: deadline-aware LPRS targets, urgency-"
+                         "ordered batching, SLO-weighted victim selection, "
+                         "and load shedding of infeasible deadlines")
+    ap.add_argument("--e2e-slo", type=float, default=0.0,
+                    help="end-to-end completion SLO in seconds for the "
+                         "serving tenant (0 = off; see --ttft-slo)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
@@ -207,12 +218,26 @@ def main(argv=None):
             target = 30.0
         lprs_cfg = LPRSConfig(target_latency_ms=target, search_delta=32)
 
+    fairness_cfg = None
+    slo_cfg = None
+    if args.ttft_slo > 0 or args.e2e_slo > 0:
+        # SLO tier: the workload's single "default" tenant carries the
+        # deadlines; fairness is required (the tracker lives on its registry)
+        fairness_cfg = FairnessConfig(tenants=(TenantSpec(
+            "default",
+            ttft_slo_s=args.ttft_slo if args.ttft_slo > 0 else None,
+            e2e_slo_s=args.e2e_slo if args.e2e_slo > 0 else None,
+        ),))
+        slo_cfg = SLOConfig()
+
     sched = ChunkedPrefillScheduler(
         SchedulerConfig(
             policy=args.policy, alpha=args.alpha, beta=args.beta,
             token_budget=args.token_budget, max_seqs=16,
             lprs=lprs_cfg,
             apc=APCConfig(c_max=4, l_min=16) if args.apc else None,
+            fairness=fairness_cfg,
+            slo=slo_cfg,
         ),
         predictor=predictor,
     )
@@ -249,10 +274,17 @@ def main(argv=None):
                   f"({mem.swapped_out_tokens} tokens out, "
                   f"{mem.swapped_in_tokens} restored over "
                   f"{mem.swap_restores} swap-ins)")
+    if res.slo is not None:
+        for t, rep in res.slo.per_tenant.items():
+            print(f"  slo[{t}]: attained={rep.attained} "
+                  f"violated={rep.violated} shed={rep.shed} "
+                  f"attainment={rep.attainment:.2%} "
+                  f"p50_ttft_slack={rep.ttft_slack_s['p50'] * 1e3:.1f} ms")
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"report": row, "rounds": res.rounds, "wall_s": res.wall_s,
-                       "memory": mem.row() if mem is not None else None}, f)
+                       "memory": mem.row() if mem is not None else None,
+                       "slo": res.slo.row() if res.slo is not None else None}, f)
 
 
 if __name__ == "__main__":

@@ -72,9 +72,23 @@ class FairnessState:
             extra_active_fn=self._decoding_tenants,
         )
         self.rejected: List[Request] = []
+        self.shed: List[Request] = []          # SLO-shed at admission
+        self.slo = None                        # SLOTracker (attach_slo)
 
     def _decoding_tenants(self) -> List[str]:
         return [t for t, ids in self._decoding.items() if ids]
+
+    def attach_slo(self, tracker) -> None:
+        """Wire an ``SLOTracker`` (built by the scheduler from
+        ``SchedulerConfig.slo``) into the fairness subsystem: the admission
+        controller gains the feasibility shed gate and the fair queue gains
+        deadline urgency.  Each hook is gated on its feature flag so an
+        all-flags-off tracker leaves behavior bit-identical."""
+        self.slo = tracker
+        if self.admission is not None and tracker.cfg.shed:
+            self.admission.slo_gate = tracker.feasible
+        if tracker.cfg.queue_urgency:
+            self.queue.urgency_fn = tracker.urgent
 
     # -- scheduler hooks -------------------------------------------------------
     def admit(self, req: Request) -> AdmissionDecision:
@@ -86,7 +100,7 @@ class FairnessState:
                                      penalized=False)
         decision = self.admission.assess(req)
         if not decision.admitted:
-            self.rejected.append(req)
+            (self.shed if decision.shed else self.rejected).append(req)
         return decision
 
     def on_preempt(self, req: Request) -> None:

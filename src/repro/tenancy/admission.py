@@ -74,6 +74,7 @@ class AdmissionDecision:
     penalty_expires_at: float = 0.0
     delayed: bool = False       # queue policy: hold until ready_at
     ready_at: float = 0.0
+    shed: bool = False          # SLO tier: deadline projected infeasible
 
 
 @dataclass
@@ -83,6 +84,7 @@ class AdmissionStats:
     rejected: int = 0
     penalties: int = 0          # violations that opened/extended a window
     queued: int = 0             # requests delayed until bucket refill
+    shed: int = 0               # SLO load shedding at admission
 
 
 class AdmissionController:
@@ -101,6 +103,10 @@ class AdmissionController:
         self._buckets: Dict[str, TokenBucket] = {}
         self._penalty_until: Dict[str, float] = {}
         self.stats = AdmissionStats()
+        # SLO tier (FairnessState.attach_slo): feasibility gate called as
+        # slo_gate(req, now) -> bool; False sheds the request at admission —
+        # the "reject when the deadline is unattainable" leg of load shedding
+        self.slo_gate = None
 
     def _bucket(self, spec: TenantSpec, now: float) -> TokenBucket:
         b = self._buckets.get(spec.name)
@@ -124,6 +130,13 @@ class AdmissionController:
         if now is None:
             now = req.arrival_time
         self.stats.assessed += 1
+        if self.slo_gate is not None and not self.slo_gate(req, now):
+            # infeasible deadline: shedding now is strictly better than
+            # admitting work that must miss — no bucket charge, no penalty
+            self.stats.shed += 1
+            return AdmissionDecision(
+                tenant=req.tenant, admitted=False, penalized=False, shed=True
+            )
         spec = self.registry.get(req.tenant)
         if spec.rate_tokens_per_s <= 0:          # unlimited tenant
             self.stats.admitted += 1

@@ -51,6 +51,11 @@ class FairPrefillQueue:
         # ``queue`` admission policy holding pen: (ready_at, req_id, req)
         self._delayed: List[Tuple[float, int, Request]] = []
         self.now = 0.0                          # scheduler clock (penalty expiry)
+        # SLO tier (FairnessState.attach_slo): urgency_fn(head_req, now) ->
+        # bool.  A tenant whose HEAD request is deadline-urgent jumps the
+        # VTC order (FairBatching-style SLO-driven batch formation); among
+        # urgent tenants — and always when unset — VTC order still rules.
+        self.urgency_fn: Optional[Callable[[Optional[Request], float], bool]] = None
 
     # -- clock ----------------------------------------------------------------
     def set_now(self, now: float) -> None:
@@ -111,7 +116,15 @@ class FairPrefillQueue:
                 if self.admission is not None
                 else False
             )
-            key = (penalized, self.vtc.virtual_service(t), t)
+            urgent = (
+                bool(self.urgency_fn(q.peek(), self.now))
+                if self.urgency_fn is not None
+                else False
+            )
+            # `not urgent` is the constant True when no urgency_fn is
+            # attached — ordering then reduces to (penalized, vtc, t),
+            # bit-identical to the SLO-less queue
+            key = (penalized, not urgent, self.vtc.virtual_service(t), t)
             if best_key is None or key < best_key:
                 best, best_key = t, key
         return best

@@ -7,8 +7,9 @@ REQUESTS; the tenancy subsystem layers fairness across TENANTS on top of it
 when every individual request is aged correctly.
 
 ``TenantSpec`` carries the per-tenant knobs: a weight (proportional share of
-service), an optional token-bucket rate limit (tokens/s + burst), and an
-optional TTFT SLO used for reporting.  ``TenantRegistry`` resolves specs at
+service), an optional token-bucket rate limit (tokens/s + burst), and
+optional TTFT/E2E latency SLOs (reported always; enforced by the scheduler
+when ``SchedulerConfig.slo`` is set).  ``TenantRegistry`` resolves specs at
 runtime and — by default — auto-registers unknown tenants with weight 1 so
 untagged traffic keeps working.
 """
@@ -26,7 +27,11 @@ class TenantSpec:
     weight: float = 1.0                    # proportional service share (>0)
     rate_tokens_per_s: float = 0.0         # token-bucket rate; 0 = unlimited
     burst_tokens: float = 0.0              # bucket depth; 0 = 2x rate
-    ttft_slo_s: Optional[float] = None     # reporting-only SLO target
+    # latency SLOs.  Reporting gauges always; with ``SchedulerConfig.slo``
+    # set they additionally DRIVE the scheduler (deadline-aware LPRS,
+    # SLO-weighted victim selection, APC protection, load shedding).
+    ttft_slo_s: Optional[float] = None     # time-to-first-token target
+    e2e_slo_s: Optional[float] = None      # end-to-end completion target
     # KV-cache quota as a fraction of the block pool this tenant may PIN at
     # once (None = unlimited).  Enforced by KVBlockPool at allocation and at
     # prefix-cache acquisition; over-quota chunks are deferred or trigger

@@ -139,7 +139,36 @@ def test_activity_cap_eq12(n_decode, max_seqs, budget, committed, c_max, l_min):
     cfg = APCConfig(c_max=c_max, l_min=l_min)
     cap = activity_cap(cfg, n_decode=n_decode, max_seqs=max_seqs,
                        token_budget=budget, committed=committed)
-    assert cap == min(c_max, max_seqs - n_decode, (budget - committed) // l_min)
+    # Eq. 12, clamped to 0: a decode-saturated or over-committed round yields
+    # "no new prefills", never a negative count.
+    assert cap == max(0, min(c_max, max_seqs - n_decode,
+                             (budget - committed) // l_min))
+    assert cap >= 0
+
+
+def test_activity_cap_negative_clamps_to_zero():
+    """Regression: decode count above max_seqs (or committed above budget)
+    used to produce a NEGATIVE cap, which apply() then compared against
+    n_active_prefills with nonsense results."""
+    cfg = APCConfig(c_max=4, l_min=64)
+    assert activity_cap(cfg, n_decode=12, max_seqs=8,
+                        token_budget=1024, committed=0) == 0
+    assert activity_cap(cfg, n_decode=0, max_seqs=8,
+                        token_budget=256, committed=1024) == 0
+
+
+def test_apc_apply_with_clamped_zero_cap_blocks_not_crashes():
+    """A negative-cap round (clamped to 0) must BLOCK new prefills cleanly:
+    apply() returns 0 and counts blocked_by_cap, no exception."""
+    cfg = APCConfig(c_max=4, l_min=64)
+    cap = activity_cap(cfg, n_decode=12, max_seqs=8,
+                       token_budget=1024, committed=0)
+    assert cap == 0
+    stats = APCStats()
+    c = apc_apply(cfg, stats, proposed=128, remaining=512, upper_bound=256,
+                  n_active_prefills=0, cap=cap)
+    assert c == 0
+    assert stats.blocked_by_cap == 1
 
 
 @settings(max_examples=200, deadline=None)

@@ -1,0 +1,420 @@
+"""SLO serving-tier property suite (deadline-aware LPRS / urgency / victim
+weighting / load shedding).
+
+Three families of invariants, per the tier's contract:
+
+  1. **off == absent** — an all-flags-off ``SLOConfig`` (and the default
+     config over tenants with no SLOs) is bit-identical to ``slo=None``:
+     same per-round batch composition, same chunk trace, same finish times.
+  2. **deadline monotonicity** — tightening ONE tenant's ``ttft_slo_s``
+     (queue-urgency only) never worsens that tenant's first-request TTFT.
+  3. **attainment partition** — every terminal request lands in exactly one
+     of {attained, violated, shed, rejected}; the buckets reconcile with
+     the scheduler's shed counter and the admission stats, fuzzed over
+     arrivals, KV-pressure preemption, and swap.
+
+Pure-projection properties (feasible/urgent/victim_class consistency) run
+under hypothesis when installed and as seeded deterministic fuzz otherwise.
+"""
+import random
+
+import pytest
+from _hyp import given, settings, st
+
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.core.slo import (
+    SLOConfig, SLOTracker, VICTIM_NO_SLO, VICTIM_PROTECTED, VICTIM_VIOLATING,
+)
+from repro.engine.costmodel import CostModel, CostModelConfig
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+from repro.engine.metrics import summarize_slo
+from repro.engine.simulator import run_policy
+from repro.engine.workload import TenantTraffic, multi_tenant
+from repro.tenancy import FairnessConfig, TenantRegistry, TenantSpec
+
+COST = CostModelConfig(c0_ms=20.0, c_prefill_ms=0.05, c_attn_ms=1e-6,
+                       c_decode_ms=0.15, c_ctx_ms=1e-5, c_seq_ms=0.08,
+                       noise_std=0.0)
+
+SLO_OFF = SLOConfig(deadline_lprs=False, queue_urgency=False,
+                    victim_weighting=False, apc_protect=False, shed=False)
+
+
+def mk(prompt, arrival=0.0, tenant="default", gen=4):
+    return Request(prompt_len=prompt, max_new_tokens=gen,
+                   arrival_time=arrival, tenant=tenant)
+
+
+def fuzz_requests(rng, *, tenants, n=40, t_span=3.0):
+    reqs = [
+        mk(rng.randint(16, 256), arrival=rng.uniform(0.0, t_span),
+           tenant=rng.choice(tenants), gen=rng.randint(1, 8))
+        for _ in range(n)
+    ]
+    reqs.sort(key=lambda r: r.arrival_time)
+    return reqs
+
+
+def trace(reqs):
+    """Everything the scheduler decided, per request: chunk sequence,
+    completion wall times, tokens delivered."""
+    return [
+        (r.tenant, tuple(r.chunks), r.prefill_done, r.generated,
+         r.first_token_time, r.finish_time, r.state)
+        for r in reqs
+    ]
+
+
+# ---------------------------------------------------------------------------
+# 1. off == absent (bit-identity)
+# ---------------------------------------------------------------------------
+
+
+SLO_TENANTS = (
+    TenantSpec("a", weight=2.0, ttft_slo_s=0.5, e2e_slo_s=5.0),
+    TenantSpec("b", ttft_slo_s=1.0),
+    TenantSpec("c"),
+)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_slo_all_flags_off_bit_identical(seed):
+    """All feature flags off: the tracker is attached (admission gate and
+    urgency hooks NOT installed, victim key unchanged) and the full trace —
+    batch composition, chunk sizes, finish times — matches slo=None."""
+    rng = random.Random(seed)
+    arrivals = fuzz_requests(rng, tenants=["a", "b", "c"])
+
+    def run(slo_cfg):
+        reqs = [mk(r.prompt_len, r.arrival_time, r.tenant, r.max_new_tokens)
+                for r in arrivals]
+        res = run_policy(
+            reqs,
+            SchedulerConfig(policy="aging", alpha=1.0, beta=-0.1,
+                            token_budget=128, max_seqs=8,
+                            fairness=FairnessConfig(tenants=SLO_TENANTS),
+                            slo=slo_cfg),
+            cost_model=CostModel(COST),
+        )
+        return res, reqs
+
+    base, base_reqs = run(None)
+    off, off_reqs = run(SLO_OFF)
+    assert trace(base_reqs) == trace(off_reqs)
+    assert base.rounds == off.rounds
+    # the off-run still REPORTS attainment (gauges are free), sheds nothing
+    assert off.slo is not None and off.slo.shed == 0
+
+
+def test_slo_defaults_noop_without_tenant_slos():
+    """Default SLOConfig (all flags ON) over tenants with NO latency targets
+    must also be bit-identical: every projection is (None, 0), so no gate,
+    urgency, ranking change, or shed can fire."""
+    no_slo = tuple(TenantSpec(s.name, weight=s.weight) for s in SLO_TENANTS)
+    rng = random.Random(7)
+    arrivals = fuzz_requests(rng, tenants=["a", "b", "c"])
+
+    def run(slo_cfg):
+        reqs = [mk(r.prompt_len, r.arrival_time, r.tenant, r.max_new_tokens)
+                for r in arrivals]
+        run_policy(
+            reqs,
+            SchedulerConfig(policy="fcfs", token_budget=128, max_seqs=8,
+                            fairness=FairnessConfig(tenants=no_slo),
+                            slo=slo_cfg),
+            cost_model=CostModel(COST),
+        )
+        return reqs
+
+    assert trace(run(None)) == trace(run(SLOConfig()))
+
+
+def test_slo_requires_fairness():
+    with pytest.raises(ValueError, match="requires fairness"):
+        ChunkedPrefillScheduler(SchedulerConfig(slo=SLOConfig()))
+
+
+# ---------------------------------------------------------------------------
+# 2. deadline monotonicity (queue urgency)
+# ---------------------------------------------------------------------------
+
+
+URGENCY_ONLY = SLOConfig(deadline_lprs=False, victim_weighting=False,
+                         apc_protect=False, shed=False, queue_urgency=True)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tightening_ttft_slo_never_worsens_first_request(seed):
+    """Ladder a single tenant's ttft_slo_s down while everything else is
+    fixed (urgency is the only active mechanism, no shedding, no KV pool):
+    the tenant's FIRST request reaches its first token no later.  The traces
+    are identical up to the round where urgency first differs, and in that
+    round the tighter deadline pops the tenant no later — so TTFT of the
+    head request is non-increasing in SLO tightness."""
+    rng = random.Random(seed)
+    arrivals = fuzz_requests(rng, tenants=["slo", "bulk", "bulk"], n=50)
+    assert any(r.tenant == "slo" for r in arrivals)
+
+    ttfts = []
+    for slo_s in (30.0, 2.0, 0.8, 0.3):
+        reqs = [mk(r.prompt_len, r.arrival_time, r.tenant, r.max_new_tokens)
+                for r in arrivals]
+        run_policy(
+            reqs,
+            SchedulerConfig(
+                policy="fcfs", token_budget=128, max_seqs=8,
+                fairness=FairnessConfig(tenants=(
+                    TenantSpec("slo", ttft_slo_s=slo_s),
+                    TenantSpec("bulk", weight=4.0),
+                )),
+                slo=URGENCY_ONLY,
+            ),
+            cost_model=CostModel(COST),
+        )
+        first = min((r for r in reqs if r.tenant == "slo"),
+                    key=lambda r: (r.arrival_time, r.req_id))
+        assert first.first_token_time is not None
+        ttfts.append(first.first_token_time - first.arrival_time)
+
+    for loose, tight in zip(ttfts, ttfts[1:]):
+        assert tight <= loose + 1e-9, ttfts
+
+
+# ---------------------------------------------------------------------------
+# 3. attainment partition under preemption/swap/shedding
+# ---------------------------------------------------------------------------
+
+
+def _partition_run(seed, *, admission_policy="deprioritize", rate=0.0):
+    specs = (
+        TenantSpec("hot", ttft_slo_s=0.4, e2e_slo_s=6.0),
+        TenantSpec("bulk", weight=4.0, ttft_slo_s=3.0,
+                   rate_tokens_per_s=rate, burst_tokens=rate),
+        TenantSpec("free"),
+    )
+    traffic = [
+        TenantTraffic("hot", "light", rps=2.0, prompt_mean=96.0,
+                      max_new_tokens=8),
+        TenantTraffic("bulk", "bursty", rps=14.0, prompt_mean=192.0,
+                      max_new_tokens=16, burst_period_s=3.0, burst_duty=0.3),
+        TenantTraffic("free", "light", rps=1.0, prompt_mean=64.0,
+                      max_new_tokens=8),
+    ]
+    reqs = multi_tenant(traffic, duration_s=6.0, seed=seed)
+    pool = KVBlockPool(KVPoolConfig(n_blocks=96, block_size=16,
+                                    bytes_per_token=4))
+    cfg = SchedulerConfig(
+        policy="aging", alpha=1.0, beta=-0.1, token_budget=192, max_seqs=12,
+        fairness=FairnessConfig(tenants=specs,
+                                admission_policy=admission_policy),
+        slo=SLOConfig(),
+    )
+    sched = ChunkedPrefillScheduler(cfg, kv_pool=pool)
+    from repro.engine.simulator import ServingSimulator
+
+    res = ServingSimulator(sched, CostModel(COST), kv_pool=pool,
+                           preemption_mode="swap").run(reqs)
+    return res, reqs, sched
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_attainment_partition_fuzzed(seed):
+    """attained + violated + shed + rejected == terminal requests, per
+    tenant, under KV-pressure swap preemption and live shedding; every
+    request is terminal at the end of the run; the report's shed total
+    equals the scheduler's shed counter (admission + queue legs)."""
+    res, reqs, sched = _partition_run(seed)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    rep = res.slo
+    assert rep is not None
+    for t, tr in rep.per_tenant.items():
+        n_terminal = sum(1 for r in reqs if r.tenant == t)
+        assert tr.attained + tr.violated + tr.shed + tr.rejected == n_terminal
+        assert tr.finished == tr.attained + tr.violated
+        assert tr.finished == sum(
+            1 for r in reqs if r.tenant == t and r.finish_time is not None
+        )
+        assert 0.0 <= tr.attainment <= 1.0
+    # bucket totals reconcile with the scheduler's own books
+    assert rep.shed == sched.stats.sheds
+    assert rep.shed == sum(
+        1 for r in reqs if r.shed_reason is not None
+    )
+    adm = sched.fairness.admission
+    # deprioritize never hard-rejects: the only refusals are SLO sheds
+    assert rep.rejected == 0
+    assert adm.stats.shed == len(sched.fairness.shed)
+    # a shed request never has completion timestamps (it is not a violation)
+    for r in reqs:
+        if r.shed_reason is not None:
+            assert r.finish_time is None and r.first_token_time is None
+
+
+def test_attainment_partition_with_hard_rejects():
+    """``reject`` admission on a rate-limited tenant: the rejected bucket
+    fills from quota refusals, sheds from deadline refusals, and the
+    partition still holds."""
+    res, reqs, sched = _partition_run(9, admission_policy="reject",
+                                      rate=800.0)
+    rep = res.slo
+    for t, tr in rep.per_tenant.items():
+        n_terminal = sum(1 for r in reqs if r.tenant == t)
+        assert tr.attained + tr.violated + tr.shed + tr.rejected == n_terminal
+    assert rep.rejected == len(sched.fairness.rejected)
+    assert rep.rejected > 0            # the quota actually bound
+    assert rep.shed == sched.stats.sheds
+
+
+def test_shed_request_refunds_pool_and_queue():
+    """Direct-drive: shedding a queued, partially-prefilled request releases
+    its KV blocks, removes it from the queue, and buckets it as shed."""
+    pool = KVBlockPool(KVPoolConfig(n_blocks=32, block_size=16,
+                                    bytes_per_token=4))
+    cfg = SchedulerConfig(
+        policy="fcfs", token_budget=64, max_seqs=4,
+        fairness=FairnessConfig(tenants=(TenantSpec("t", ttft_slo_s=0.5),)),
+        slo=SLO_OFF,       # shed manually below; no automatic gate
+    )
+    sched = ChunkedPrefillScheduler(cfg, kv_pool=pool)
+    req = mk(200, tenant="t", gen=4)
+    assert sched.submit(req)
+    b = sched.schedule(0.0)            # partial chunk books blocks
+    sched.on_batch_done(b, 0.05)
+    assert req.prefill_done > 0 and req in sched.queue
+    held = len(pool.tables.get(req.req_id, ()))
+    assert held > 0
+
+    sched.shed_request(req, reason="deadline")
+    assert req.state == RequestState.FINISHED
+    assert req.shed_reason == "deadline"
+    assert req not in sched.queue
+    assert not pool.tables.get(req.req_id)
+    pool.check_invariants()
+    assert sched.stats.sheds == 1
+    rep = summarize_slo([req], sched.fairness.registry)
+    assert rep.per_tenant["t"].shed == 1 and rep.violated == 0
+
+
+# ---------------------------------------------------------------------------
+# tracker projection properties (hypothesis when available, seeded otherwise)
+# ---------------------------------------------------------------------------
+
+
+def _tracker(ttft=0.5, e2e=None, **cfg_kw):
+    reg = TenantRegistry((TenantSpec("t", ttft_slo_s=ttft, e2e_slo_s=e2e),
+                          TenantSpec("free")))
+    return SLOTracker(SLOConfig(**cfg_kw), reg, token_budget=128)
+
+
+def _check_projection_consistency(tr, req, now):
+    deadline, rounds = tr.projection(req)
+    if deadline is None:
+        assert tr.feasible(req, now)
+        assert not tr.urgent(req, now)
+        assert tr.victim_class(req, now) == VICTIM_NO_SLO
+        return
+    assert rounds >= 1
+    required = tr.required_s(rounds)
+    slack = tr.slack_s(req, now)
+    assert slack == pytest.approx(deadline - now)
+    # feasible <-> slack covers the minimum service time
+    assert tr.feasible(req, now) == (slack >= required)
+    # urgent is one-sided: infeasible or tight implies urgent
+    if not tr.feasible(req, now):
+        assert tr.urgent(req, now)
+        assert tr.victim_class(req, now) == VICTIM_VIOLATING
+    else:
+        assert tr.victim_class(req, now) == VICTIM_PROTECTED
+        if not tr.urgent(req, now):
+            assert slack > required * tr.cfg.urgency_factor
+    # feasibility is monotone in time: later never MORE feasible
+    assert tr.feasible(req, now) or not tr.feasible(req, now + 1.0)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_projection_consistency_seeded(seed):
+    rng = random.Random(seed)
+    for _ in range(200):
+        tr = _tracker(
+            ttft=rng.choice([None, rng.uniform(0.05, 2.0)]),
+            e2e=rng.choice([None, rng.uniform(0.5, 10.0)]),
+            slack_safety=rng.uniform(0.5, 2.0),
+            urgency_factor=rng.uniform(1.0, 4.0),
+            round_ms_init=rng.uniform(5.0, 200.0),
+        )
+        req = mk(rng.randint(1, 512), arrival=rng.uniform(0.0, 5.0),
+                 tenant=rng.choice(["t", "free"]), gen=rng.randint(1, 32))
+        _check_projection_consistency(tr, req, rng.uniform(0.0, 8.0))
+
+
+@settings(max_examples=150, deadline=None)
+@given(
+    prompt=st.integers(1, 512), gen=st.integers(1, 32),
+    arrival=st.floats(0.0, 5.0), now=st.floats(0.0, 8.0),
+    ttft=st.one_of(st.none(), st.floats(0.05, 2.0)),
+    e2e=st.one_of(st.none(), st.floats(0.5, 10.0)),
+    safety=st.floats(0.5, 2.0), factor=st.floats(1.0, 4.0),
+)
+def test_projection_consistency_hypothesis(prompt, gen, arrival, now, ttft,
+                                           e2e, safety, factor):
+    tr = _tracker(ttft=ttft, e2e=e2e, slack_safety=safety,
+                  urgency_factor=factor)
+    req = mk(prompt, arrival=arrival, tenant="t", gen=gen)
+    _check_projection_consistency(tr, req, now)
+
+
+def test_round_target_clamped_and_tightest_wins():
+    tr = _tracker(ttft=0.5, min_target_ms=5.0)
+    base = 200.0
+    # no deadline-bearing requests: the static target survives untouched
+    assert tr.round_target_ms([mk(64, tenant="free")], 0.0, base) == base
+    # one tight deadline: slack/rounds wins over the static target
+    tight = mk(64, arrival=0.0, tenant="t")
+    deadline, rounds = tr.projection(tight)
+    expect = (deadline - 0.3) * 1e3 / rounds
+    assert tr.round_target_ms([tight], 0.3, base) == pytest.approx(
+        min(base, max(expect, 5.0)))
+    # an already-expired deadline clamps at the floor, never negative
+    assert tr.round_target_ms([tight], 10.0, base) == 5.0
+
+
+def test_ewma_round_cost_updates_only_when_busy():
+    tr = _tracker(round_ms_init=50.0, round_ms_ewma=0.5)
+    tr.begin_round(0.0, prev_busy=False)
+    assert tr.round_ms == 50.0
+    tr.begin_round(0.1, prev_busy=False)      # idle gap: not round cost
+    assert tr.round_ms == 50.0
+    tr.begin_round(0.2, prev_busy=True)       # 100 ms busy round observed
+    assert tr.round_ms == pytest.approx(75.0)
+
+
+def test_apc_protect_overrides_cap_for_urgent_request():
+    """A deadline-urgent prefill bypasses the APC activity cap: with
+    apc_protect on, the protected tenant's chunk lands in the round even
+    when the cap would block any new prefill."""
+    from repro.core.apc import APCConfig
+
+    def run(apc_protect):
+        reqs = [mk(400, arrival=0.0, tenant="bulk", gen=1) for _ in range(3)]
+        hot = mk(96, arrival=0.05, tenant="hot", gen=1)
+        reqs.append(hot)
+        cfg = SchedulerConfig(
+            policy="fcfs", token_budget=96, max_seqs=8,
+            apc=APCConfig(c_max=1, l_min=64),
+            fairness=FairnessConfig(tenants=(
+                TenantSpec("bulk", weight=8.0),
+                TenantSpec("hot", ttft_slo_s=0.2),
+            )),
+            slo=SLOConfig(deadline_lprs=False, victim_weighting=False,
+                          shed=False, queue_urgency=True,
+                          apc_protect=apc_protect),
+        )
+        run_policy(reqs, cfg, cost_model=CostModel(COST))
+        return hot, [r for r in reqs if r is not hot]
+
+    hot_on, _ = run(True)
+    hot_off, _ = run(False)
+    assert hot_on.first_token_time is not None
+    assert hot_off.first_token_time is not None
+    assert hot_on.first_token_time <= hot_off.first_token_time

@@ -9,12 +9,16 @@ stop occurrence), the over-scheduled round's bookings are refunded, and the
 pools balance — including under KV pressure with swap preemption racing the
 late stops.
 """
+import pytest
+
 from repro.configs import tiny_config
 from repro.core.request import RequestState
 from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
-from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.engine import EngineConfig, JAXEngine, ReplicaServer, serve
 from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+from repro.engine.metrics import summarize_slo
 from repro.engine.workload import shared_prefix
+from repro.tenancy import FairnessConfig, TenantSpec
 
 
 def _two_wave(seed=5, n=12, new_tokens=10):
@@ -97,6 +101,128 @@ def test_stop_on_first_token_terminates_immediately():
         assert res.outputs[reqs[0].req_id] == [stop]
         assert reqs[0].generated == 1
         assert sched.stats.late_stops > 0
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_late_stop_on_shed_request_is_skipped(paged):
+    """SLO-shed x late-stop interplay: a request shed WHILE its just-sampled
+    token is still in the pipelined in-flight round must be skipped by the
+    drain's stop check — the shed already unwound its bookings (KV blocks,
+    slot, queue/fairness state), so applying the stop again would
+    double-finish a FINISHED request.  The shed request ends in the shed
+    attainment bucket, never as a violation, in paged and dense engines."""
+    reqs = _two_wave(new_tokens=8)
+    for r in reqs:
+        r.arrival_time = 0.0
+        r.tenant = "t"
+
+    eng = JAXEngine(tiny_config("qwen1.5-0.5b"),
+                    EngineConfig(n_slots=6, max_context=128, paged_kv=paged,
+                                 pipelined=True, preemption_mode="swap",
+                                 seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=400, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True)) if paged else None
+    sched = ChunkedPrefillScheduler(SchedulerConfig(
+        policy="fcfs", token_budget=96, max_seqs=6,
+        fairness=FairnessConfig(tenants=(TenantSpec("t", ttft_slo_s=1e6),),
+                                admission=False),
+    ))
+    victim = reqs[0]
+
+    def shed_at_prefill_complete(server, r):
+        # fires in the round that completed r's prefill — in pipelined mode
+        # its first sampled token is STILL IN FLIGHT (placeholder id); shed
+        # now and the drain must leave the finished request alone
+        if r is victim and r.shed_reason is None:
+            server.sched.shed_request(r, reason="deadline")
+
+    server = ReplicaServer(sched, eng, kv_pool=pool,
+                           on_prefill_complete=shed_at_prefill_complete)
+    for r in reqs:
+        server.submit(r)
+    steps = 0
+    while server.busy() and steps < 5000:
+        server.step(server._now())
+        steps += 1
+    server.finish()
+
+    assert victim.state == RequestState.FINISHED
+    assert victim.shed_reason == "deadline"
+    assert victim.finish_time is None            # never served to completion
+    assert not victim.stopped                    # the late stop did NOT land
+    assert sched.stats.sheds == 1
+    if paged:
+        # the shed refunded every booking: no blocks, no staged swap record
+        assert not pool.tables.get(victim.req_id)
+        pool.check_invariants()
+        assert not pool.swapped_requests()
+    survivors = [r for r in reqs if r is not victim]
+    assert all(r.state == RequestState.FINISHED and r.finish_time is not None
+               for r in survivors)
+    rep = summarize_slo(reqs, sched.fairness.registry)
+    assert rep.per_tenant["t"].shed == 1
+    assert rep.per_tenant["t"].violated == 0     # shed is never a violation
+    assert rep.per_tenant["t"].attained == len(survivors)
+
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_stop_after_shed_never_double_unwinds(paged):
+    """Same interplay with a real stop token armed on the victim: the stop
+    value is sampled into the in-flight round before the shed retires the
+    request, so the drain sees a FINISHED request whose output tail EQUALS
+    its stop token — the one configuration where a missing state check
+    would call finish_stopped() on a finished request and crash."""
+    # harvest the victim's first sampled token as the stop value
+    ref = _two_wave(new_tokens=6)
+    for r in ref:
+        r.arrival_time = 0.0
+    res_ref, _ = _serve(ref, pipelined=True, n_blocks=400)
+    stop = res_ref.outputs[ref[0].req_id][0]
+
+    reqs = _two_wave(new_tokens=6)
+    for r in reqs:
+        r.arrival_time = 0.0
+        r.tenant = "t"
+        r.stop_token = stop
+    eng = JAXEngine(tiny_config("qwen1.5-0.5b"),
+                    EngineConfig(n_slots=6, max_context=128, paged_kv=paged,
+                                 pipelined=True, preemption_mode="swap",
+                                 seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=400, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True)) if paged else None
+    sched = ChunkedPrefillScheduler(SchedulerConfig(
+        policy="fcfs", token_budget=96, max_seqs=6,
+        fairness=FairnessConfig(tenants=(TenantSpec("t", ttft_slo_s=1e6),),
+                                admission=False),
+    ))
+    victim = reqs[0]
+
+    def shed_hook(server, r):
+        if r is victim and r.shed_reason is None:
+            server.sched.shed_request(r, reason="deadline")
+
+    server = ReplicaServer(sched, eng, kv_pool=pool,
+                           on_prefill_complete=shed_hook)
+    for r in reqs:
+        server.submit(r)
+    steps = 0
+    while server.busy() and steps < 5000:
+        server.step(server._now())
+        steps += 1
+    server.finish()
+
+    assert victim.output_tokens and victim.output_tokens[0] == stop
+    assert not victim.stopped and victim.finish_time is None
+    assert victim.shed_reason == "deadline"
+    # every OTHER request still honors its own stop normally
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    rep = summarize_slo(reqs, sched.fairness.registry)
+    assert rep.per_tenant["t"].shed == 1 and rep.per_tenant["t"].violated == 0
+    if paged:
+        pool.check_invariants()
+        assert not pool.swapped_requests()
 
 
 def test_no_stop_token_is_byte_identical_to_baseline():

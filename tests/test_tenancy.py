@@ -123,6 +123,64 @@ def test_vtc_conservation_total_charged_equals_total_executed():
     assert vtc.total_actual_tokens() == delivered
 
 
+def _vtc_apc_engine_run(seed, pipelined):
+    """Real-engine serve under an APC config tuned to block aggressively
+    (c_max=1: ONE active prefill ever, so every other candidate is
+    cap-blocked and re-queued each round; l_min=48 against a 64-token budget
+    keeps the cap at exactly min(1, floor(residual/48))), then check the
+    VTC's books against ground truth: per-tenant charged tokens == tokens
+    actually delivered (prefill progress + generated output), despite every
+    deferral, warm start, and re-queue the gate causes.  NOTE l_min must
+    stay <= token_budget: a larger l_min pins Eq. 12's cap at 0 and APC
+    (correctly, but fatally for a serve loop) blocks all prefills forever."""
+    from repro.configs import tiny_config
+    from repro.core.apc import APCConfig
+    from repro.engine.engine import EngineConfig, JAXEngine, serve
+
+    rng = np.random.default_rng(seed)
+    reqs = []
+    for i in range(10):
+        r = mk(int(rng.integers(16, 80)), arrival=float(0.02 * i),
+               tenant=("a" if i % 2 else "b"), gen=int(rng.integers(2, 8)))
+        r.prompt_tokens = [int(t) for t in rng.integers(0, 512, r.prompt_len)]
+        reqs.append(r)
+    eng = JAXEngine(tiny_config("qwen1.5-0.5b"),
+                    EngineConfig(n_slots=4, max_context=128,
+                                 pipelined=pipelined, seed=3))
+    sched = ChunkedPrefillScheduler(SchedulerConfig(
+        policy="fcfs", token_budget=64, max_seqs=4,
+        apc=APCConfig(c_max=1, l_min=48),
+        fairness=fair_cfg(admission=False),
+    ))
+    serve(reqs, sched, eng, max_rounds=5000)
+    assert all(r.state == RequestState.FINISHED for r in reqs)
+    assert sched.stats.apc.blocked_by_cap + sched.stats.apc.warm_starts > 0
+    vtc = sched.fairness.vtc
+    for t in ("a", "b"):
+        delivered = sum(r.prefill_done + r.generated
+                        for r in reqs if r.tenant == t)
+        assert vtc.actual_tokens(t) == delivered
+    assert vtc.total_actual_tokens() == sum(
+        r.prefill_done + r.generated for r in reqs
+    )
+
+
+from _hyp import given, settings, st  # noqa: E402
+
+
+@settings(max_examples=2, deadline=None)
+@given(seed=st.integers(0, 1000), pipelined=st.booleans())
+def test_vtc_charge_matches_execution_under_apc_blocking_fuzzed(seed, pipelined):
+    _vtc_apc_engine_run(seed, pipelined)
+
+
+@pytest.mark.parametrize("pipelined", [False, True])
+def test_vtc_charge_matches_execution_under_apc_blocking(pipelined):
+    """Deterministic companion to the fuzzed version: runs even without
+    hypothesis installed, covering both serve-loop modes."""
+    _vtc_apc_engine_run(0, pipelined)
+
+
 # ---------------------------------------------------------------------------
 # weighted-share convergence under saturation
 # ---------------------------------------------------------------------------
