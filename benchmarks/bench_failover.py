@@ -1,0 +1,186 @@
+"""Replica failure mid-burst: kill one of two decode replicas, lose nothing.
+
+The fault-tolerance scenario the robustness layer exists for: a 1-prefill +
+2-decode fleet is serving a two-wave burst when one decode replica dies
+mid-handoff (a seeded ``replica_step_crash`` that repeats until the health
+machine declares the replica DEAD).  The router must evacuate the dead
+replica — host-staged handoffs re-place decode-resumable on the survivor
+with ZERO re-prefilled tokens, in-flight work unwinds and retries — and the
+fleet must finish the full workload.
+
+Gates:
+  * ALWAYS (deterministic, any machine): every request terminates exactly
+    once with nothing shed; exactly one replica died and at least one
+    request recovered decode-resumable; the surviving decode pool scheduled
+    ZERO prefill tokens (no recovery re-prefilled); greedy outputs are
+    bit-identical to a fault-free run of the same fleet; block refcounts,
+    swap staging and handoff byte ledgers all close.
+  * FULL RUNS ONLY (wall-clock): the fault run's decode-population P99
+    inter-token latency stays within 10x of the fault-free run — losing a
+    replica degrades the tail, it must not wedge it.  Quick/CI runs print
+    the same numbers without asserting them.
+
+Writes a ``failover_quick`` / ``failover_full`` section into
+``BENCH_throughput.json`` (schema shared with bench_serve_throughput; other
+sections are preserved).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.bench_serve_throughput import ROOT_JSON, _load_sections
+from benchmarks.common import fmt_table
+from repro.configs import tiny_config
+from repro.core.scheduler import SchedulerConfig
+from repro.disagg import DisaggConfig, build_disagg, serve_disagg
+from repro.engine.engine import EngineConfig
+from repro.engine.workload import shared_prefix
+from repro.robustness import (
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    HealthConfig,
+    RobustnessConfig,
+)
+
+
+def _workload(quick: bool):
+    """Two waves of shared-prefix requests: the second wave arrives while
+    the first wave's handoffs are in flight, so the kill lands mid-burst."""
+    n = 12 if quick else 24
+    new_tokens = 10 if quick else 16
+    reqs = shared_prefix(n_requests=n, n_prefixes=2, prefix_len=48,
+                         suffix_range=(8, 16), max_new_tokens=new_tokens,
+                         inter_arrival_s=0.0, vocab_size=512, seed=5)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.0 if i < n // 2 else 60.0
+    return reqs
+
+
+def _build_fleet(robustness=None, *, n_blocks=64):
+    cfg = tiny_config("qwen1.5-0.5b")
+    return build_disagg(
+        cfg,
+        cfg=DisaggConfig(n_prefill=1, n_decode=2, robustness=robustness),
+        engine_cfg=EngineConfig(n_slots=6, max_context=128, paged_kv=True,
+                                pipelined=True, preemption_mode="swap",
+                                nan_guard=robustness is not None, seed=3),
+        sched_cfg=SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6),
+        n_blocks=n_blocks, block_size=16,
+        warmup=True,
+    )
+
+
+def _itl_p99_ms(reqs):
+    gaps = []
+    for r in reqs:
+        ts = r.token_times
+        gaps.extend(b - a for a, b in zip(ts, ts[1:]))
+    return float(np.percentile(np.asarray(gaps if gaps else [0.0]), 99) * 1e3)
+
+
+def _run(quick: bool, robustness):
+    reqs = _workload(quick)
+    router = _build_fleet(robustness)
+    t0 = time.perf_counter()
+    res = serve_disagg(reqs, router)
+    wall = time.perf_counter() - t0
+    router.check_invariants()
+    for rs in router.replicas:
+        assert not rs.engine.slot_of, (rs.name, rs.engine.slot_of)
+    rob = res.robustness
+    row = {
+        "name": "fault-free" if robustness is None else "kill decode0",
+        "finished": res.report.n_finished,
+        "rounds": res.rounds,
+        "wall_s": wall,
+        "itl_p99_ms": _itl_p99_ms(reqs),
+        "handoffs": res.handoffs,
+        "decode_prefill_tokens": sum(
+            rs.sched.stats.scheduled_prefill_tokens for rs in router.decode),
+        "replicas_died": 0 if rob is None else rob.replicas_died,
+        "recovered_resumable": 0 if rob is None else rob.recovered_resumable,
+        "requeued_reprefill": 0 if rob is None else rob.requeued_reprefill,
+        "shed": 0 if rob is None else rob.shed_replica_failure,
+        "outputs": [res.outputs[r.req_id] for r in reqs],
+    }
+    return row, reqs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="CI smoke settings: deterministic gates only")
+    args = ap.parse_args(argv)
+
+    base, _ = _run(args.quick, None)
+
+    # decode0 crashes every time it reaches its 3rd round; with dead_after=1
+    # the first crash marks it DEAD and the router evacuates it while first-
+    # wave handoffs are host-staged — the deterministic zero-re-prefill case.
+    plan = FaultPlan(specs=(FaultSpec(site="replica_step_crash", nth=3,
+                                      replica="decode0", repeat=True),))
+    rcfg = RobustnessConfig(health=HealthConfig(dead_after=1),
+                            injector=FaultInjector(plan))
+    fault, _ = _run(args.quick, rcfg)
+    results = [base, fault]
+
+    rows = [
+        [r["name"], r["finished"], r["rounds"], f"{r['wall_s']:.2f}",
+         f"{r['itl_p99_ms']:.1f}", r["handoffs"], r["decode_prefill_tokens"],
+         r["replicas_died"], r["recovered_resumable"],
+         r["requeued_reprefill"], r["shed"]]
+        for r in results
+    ]
+    print(fmt_table(
+        "Killing 1 of 2 decode replicas mid-burst",
+        ["run", "done", "rounds", "wall s", "itl p99 ms", "handoffs",
+         "dec-pool prefill toks", "died", "resumable", "re-prefill", "shed"],
+        rows,
+    ))
+
+    n_total = len(base["outputs"])
+    # -- deterministic gates (every run) ------------------------------------
+    assert base["finished"] == fault["finished"] == n_total, (
+        "requests were lost under replica failure")
+    assert fault["shed"] == 0, f"{fault['shed']} requests shed"
+    assert fault["replicas_died"] == 1
+    assert fault["recovered_resumable"] > 0, (
+        "no handoff-staged recovery exercised the zero-re-prefill path")
+    assert fault["decode_prefill_tokens"] == 0, (
+        f"surviving decode pool re-prefilled "
+        f"{fault['decode_prefill_tokens']} tokens")
+    assert base["outputs"] == fault["outputs"], (
+        "failover changed greedy outputs vs the fault-free run")
+    print(f"  outputs identical={True}  lost=0  "
+          f"resumable={fault['recovered_resumable']}  "
+          f"decode-pool re-prefilled tokens=0")
+
+    # -- wall-clock gate (full runs only) -----------------------------------
+    ratio = fault["itl_p99_ms"] / max(base["itl_p99_ms"], 1e-9)
+    print(f"  decode ITL p99: fault-free {base['itl_p99_ms']:.1f} ms -> "
+          f"under failure {fault['itl_p99_ms']:.1f} ms ({ratio:.2f}x)")
+    if not args.quick:
+        assert ratio < 10.0, (
+            f"losing a replica blew up tail ITL {ratio:.1f}x")
+
+    mode_key = "failover_quick" if args.quick else "failover_full"
+    stripped = [{k: v for k, v in r.items() if k != "outputs"}
+                for r in results]
+    data = _load_sections()            # preserve the other benches' sections
+    data[mode_key] = {
+        "workload": {"quick": args.quick, "seed": 5},
+        "results": stripped,
+    }
+    with open(ROOT_JSON, "w") as f:
+        json.dump(data, f, indent=1)
+    print(f"  wrote BENCH_throughput.json [{mode_key}]")
+    return results
+
+
+if __name__ == "__main__":
+    main()

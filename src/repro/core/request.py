@@ -189,6 +189,33 @@ class Request:
         self.needs_replay = False
         self.finish_time = now
 
+    def rollback_undrained(self, n: int = 1) -> int:
+        """Crash/quarantine unwind: discard the last ``n`` UNDRAINED output
+        tokens — placeholders a pipelined round booked via ``receive_token``
+        whose values never became host-visible (the round crashed before its
+        drain, or the drain read non-finite garbage).  Only undrained tokens
+        may be rolled back: delivered tokens are streamed and irrevocable
+        (at-most-once delivery); the caller re-executes the rolled-back
+        positions via greedy recompute, which regenerates identical values.
+        Reverts a same-round length-cap finish.  Returns how many tokens were
+        actually popped."""
+        assert n >= 0
+        popped = 0
+        for _ in range(n):
+            if self.generated <= self.folded_tokens:
+                break  # everything left was folded (delivered + re-prefilled)
+            self.output_tokens.pop()
+            self.generated -= 1
+            popped += 1
+        if popped and self.state == RequestState.FINISHED and not self.stopped:
+            self.state = RequestState.DECODING
+            self.finish_time = None
+        if popped and self.generated == 0:
+            self.first_token_time = None
+        # token_times stay untouched: stamps exist only for DRAINED tokens,
+        # and rollback by construction touches only undrained ones
+        return popped
+
     def receive_token(self, tok: int = 0, now: float = 0.0) -> None:
         assert self.state == RequestState.DECODING
         self.generated += 1

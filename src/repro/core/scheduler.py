@@ -109,6 +109,11 @@ class SchedulerStats:
     refunded_decode_tokens: int = 0     # over-scheduled decodes unwound by stops
     exports: int = 0                    # requests detached for cross-replica handoff
     sheds: int = 0                      # SLO load shedding (admission + queue)
+    failovers: int = 0                  # requests evacuated off this scheduler
+    #                                     by replica-failure recovery
+    quarantined: int = 0                # non-finite requests terminated
+    rolled_back_decode_tokens: int = 0  # undrained tokens discarded by crash
+    #                                     or quarantine unwinds (VTC refunded)
     apc: APCStats = field(default_factory=APCStats)
 
     @property
@@ -326,14 +331,14 @@ class ChunkedPrefillScheduler:
             self.fairness.forget(req)
         self.stats.exports += 1
 
-    def on_stop(self, req: Request, batch: Optional[ScheduledBatch] = None) -> None:
-        """A value-dependent stop (EOS) terminated ``req`` outside the normal
-        ``on_batch_done`` path — in a pipelined engine the real token id
-        lands one round LATE, so by the time the stop is observable the
-        request may already be booked into the next, not-yet-dispatched
-        round (``batch``), sitting in the queue as a preemption victim, or
-        host-staged mid-swap.  Unwind whatever the over-scheduled round
-        booked and retire the request everywhere."""
+    def _unwind(self, req: Request, batch: Optional[ScheduledBatch] = None) -> None:
+        """Detach ``req`` from everything this scheduler holds for it: decode
+        set, engine slot, queue membership, any entries in a scheduled-but-
+        not-yet-dispatched ``batch`` (whose phantom booking is refunded from
+        the stats), KV blocks AND host-staged swap records, and fairness
+        bookkeeping.  The request's own state is left untouched — callers
+        decide whether this is a terminal retire (stop/shed) or an
+        evacuation (failover re-placement)."""
         self._decoding.pop(req.req_id, None)
         self._bound_slots.discard(req.req_id)
         if req in self.queue:
@@ -359,7 +364,52 @@ class ChunkedPrefillScheduler:
             self._slot_releaser(req)
         if self.fairness is not None:
             self.fairness.forget(req)
+
+    def on_stop(self, req: Request, batch: Optional[ScheduledBatch] = None) -> None:
+        """A value-dependent stop (EOS) terminated ``req`` outside the normal
+        ``on_batch_done`` path — in a pipelined engine the real token id
+        lands one round LATE, so by the time the stop is observable the
+        request may already be booked into the next, not-yet-dispatched
+        round (``batch``), sitting in the queue as a preemption victim, or
+        host-staged mid-swap.  Unwind whatever the over-scheduled round
+        booked and retire the request everywhere."""
+        self._unwind(req, batch)
         self.stats.late_stops += 1
+
+    def evict_request(self, req: Request, batch: Optional[ScheduledBatch] = None) -> None:
+        """Failover evacuation: detach a LIVE request from this scheduler
+        entirely (its replica crashed or was declared dead) without marking
+        it terminal — the router re-places it on a survivor, either
+        decode-resumable from a recovered staging record or re-prefilled
+        through the ``preempt()`` fold."""
+        self._unwind(req, batch)
+        self.stats.failovers += 1
+
+    def requeue_failed(self, req: Request) -> None:
+        """Re-enqueue a request this scheduler still owns after a crashed
+        round was unwound (the caller already ran ``preempt()`` /
+        re-registered its pool entry).  Admission is NOT re-run: the request
+        was admitted once and its token bucket already charged — a crash
+        must not double-bill the tenant."""
+        assert req.state == RequestState.WAITING, req.state
+        if req in self.queue:
+            self.queue.update(req)
+        else:
+            self.queue.add(req)
+
+    def refund_rolled_back(self, req: Request, *, first_token: bool = False) -> None:
+        """Refund the accounting of ONE rolled-back undrained token (a crash
+        or quarantine discarded it before delivery): the VTC charge comes
+        back so fleet-wide charge keeps equaling executed-and-surviving
+        work, and the scheduled-token stats shed the same token.  A token
+        that rode a prefill completion was charged as the first-token bonus
+        (not counted in ``scheduled_decode_tokens``), so only the fairness
+        side's first-token ledger is decremented for it."""
+        if not first_token:
+            self.stats.scheduled_decode_tokens -= 1
+        self.stats.rolled_back_decode_tokens += 1
+        if self.fairness is not None:
+            self.fairness.refund_token(req, first_token=first_token)
 
     @property
     def decoding(self) -> List[Request]:
@@ -617,24 +667,16 @@ class ChunkedPrefillScheduler:
         self._prev_round_busy = not batch.is_empty()
         return batch
 
-    def shed_request(self, req: Request, *, reason: str) -> None:
-        """SLO load shedding: retire a request whose deadline is projected
-        infeasible.  Mirrors the ``on_stop`` unwinding (minus the phantom
-        batch): queue membership, KV blocks AND any host-staged swap record
-        are refunded, the engine slot frees, fairness bookkeeping forgets it.
-        The request ends FINISHED with ``finish_time`` None and
-        ``shed_reason`` set — the shed attainment bucket, never a violation."""
-        self._decoding.pop(req.req_id, None)
-        self._bound_slots.discard(req.req_id)
-        if req in self.queue:
-            self.queue.remove(req)
-        if self._books():
-            self.kv_pool.drop_swap(req.req_id)
-            self.kv_pool.release(req.req_id)
-        if self._slot_releaser is not None:
-            self._slot_releaser(req)
-        if self.fairness is not None:
-            self.fairness.forget(req)
+    def shed_request(self, req: Request, *, reason: str,
+                     batch: Optional[ScheduledBatch] = None) -> None:
+        """Terminal retire without service completion: SLO load shedding of a
+        projected-infeasible deadline, numerics quarantine, or a request that
+        exhausted its failover retries.  Full ``on_stop``-style unwinding
+        (queue membership, KV blocks AND host-staged swap records, engine
+        slot, fairness bookkeeping, any entries in a scheduled-but-undispatched
+        ``batch``).  The request ends FINISHED with ``finish_time`` None and
+        ``shed_reason`` set — a shed attainment bucket, never a violation."""
+        self._unwind(req, batch)
         req.shed_reason = reason
         req.state = RequestState.FINISHED
         self.stats.sheds += 1

@@ -87,6 +87,14 @@ class SLOTracker:
             self.round_ms += a * (dt_ms - self.round_ms)
         self._last_now = now
 
+    def scale_round_cost(self, factor: float) -> None:
+        """Step-change the learned round cost (replica failover: the fleet
+        just lost capacity, so every surviving replica's rounds get slower by
+        roughly the capacity ratio).  The EWMA would learn this eventually;
+        jumping it immediately makes infeasible deadlines shed NOW instead of
+        burning budget during the convergence window."""
+        self.round_ms *= max(float(factor), 1e-6)
+
     # -- deadline projection --------------------------------------------------
     def projection(self, req: Request) -> Tuple[Optional[float], int]:
         """(absolute deadline [s], minimum rounds of service still needed)

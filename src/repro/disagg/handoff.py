@@ -28,10 +28,26 @@ class HandoffStats:
     staged: int = 0            # records entered the store
     delivered: int = 0         # records adopted by a decode pool
     dropped: int = 0           # killed mid-handoff (late stop): staging discarded
+    expired: int = 0           # TTL reaped (never adopted within handoff_ttl_s)
     colocated: int = 0         # prefill-completions the cost model kept local
     bytes_moved: int = 0       # Σ payload bytes delivered across the link
     prefetched: int = 0        # records adopted while the source gather was
                                # still in flight (DisaggConfig.prefetch)
+    # byte-exact staging ledger: put - take - drop - expire == resident
+    put_bytes: int = 0
+    taken_bytes: int = 0
+    dropped_bytes: int = 0
+    expired_bytes: int = 0
+    resident_bytes: int = 0
+
+
+@dataclass
+class _Entry:
+    rec: object
+    reg: object
+    src: str
+    nbytes: int
+    t_put: float
 
 
 class KVHandoffStore:
@@ -42,10 +58,16 @@ class KVHandoffStore:
     record between ``export_swap`` on the source pool and ``import_swap`` on
     the destination — the only window in which neither pool accounts for the
     request's KV.
+
+    A record adopted by nobody (destination dead or stalled) would pin its
+    host bytes forever; ``ttl_s`` bounds that: ``expire(now)`` reaps records
+    older than the TTL and the byte ledger keeps ``put - take - drop -
+    expire == resident`` exact at every step.
     """
 
-    def __init__(self):
-        self._entries: Dict[int, Tuple[object, object, str]] = {}
+    def __init__(self, ttl_s: Optional[float] = None):
+        self.ttl_s = ttl_s
+        self._entries: Dict[int, _Entry] = {}
         self.stats = HandoffStats()
 
     def __len__(self) -> int:
@@ -57,31 +79,65 @@ class KVHandoffStore:
     def req_ids(self) -> List[int]:
         return list(self._entries)
 
+    def src_of(self, req_id: int) -> Optional[str]:
+        e = self._entries.get(req_id)
+        return e.src if e is not None else None
+
     def put(self, req_id: int, rec, reg, *, src: str = "?",
-            bytes_per_token: int = 0) -> None:
+            bytes_per_token: int = 0, now: float = 0.0) -> None:
         assert req_id not in self._entries, f"req {req_id} already staged"
-        self._entries[req_id] = (rec, reg, src)
+        nbytes = rec.tokens * max(bytes_per_token, 0)
+        self._entries[req_id] = _Entry(rec, reg, src, nbytes, now)
         self.stats.staged += 1
-        self.stats.bytes_moved += rec.tokens * max(bytes_per_token, 0)
+        self.stats.bytes_moved += nbytes
+        self.stats.put_bytes += nbytes
+        self.stats.resident_bytes += nbytes
 
     def take(self, req_id: int) -> Tuple[object, object]:
         """Hand the staged record to a destination pool (delivery)."""
-        rec, reg, _src = self._entries.pop(req_id)
+        e = self._entries.pop(req_id)
         self.stats.delivered += 1
-        return rec, reg
+        self.stats.taken_bytes += e.nbytes
+        self.stats.resident_bytes -= e.nbytes
+        return e.rec, e.reg
 
     def drop(self, req_id: int) -> None:
         """Discard a staged record whose request died mid-handoff."""
-        if self._entries.pop(req_id, None) is not None:
+        e = self._entries.pop(req_id, None)
+        if e is not None:
             self.stats.dropped += 1
+            self.stats.dropped_bytes += e.nbytes
+            self.stats.resident_bytes -= e.nbytes
+
+    def expire(self, now: float, ttl_s: Optional[float] = None) -> List[int]:
+        """Reap records staged longer than the TTL; returns the reaped ids so
+        the router can re-route their (no longer decode-resumable) requests."""
+        ttl = self.ttl_s if ttl_s is None else ttl_s
+        if ttl is None:
+            return []
+        reaped = [rid for rid, e in self._entries.items()
+                  if now - e.t_put > ttl]
+        for rid in reaped:
+            e = self._entries.pop(rid)
+            self.stats.expired += 1
+            self.stats.expired_bytes += e.nbytes
+            self.stats.resident_bytes -= e.nbytes
+        return reaped
 
     def staged_tokens(self, req_id: int) -> int:
-        entry = self._entries.get(req_id)
-        return entry[0].tokens if entry is not None else 0
+        e = self._entries.get(req_id)
+        return e.rec.tokens if e is not None else 0
 
     def check_invariants(self) -> None:
-        """At quiesce the store must be empty: every exported record was
-        either delivered to a decode pool or explicitly dropped."""
+        """At quiesce the store must be empty (every exported record was
+        delivered, dropped, or expired) and the byte ledger must balance."""
+        s = self.stats
+        assert (s.put_bytes - s.taken_bytes - s.dropped_bytes
+                - s.expired_bytes == s.resident_bytes), (
+            f"handoff byte ledger off: put={s.put_bytes} taken={s.taken_bytes}"
+            f" dropped={s.dropped_bytes} expired={s.expired_bytes}"
+            f" resident={s.resident_bytes}")
+        assert s.resident_bytes == sum(e.nbytes for e in self._entries.values())
         assert not self._entries, (
             f"handoff store leaked staged records: {sorted(self._entries)}"
         )

@@ -47,12 +47,13 @@ from repro.core.scheduler import ChunkedPrefillScheduler, ScheduledBatch
 from repro.engine.costmodel import CostModel, CostModelConfig
 from repro.engine.kv_cache import KVBlockPool, KVPoolConfig, PAGED_RESIDENT
 from repro.engine.metrics import (
-    LatencyReport, MemoryReport, SLOReport, summarize, summarize_memory,
-    summarize_slo,
+    LatencyReport, MemoryReport, RobustnessReport, SLOReport, summarize,
+    summarize_memory, summarize_robustness, summarize_slo,
 )
 from repro.kernels.ops import gather_swap_pages, scatter_swap_pages
 from repro.engine.sampler import SamplerConfig, sample_tokens
 from repro.models.model import Model, build_model
+from repro.robustness import FailoverStats, ReplicaHealth
 
 
 @dataclass
@@ -78,6 +79,11 @@ class EngineConfig:
     # scratch, the A/B default); "swap" stages it host-side and restores it
     # on re-schedule — the scheduler picks per victim via the cost model
     preemption_mode: str = "recompute"
+    # numerics quarantine: the fused step additionally emits a per-slot
+    # all-finite mask over the logits (one extra readback lane, no extra
+    # dispatch); the serve loop sheds requests whose sampled logits went
+    # NaN/Inf (shed_reason="numerics") instead of streaming garbage ids
+    nan_guard: bool = False
     sampler: SamplerConfig = field(default_factory=SamplerConfig)
     seed: int = 0
 
@@ -107,6 +113,13 @@ class InflightRound:
     out_index: Dict[int, int] = field(default_factory=dict)
     finished: List[Request] = field(default_factory=list)
     prefill_ids: set = field(default_factory=set)   # this round's prefill reqs
+    # nan_guard: per-slot all-finite logits mask (async readback alongside
+    # toks); drain fills nonfinite with the sampled req_ids whose logits
+    # carried NaN/Inf so the serve loop can quarantine them
+    finite: Optional[jax.Array] = None
+    nonfinite: set = field(default_factory=set)
+    # the batch this round executed — a crash unwind enumerates its members
+    batch: Optional[ScheduledBatch] = None
 
 
 class JAXEngine:
@@ -129,6 +142,14 @@ class JAXEngine:
         # is built to close); fed by execute()/dispatch()
         self.bubble_ms: List[float] = []
         self._t_ready: Optional[float] = None
+        # nan_guard: req_ids whose sampled logits were non-finite in the most
+        # recently drained round (sync serve loops read it after execute())
+        self.last_nonfinite: set = set()
+        # storage poisoned by the nan_logits chaos site.  Pages/slots released
+        # by the quarantined victim go back to the free pool still holding
+        # NaN, so a later request reusing them would read non-finite lanes it
+        # never wrote — scrub_poisoned() zeroes them once the victim is shed.
+        self._poisoned: List[tuple] = []
 
         # swap-out preemption: device->host gathers whose async host copy has
         # not drained yet — (req_id, staging record, per-cache-tensor
@@ -180,6 +201,9 @@ class JAXEngine:
             the SAME dispatch as the forward pass (no follow-up host ops)."""
             toks = sample_tokens(logits, rng, self.cfg.sampler)
             new_last = jnp.where(sample_mask, toks, last_token)
+            if cfg.nan_guard:
+                finite = jnp.isfinite(logits).all(axis=-1)
+                return toks, cache, lens + chunk_lens, new_last, finite
             return toks, cache, lens + chunk_lens, new_last
 
         if cfg.paged_kv:
@@ -281,7 +305,8 @@ class JAXEngine:
             if self.cfg.paged_kv:
                 args += (self.block_tables,)
             args += (self.last_token, off, off)
-            toks, self.cache, self.lens, self.last_token = self._step(*args, sub)
+            out = self._step(*args, sub)
+            toks, self.cache, self.lens, self.last_token = out[:4]
             jax.block_until_ready(toks)
         # reset cache/lens state touched by the dummy rounds (paged writes all
         # land in the sink page, which is never read back)
@@ -471,6 +496,54 @@ class JAXEngine:
                 self.cache[nm] = self.cache[nm].at[:, slot].set(jnp.asarray(a))
         self.lens = self.lens.at[slot].set(tokens)
 
+    def poison_kv(self, req: Request) -> None:
+        """Chaos hook (the ``nan_logits`` fault site): corrupt the request's
+        OWN attended KV so its next forward pass yields non-finite logits,
+        exercising the numerics-quarantine path end to end.  Only PRIVATE
+        storage is touched — shared prefix pages (refcount > 1) are skipped,
+        so co-resident requests stay bit-identical to a fault-free run."""
+        slot = self.slot_of.get(req.req_id)
+        if slot is None:
+            return
+        written = int(jax.device_get(self.lens)[slot])
+        if written <= 0:
+            return
+        if self.cfg.paged_kv:
+            table = self.kv_pool.tables.get(req.req_id, [])
+            if not table:
+                return
+            bs = self.kv_pool.cfg.block_size
+            bi = min((written - 1) // bs, len(table) - 1)
+            while bi >= 0 and self.kv_pool._ref.get(table[bi], 1) > 1:
+                bi -= 1
+            if bi < 0:
+                return           # every page is shared: nothing safe to poison
+            pid = table[bi]
+            for nm in self._cache_names():
+                self.cache[nm] = self.cache[nm].at[:, pid].set(jnp.nan)
+            self._poisoned.append(("page", pid))
+        else:
+            for nm in ("k", "v"):
+                self.cache[nm] = (
+                    self.cache[nm].at[:, slot, written - 1].set(jnp.nan)
+                )
+            self._poisoned.append(("dense", slot, written - 1))
+
+    def scrub_poisoned(self) -> None:
+        """Zero the storage poison_kv() corrupted.  Called once the victim is
+        quarantined: its pages return to the free pool, and a NaN lane the
+        next owner never overwrites must not re-trigger the guard on it."""
+        for entry in self._poisoned:
+            if entry[0] == "page":
+                for nm in self._cache_names():
+                    self.cache[nm] = self.cache[nm].at[:, entry[1]].set(0)
+            else:
+                for nm in ("k", "v"):
+                    self.cache[nm] = (
+                        self.cache[nm].at[:, entry[1], entry[2]].set(0)
+                    )
+        self._poisoned.clear()
+
     # -- prefix-cache payloads -------------------------------------------------
     def _restore_prefix_dense(self, req: Request, slot: int) -> None:
         """Dense layout only: copy a prefix-cache hit's stored K/V payloads
@@ -628,9 +701,14 @@ class JAXEngine:
         t_dispatch = time.perf_counter()
         if self._t_ready is not None:
             self.bubble_ms.append((t_dispatch - self._t_ready) * 1e3)
-        toks, self.cache, self.lens, self.last_token = self._step(*args, sub)
+        out = self._step(*args, sub)
+        toks, self.cache, self.lens, self.last_token = out[:4]
+        finite = out[4] if len(out) > 4 else None
         toks.copy_to_host_async()
-        return InflightRound(toks=toks, sampled=sampled, t_dispatch=t_dispatch)
+        if finite is not None:
+            finite.copy_to_host_async()
+        return InflightRound(toks=toks, sampled=sampled, t_dispatch=t_dispatch,
+                             finite=finite)
 
     def drain(self, inflight: InflightRound) -> float:
         """Block until the round's sampled ids are host-side, then patch the
@@ -643,6 +721,14 @@ class JAXEngine:
         toks = np.asarray(inflight.toks)
         self._t_ready = time.perf_counter()
         wall_ms = (self._t_ready - inflight.t_dispatch) * 1e3
+        if inflight.finite is not None:
+            fin = np.asarray(inflight.finite)
+            inflight.nonfinite = {
+                req.req_id for req, slot in inflight.sampled if not fin[slot]
+            }
+        # sync-mode mirror (execute() discards the InflightRound): the serve
+        # loop reads the quarantine set of the round it just executed here
+        self.last_nonfinite = inflight.nonfinite
         # swap-out staging retires on the same one-round-late path: gathers
         # dispatched before this round's step are host-side by now (or the
         # asarray below bounds the wait)
@@ -675,6 +761,7 @@ class ServeResult:
     memory: Optional[MemoryReport] = None     # KV pool lifecycle summary
     host_bubble_ms: Optional[List[float]] = None   # device-idle gap per round
     slo: Optional[SLOReport] = None           # per-tenant attainment gauges
+    robustness: Optional["RobustnessReport"] = None  # chaos/fault summary
 
 
 def compress_idle_gap(pending: List[Request], next_i: int, now: float) -> None:
@@ -739,6 +826,28 @@ class ReplicaServer:
         self.inflight: Optional[InflightRound] = None
         self.rounds = 0
         self.outputs: Dict[int, List[int]] = {}
+        # fault tolerance (repro.robustness): an attached injector fires
+        # seeded chaos sites inside step(); fault_tolerant converts any
+        # exception out of a round into a crash unwind + "error" status
+        # instead of tearing down the serve loop
+        self.injector = None
+        self.fault_tolerant = False
+        self.last_error: Optional[BaseException] = None
+        self.crash_unwinds = 0
+        self.crash_requeued = 0
+        # local retry bound: a request requeued by _crash_cleanup more than
+        # max_crash_retries times sheds terminally instead of cycling — on a
+        # single replica there is no fleet to fail over to, and a repeating
+        # crash site must not livelock the serve loop (None = unbounded)
+        self.max_crash_retries: Optional[int] = None
+        self._crash_retries: Dict[int, int] = {}
+        self.crash_shed: List[Request] = []
+        self.quarantined: List[Request] = []
+        # torn-round bookkeeping for _crash_cleanup: the round being drained
+        # (popped off self.inflight but not yet patched/delivered) and the
+        # batch scheduled-but-not-yet-retired by on_batch_done
+        self._draining: Optional[InflightRound] = None
+        self._pending_batch: Optional[ScheduledBatch] = None
         self.feats: List[np.ndarray] = []
         self.lats: List[float] = []
         self.t_start = time.perf_counter()
@@ -829,6 +938,29 @@ class ReplicaServer:
 
     # -- one scheduling round --------------------------------------------------
     def step(self, now: float) -> str:
+        """Run one round, optionally under the fault boundary: chaos sites
+        fire here and — when ``fault_tolerant`` — any exception out of the
+        round (injected or real) is converted into a crash unwind plus an
+        ``"error"`` status the health machinery consumes, instead of tearing
+        down the whole serve loop."""
+        if self.injector is None and not self.fault_tolerant:
+            return self._step_impl(now)
+        try:
+            inj = self.injector
+            if inj is not None:
+                spec = inj.fire("slow_round_ms", replica=self.name)
+                if spec is not None:
+                    time.sleep(max(spec.value, 0.0) / 1e3)
+                inj.maybe_raise("replica_step_crash", replica=self.name)
+            return self._step_impl(now)
+        except Exception as e:  # noqa: BLE001 — the replica fault boundary
+            if not self.fault_tolerant:
+                raise
+            self.last_error = e
+            self._crash_cleanup()
+            return "error"
+
+    def _step_impl(self, now: float) -> str:
         sched, engine = self.sched, self.engine
         drained_eagerly = False
         if self.inflight is not None and self.inflight.toks.is_ready():
@@ -869,6 +1001,15 @@ class ReplicaServer:
                 return "finalized"
             return "drained" if drained_eagerly else "starved"
 
+        # the batch is booked and counted but not yet retired: a crash
+        # anywhere before on_batch_done must strip it back out of the stats
+        self._pending_batch = batch
+        if self.injector is not None:
+            for r in batch.decode_reqs:
+                if self.injector.fire("nan_logits", replica=self.name,
+                                      req_id=r.req_id) is not None:
+                    engine.poison_kv(r)
+
         if self.pipelined:
             if self.inflight is not None:
                 # round N-1's ids land BEFORE round N+1 stages anything that
@@ -878,6 +1019,7 @@ class ReplicaServer:
                 # unwound from it before it dispatches.
                 self._drain_inflight(pending_batch=batch)
             self.inflight = engine.dispatch(batch)
+            self.inflight.batch = batch
             wall_ms = None
         else:
             wall_ms = engine.execute(batch)
@@ -893,6 +1035,26 @@ class ReplicaServer:
 
         now2 = self._now()
         sched.on_batch_done(batch, now2)       # releases finished KV refs
+        self._pending_batch = None             # retired: charged and counted
+
+        # sync-mode numerics quarantine: execute() drained inside the round,
+        # so the finite mask is already host-visible.  Roll back the poisoned
+        # token (its charge refunds), shed terminally, deliver the clean
+        # prefix.  Pipelined mode does the same one round late, at drain.
+        if not self.pipelined and engine.last_nonfinite:
+            prefill_ids = {q.req_id for q, _ in batch.prefill_chunks}
+            for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
+                if r.req_id not in engine.last_nonfinite:
+                    continue
+                if r.rollback_undrained(1):
+                    sched.refund_rolled_back(
+                        r, first_token=r.req_id in prefill_ids)
+                sched.shed_request(r, reason="numerics")
+                self.outputs[r.req_id] = list(r.output_tokens)
+                self.quarantined.append(r)
+                if self.on_stopped is not None:
+                    self.on_stopped(self, r)
+            engine.scrub_poisoned()
 
         if self.pipelined:
             # the placeholder each sampled request just received sits at the
@@ -917,6 +1079,8 @@ class ReplicaServer:
             # drains internally), so stops and per-token timestamps apply in
             # the same round
             for r in batch.decode_reqs + [q for q, _ in batch.prefill_chunks]:
+                if r.req_id in engine.last_nonfinite:
+                    continue       # quarantined above: its token rolled back
                 if r.remaining_prefill == 0 and r.output_tokens:
                     r.token_times.append(now2)
                 if (r.stop_token is not None
@@ -938,6 +1102,9 @@ class ReplicaServer:
     # -- drain -----------------------------------------------------------------
     def _drain_inflight(self, pending_batch: Optional[ScheduledBatch] = None) -> None:
         inflight, self.inflight = self.inflight, None
+        # visible to _crash_cleanup until this round is fully delivered: a
+        # crash inside drain/stop processing must unwind it, not strand it
+        self._draining = inflight
         wall_ms = self.engine.drain(inflight)
         if self.collect_samples:
             self.lats.append(wall_ms)
@@ -946,7 +1113,29 @@ class ReplicaServer:
         # client could receive them — so pipelined LatencyReports are not
         # systematically understated vs the synchronous engine's
         now_v = self._now()
+        # numerics quarantine FIRST: a request whose sampled logits were
+        # non-finite must not stamp, deliver, or stop on the garbage id.  The
+        # poisoned placeholder rolls back (charge refunded), the request
+        # sheds terminally, and its clean delivered prefix is the output.
         for req, _slot in inflight.sampled:
+            if req.req_id not in inflight.nonfinite:
+                continue
+            if req in inflight.finished:
+                inflight.finished.remove(req)
+            if req.rollback_undrained(1):
+                self.sched.refund_rolled_back(
+                    req, first_token=req.req_id in inflight.prefill_ids)
+            self.sched.shed_request(
+                req, reason="numerics", batch=pending_batch)
+            self.outputs[req.req_id] = list(req.output_tokens)
+            self.quarantined.append(req)
+            if self.on_stopped is not None:
+                self.on_stopped(self, req)
+        if inflight.nonfinite:
+            self.engine.scrub_poisoned()
+        for req, _slot in inflight.sampled:
+            if req.req_id in inflight.nonfinite:
+                continue
             if inflight.out_index.get(req.req_id) == 0:
                 req.first_token_time = now_v
             if req.req_id in inflight.prefill_ids:
@@ -973,6 +1162,99 @@ class ReplicaServer:
             self.sched.on_stop(req, pending_batch)
             if self.on_stopped is not None:
                 self.on_stopped(self, req)
+        self._draining = None
+
+    # -- crash unwind ----------------------------------------------------------
+    def _crash_cleanup(self) -> None:
+        """A step crashed somewhere between scheduling and delivery: unwind
+        the torn round(s) so this replica (or, after failover, its
+        survivors) can carry on without leaking slots, KV blocks, or phantom
+        VTC charges.
+
+        Up to three torn artifacts can exist:
+          * ``_draining``      — a round popped by ``_drain_inflight`` that
+                                 crashed before its tokens were delivered,
+          * ``self.inflight``  — a round dispatched but never drained,
+          * ``_pending_batch`` — a batch scheduled (KV booked, stats counted)
+                                 whose ``on_batch_done`` never ran.
+
+        Undrained placeholder tokens roll back and their charge refunds (the
+        values never became host-visible; greedy recompute regenerates them
+        bit-identically).  Every involved live request is then evicted from
+        the scheduler, folded via ``preempt()`` (at-most-once delivery), and
+        re-queued locally.  Already-delivered requests are left alone."""
+        torn: List[InflightRound] = []
+        if self._draining is not None:
+            torn.append(self._draining)
+            self._draining = None
+        if self.inflight is not None:
+            torn.append(self.inflight)
+            self.inflight = None
+        pending = self._pending_batch
+        self._pending_batch = None
+
+        victims: Dict[int, Request] = {}
+        for infl in torn:
+            for req, _slot in infl.sampled:
+                victims[req.req_id] = req
+            for req in infl.finished:
+                victims[req.req_id] = req
+            if infl.batch is not None:
+                for req in infl.batch.decode_reqs:
+                    victims[req.req_id] = req
+                for req, _c in infl.batch.prefill_chunks:
+                    victims[req.req_id] = req
+        if pending is not None:
+            for req in pending.decode_reqs:
+                victims[req.req_id] = req
+            for req, _c in pending.prefill_chunks:
+                victims[req.req_id] = req
+
+        for infl in torn:
+            for req, _slot in infl.sampled:
+                if infl.out_index.get(req.req_id) is None:
+                    continue   # crash hit before the placeholder bookkeeping
+                if (req.state == RequestState.FINISHED
+                        and self.outputs.get(req.req_id)):
+                    continue   # fully delivered before the crash: irrevocable
+                if req.rollback_undrained(1):
+                    self.sched.refund_rolled_back(
+                        req, first_token=req.req_id in infl.prefill_ids)
+
+        for req in victims.values():
+            if req.state == RequestState.FINISHED:
+                continue       # delivered, stopped, or shed before the crash
+            if (self.kv_pool is not None
+                    and req.req_id not in self.kv_pool._reg
+                    and self.kv_pool.swap_state(req.req_id) is None
+                    and not self.kv_pool.tables.get(req.req_id)):
+                # no longer owned here: the round that tore also completed
+                # this request's prefill and the router exported its handoff
+                # (export_swap popped the registration) before the crash.
+                # Its placeholder rolled back above; the handoff pipeline (or
+                # the router's failover retraction, if this replica is dying)
+                # owns its fate now.
+                continue
+            k = self._crash_retries.get(req.req_id, 0) + 1
+            self._crash_retries[req.req_id] = k
+            if (self.max_crash_retries is not None
+                    and k > self.max_crash_retries):
+                self.sched.shed_request(
+                    req, reason="replica_failure", batch=pending)
+                self.outputs[req.req_id] = list(req.output_tokens)
+                self.crash_shed.append(req)
+                continue
+            self.sched.evict_request(req, pending)
+            req.preempt()
+            if self.kv_pool is not None:
+                self.kv_pool.register_request(
+                    req.req_id, tenant=req.tenant,
+                    prompt_tokens=req.prompt_tokens,
+                    prompt_len=req.prompt_len,
+                )
+            self.sched.requeue_failed(req)
+            self.crash_requeued += 1
+        self.crash_unwinds += 1
 
     def finish(self) -> None:
         """End-of-serve cleanup: drain the last round and land any pending
@@ -991,6 +1273,7 @@ def serve(
     collect_samples: bool = False,
     realtime_arrivals: bool = False,
     max_rounds: int = 200_000,
+    robustness=None,
 ) -> ServeResult:
     """Continuous-batching serve loop over real execution.
 
@@ -1023,6 +1306,19 @@ def serve(
     server = ReplicaServer(
         scheduler, engine, kv_pool=kv_pool, collect_samples=collect_samples,
     )
+    if robustness is not None:
+        # colocated fault tolerance: crash unwinds + NaN quarantine survive
+        # in-place (there is no second replica to fail over to — replica
+        # death/failover lives in the disaggregated router)
+        server.fault_tolerant = True
+        server.injector = robustness.make_injector()
+        server.max_crash_retries = robustness.max_retries
+    # the same health machine the fleet router runs, over the lone replica:
+    # a persistent fault (a repeat-crash site, a wedged device) must not
+    # spin the serve loop forever — once DEAD, remaining work sheds
+    # terminally (exactly-once termination with no fleet to fail over to)
+    health = (ReplicaHealth(robustness.health, "replica0")
+              if robustness is not None else None)
     next_i = 0
     t_start = time.perf_counter()
     server.start(t_start)
@@ -1034,6 +1330,12 @@ def serve(
             server.submit(pending[next_i])
             next_i += 1
         status = server.step(now)
+        if health is not None:
+            health.observe(status, busy=server.busy(),
+                           error=server.last_error
+                           if status == "error" else None)
+            if health.is_dead:
+                break
         if status == "idle":
             if next_i >= len(pending):
                 break
@@ -1043,6 +1345,21 @@ def serve(
                 compress_idle_gap(pending, next_i, now)
         elif status == "starved":
             time.sleep(0.0005)
+
+    if health is not None and health.is_dead:
+        # the lone replica died: every request not already terminal sheds.
+        # Submitted requests unwind their bookings through the scheduler;
+        # unarrived backlog never registered anything and just marks shed.
+        for i, r in enumerate(pending):
+            if r.state == RequestState.FINISHED:
+                continue
+            if i < next_i:
+                scheduler.shed_request(r, reason="replica_failure")
+            else:
+                r.shed_reason = "replica_failure"
+                r.state = RequestState.FINISHED
+            server.outputs[r.req_id] = list(r.output_tokens)
+            server.crash_shed.append(r)
 
     server.finish()
     now = time.perf_counter() - t_start
@@ -1065,5 +1382,14 @@ def serve(
         slo=(
             summarize_slo(requests, scheduler.fairness.registry)
             if scheduler.fairness is not None else None
+        ),
+        robustness=(
+            summarize_robustness(
+                FailoverStats(), injector=server.injector,
+                quarantined=len(server.quarantined),
+                crash_unwinds=server.crash_unwinds,
+                crash_shed=len(server.crash_shed),
+            )
+            if robustness is not None else None
         ),
     )

@@ -296,6 +296,71 @@ class SLOReport:
         return out
 
 
+# ---------------------------------------------------------------------------
+# fault-tolerance / chaos metrics
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RobustnessReport:
+    """One serving run's fault-tolerance summary.
+
+    ``recovered_resumable`` counts failovers that re-placed a host-staged KV
+    record on a survivor (zero re-prefilled tokens — the acceptance metric
+    of ``bench_failover``); ``requeued_reprefill`` counts retries that had
+    to fold-and-recompute.  ``shed_replica_failure`` are terminal sheds
+    after ``max_retries`` (or a fully dead fleet).  ``faults_fired`` is the
+    injector's total — a chaos run that fired nothing tested nothing."""
+
+    replicas_died: int = 0
+    failovers: int = 0
+    recovered_resumable: int = 0
+    requeued_reprefill: int = 0
+    retries: int = 0
+    shed_replica_failure: int = 0
+    quarantined: int = 0             # NaN/Inf-quarantined requests
+    expired_handoffs: int = 0        # TTL'd out of the handoff store
+    crash_unwinds: int = 0           # serve-loop crash cleanups
+    colocated_fallbacks: int = 0     # degraded-pool colocation decisions
+    faults_fired: int = 0
+    events: List[str] = None
+
+    def row(self) -> Dict[str, float]:
+        return {
+            "replicas_died": float(self.replicas_died),
+            "failovers": float(self.failovers),
+            "recovered_resumable": float(self.recovered_resumable),
+            "requeued_reprefill": float(self.requeued_reprefill),
+            "shed_replica_failure": float(self.shed_replica_failure),
+            "quarantined": float(self.quarantined),
+            "expired_handoffs": float(self.expired_handoffs),
+            "crash_unwinds": float(self.crash_unwinds),
+            "faults_fired": float(self.faults_fired),
+        }
+
+
+def summarize_robustness(rstats, *, injector=None, quarantined: int = 0,
+                         crash_unwinds: int = 0,
+                         crash_shed: int = 0) -> RobustnessReport:
+    """Fold a router's ``FailoverStats`` (plus per-replica counters the
+    router does not own — quarantines, crash unwinds, and local
+    retry-exhaustion sheds) into a report."""
+    return RobustnessReport(
+        replicas_died=rstats.replicas_died,
+        failovers=rstats.failovers,
+        recovered_resumable=rstats.recovered_resumable,
+        requeued_reprefill=rstats.requeued_reprefill,
+        retries=rstats.retries,
+        shed_replica_failure=rstats.shed_replica_failure + crash_shed,
+        quarantined=quarantined,
+        expired_handoffs=rstats.expired_handoffs,
+        crash_unwinds=crash_unwinds,
+        colocated_fallbacks=rstats.colocated_fallbacks,
+        faults_fired=(injector.count() if injector is not None else 0),
+        events=list(rstats.events),
+    )
+
+
 def summarize_slo(requests: Iterable[Request], registry) -> SLOReport:
     """Classify every request into the attainment buckets against its
     tenant's ``ttft_slo_s``/``e2e_slo_s``.  ``registry`` is duck-typed:

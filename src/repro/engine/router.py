@@ -80,6 +80,11 @@ class RouterConfig:
     # fanning requests across replicas.  Off => per-replica counters (the
     # pre-disaggregation behavior: each replica only sees its local slice).
     shared_vtc: bool = True
+    # bound on replays per request across replica failures; past it the
+    # request sheds terminally (shed_reason="replica_failure") instead of
+    # ping-ponging forever between dying replicas.  None = unbounded (the
+    # pre-fault-tolerance behavior).
+    max_retries: Optional[int] = None
 
 
 class Router:
@@ -91,6 +96,8 @@ class Router:
         self.completed: Dict[int, Request] = {}
         self.clock = 0.0
         self.events: List[str] = []
+        self._replays: Dict[int, int] = {}           # req_id -> replay count
+        self.shed_failed: List[Request] = []         # terminal replica_failure sheds
         self._shared_vtc = (
             make_shared_vtc(cfg.scheduler.fairness)
             if cfg.shared_vtc and cfg.scheduler.fairness is not None
@@ -186,6 +193,19 @@ class Router:
         replay = [r for r in st.assigned.values() if r.state != RequestState.FINISHED]
         st.assigned.clear()
         for r in replay:
+            k = self._replays.get(r.req_id, 0) + 1
+            self._replays[r.req_id] = k
+            if self.cfg.max_retries is not None and k > self.cfg.max_retries:
+                # retries exhausted: terminal shed, never silently lost — the
+                # journal entry ends FINISHED so the run can still quiesce
+                r.shed_reason = "replica_failure"
+                r.state = RequestState.FINISHED
+                self.journal[r.req_id] = r
+                self.shed_failed.append(r)
+                self.events.append(
+                    f"t={self.clock:.3f} req {r.req_id} shed after {k - 1} replays"
+                )
+                continue
             fresh = Request(
                 prompt_len=r.prompt_len,
                 max_new_tokens=r.max_new_tokens,

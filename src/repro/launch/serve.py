@@ -53,6 +53,24 @@ def profile_and_train_predictor(
     return pred
 
 
+def robustness_from_args(args):
+    """--failover / --chaos-seed -> a RobustnessConfig (or None: every serve
+    path stays bit-identical to the fault-oblivious code)."""
+    if not (args.failover or args.chaos_seed is not None):
+        return None
+    from repro.robustness import FaultInjector, FaultPlan, RobustnessConfig
+
+    injector = None
+    if args.chaos_seed is not None:
+        plan = FaultPlan.fuzz(args.chaos_seed, n_faults=args.chaos_faults)
+        injector = FaultInjector(plan)
+    return RobustnessConfig(
+        max_retries=args.max_retries,
+        handoff_ttl_s=args.handoff_ttl if args.handoff_ttl > 0 else None,
+        injector=injector,
+    )
+
+
 def run_disagg(args):
     """--disagg: build a prefill pool + decode pool fleet and serve the same
     workload through the cross-replica KV handoff path."""
@@ -68,6 +86,7 @@ def run_disagg(args):
             n_decode=args.n_decode,
             min_handoff_tokens=args.min_handoff_tokens,
             cost=HandoffCostConfig() if args.handoff_cost else None,
+            robustness=robustness_from_args(args),
         ),
         engine_cfg=EngineConfig(
             n_slots=16, max_context=512, use_pallas=args.pallas,
@@ -75,6 +94,7 @@ def run_disagg(args):
             pages_per_tile=args.pages_per_tile,
             kv_layout=args.kv_layout, buffering_depth=args.buffering_depth,
             preemption_mode=args.preemption_mode,
+            nan_guard=args.nan_guard,
         ),
         sched_cfg=SchedulerConfig(
             policy=args.policy, alpha=args.alpha, beta=args.beta,
@@ -91,6 +111,16 @@ def run_disagg(args):
     attach_prompt_tokens(reqs, model_cfg.vocab_size, seed=1)
     res = serve_disagg(reqs, router)
     router.check_invariants()
+
+    if res.robustness is not None:
+        rb = res.robustness
+        print(f"  fault tolerance: died={rb.replicas_died} "
+              f"failovers={rb.failovers} resumable={rb.recovered_resumable} "
+              f"reprefill={rb.requeued_reprefill} "
+              f"shed={rb.shed_replica_failure} "
+              f"quarantined={rb.quarantined} faults_fired={rb.faults_fired}")
+        for ev in rb.events:
+            print(f"    {ev}")
 
     row = res.report.row()
     print(f"\n=== {args.arch} | DISAGG {args.n_prefill}P+{args.n_decode}D "
@@ -193,6 +223,25 @@ def main(argv=None):
     ap.add_argument("--e2e-slo", type=float, default=0.0,
                     help="end-to-end completion SLO in seconds for the "
                          "serving tenant (0 = off; see --ttft-slo)")
+    ap.add_argument("--failover", action="store_true",
+                    help="fault-tolerant serving: replica health tracking, "
+                         "crash unwinds, and (with --disagg) failover of a "
+                         "dead replica's requests onto survivors")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="re-placements per request across replica failures "
+                         "before a terminal shed (with --failover)")
+    ap.add_argument("--handoff-ttl", type=float, default=0.0,
+                    help="reap staged handoff records older than this many "
+                         "seconds (0 = no TTL; with --failover)")
+    ap.add_argument("--nan-guard", action="store_true",
+                    help="per-round finite-logits check: requests whose "
+                         "logits go NaN/Inf are quarantined (terminal shed "
+                         "reason 'numerics') instead of poisoning the batch")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="fuzz a deterministic fault plan from this seed and "
+                         "inject it (implies --failover)")
+    ap.add_argument("--chaos-faults", type=int, default=3,
+                    help="number of faults in the fuzzed plan (--chaos-seed)")
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--json", default=None)
     args = ap.parse_args(argv)
@@ -207,6 +256,7 @@ def main(argv=None):
         pages_per_tile=args.pages_per_tile,
         kv_layout=args.kv_layout, buffering_depth=args.buffering_depth,
         preemption_mode=args.preemption_mode,
+        nan_guard=args.nan_guard,
     ))
 
     predictor = None
@@ -249,7 +299,8 @@ def main(argv=None):
     attach_prompt_tokens(reqs, model_cfg.vocab_size, seed=1)
     kv_pool = pool_for_model(model_cfg, n_blocks=args.kv_blocks,
                              enable_prefix_cache=args.prefix_cache)
-    res = serve(reqs, sched, engine, kv_pool=kv_pool, collect_samples=False)
+    res = serve(reqs, sched, engine, kv_pool=kv_pool, collect_samples=False,
+                robustness=robustness_from_args(args))
 
     row = res.report.row()
     print(f"\n=== {args.arch} | policy={args.policy} lprs={args.lprs} "
@@ -261,6 +312,10 @@ def main(argv=None):
           f"preempt={args.preemption_mode} ===")
     print(f"finished {res.report.n_finished}/{res.report.n_total} "
           f"in {res.wall_s:.2f}s  ({res.rounds} rounds)")
+    if res.robustness is not None:
+        rb = res.robustness
+        print(f"  fault tolerance: crash_unwinds={rb.crash_unwinds} "
+              f"quarantined={rb.quarantined} faults_fired={rb.faults_fired}")
     for k, v in row.items():
         print(f"  {k:16s} {v*1e3 if 'e2e' in k or 'ttft' in k or 'prefill' in k or 'tpot' in k else v:10.2f}"
               + (" ms" if any(t in k for t in ("e2e", "ttft", "prefill", "tpot")) else ""))

@@ -74,6 +74,11 @@ class FairnessState:
         self.rejected: List[Request] = []
         self.shed: List[Request] = []          # SLO-shed at admission
         self.slo = None                        # SLOTracker (attach_slo)
+        # first-token bonus charges issued by on_batch_done (the +1 decode
+        # charged when a chunk completes a prefill, per Sarathi semantics);
+        # the chaos suite's charge identity needs this ledger NET of refunds:
+        #   charged == Σ scheduled tokens + first_token_charges
+        self.first_token_charges = 0
 
     def _decoding_tenants(self) -> List[str]:
         return [t for t, ids in self._decoding.items() if ids]
@@ -134,6 +139,15 @@ class FairnessState:
         if ids is not None:
             ids.discard(req.req_id)
 
+    def refund_token(self, req: Request, *, first_token: bool = False) -> None:
+        """Refund the charge of ONE rolled-back undrained token (crash or
+        numerics quarantine discarded it before it became host-visible).  A
+        token charged as the first-token bonus also decrements that ledger so
+        the chaos suite's charge identity keeps balancing."""
+        self.vtc.refund(req.tenant, decode_tokens=1)
+        if first_token:
+            self.first_token_charges -= 1
+
     def on_round(self, now: float) -> None:
         self.queue.set_now(now)
 
@@ -152,6 +166,7 @@ class FairnessState:
                 # output token (Sarathi semantics) — charge it as decode so
                 # per-tenant service matches tokens delivered
                 decode[req.tenant] = decode.get(req.tenant, 0) + 1
+                self.first_token_charges += 1
         for req in batch.decode_reqs:
             decode[req.tenant] = decode.get(req.tenant, 0) + 1
         for t in set(prefill) | set(decode):

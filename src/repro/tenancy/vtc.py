@@ -74,6 +74,32 @@ class VirtualTokenCounter:
         svc.charges += 1
         return inc
 
+    def refund(self, tenant: str, prefill_tokens: int = 0,
+               decode_tokens: int = 0) -> float:
+        """Refund charged tokens whose work was DISCARDED before delivery (a
+        crashed round's undrained placeholders, a quarantined non-finite
+        sample).  The inverse of ``charge``: the tenant's virtual service and
+        raw counters both come back down, keeping fleet-wide charge equal to
+        executed-and-surviving work.  Never use it for delivered tokens —
+        streamed output is irrevocable and its service was really rendered."""
+        if prefill_tokens < 0 or decode_tokens < 0:
+            raise ValueError("negative token refund")
+        if prefill_tokens == 0 and decode_tokens == 0:
+            return 0.0
+        w = self.registry.weight(tenant)
+        dec = (
+            self.prefill_weight * prefill_tokens
+            + self.decode_weight * decode_tokens
+        ) / w
+        self._virtual[tenant] = self._virtual.get(tenant, 0.0) - dec
+        svc = self._service.setdefault(tenant, TenantService())
+        svc.prefill_tokens -= prefill_tokens
+        svc.decode_tokens -= decode_tokens
+        assert svc.prefill_tokens >= 0 and svc.decode_tokens >= 0, (
+            f"refund exceeds charged service for tenant {tenant!r}"
+        )
+        return dec
+
     def on_activate(self, tenant: str, active: Iterable[str]) -> None:
         """Lift a (re)activating tenant's counter to the active floor.
 

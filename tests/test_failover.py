@@ -1,0 +1,550 @@
+"""Fault-tolerant fleet: replica failure recovery, handoff timeouts, and the
+deterministic chaos harness.
+
+The acceptance bar is the repo's usual one — GREEDY OUTPUT BIT-IDENTITY —
+extended to partial failure: under ANY seeded fault plan, every submitted
+request terminates exactly once (finished, quarantined, or shed with a
+recorded reason), no KV block / slot / handoff byte leaks anywhere in the
+fleet, the shared VTC's charge balances to tokens actually executed by
+surviving work, and requests untouched by the faults produce exactly the
+tokens of the fault-free run.  A decode replica killed while its handoff
+records are still host-staged recovers them decode-resumable: ZERO
+re-prefilled tokens on the decode pool.
+"""
+import pytest
+
+from repro.configs import tiny_config
+from repro.core.request import Request, RequestState
+from repro.core.scheduler import ChunkedPrefillScheduler, SchedulerConfig
+from repro.disagg import DisaggConfig, build_disagg, serve_disagg
+from repro.disagg.handoff import KVHandoffStore
+from repro.engine.engine import EngineConfig, JAXEngine, serve
+from repro.engine.kv_cache import KVBlockPool, KVPoolConfig
+from repro.engine.workload import shared_prefix
+from repro.robustness import (
+    FaultInjector,
+    FaultPlan,
+    FaultSpec,
+    HealthConfig,
+    HealthState,
+    InjectedFault,
+    ReplicaHealth,
+    RobustnessConfig,
+)
+from repro.tenancy import FairnessConfig, TenantSpec
+
+FAIRNESS = FairnessConfig(tenants=(
+    TenantSpec(name="a", weight=1.0), TenantSpec(name="b", weight=1.0),
+))
+
+
+def _two_wave(seed=5, n=12, new_tokens=10, tenants=False):
+    reqs = shared_prefix(n_requests=n, n_prefixes=2, prefix_len=48,
+                         suffix_range=(8, 16), max_new_tokens=new_tokens,
+                         inter_arrival_s=0.0, vocab_size=512, seed=seed)
+    for i, r in enumerate(reqs):
+        r.arrival_time = 0.0 if i < n // 2 else 60.0
+        if tenants:
+            r.tenant = "a" if i % 2 == 0 else "b"
+    return reqs
+
+
+def _build_fleet(*, robustness=None, n_decode=2, pipelined=True,
+                 fairness=None, n_blocks=64):
+    cfg = tiny_config("qwen1.5-0.5b")
+    return build_disagg(
+        cfg,
+        cfg=DisaggConfig(n_prefill=1, n_decode=n_decode,
+                         robustness=robustness),
+        engine_cfg=EngineConfig(n_slots=6, max_context=128, paged_kv=True,
+                                pipelined=pipelined, preemption_mode="swap",
+                                nan_guard=robustness is not None, seed=3),
+        sched_cfg=SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6,
+                                  fairness=fairness),
+        n_blocks=n_blocks, block_size=16,
+    )
+
+
+def _serve_colocated(reqs, *, robustness=None, pipelined=True, fairness=None,
+                     nan_guard=None, n_blocks=64):
+    cfg = tiny_config("qwen1.5-0.5b")
+    eng = JAXEngine(cfg, EngineConfig(
+        n_slots=6, max_context=128, paged_kv=True, pipelined=pipelined,
+        preemption_mode="swap",
+        nan_guard=(robustness is not None) if nan_guard is None else nan_guard,
+        seed=3))
+    pool = KVBlockPool(KVPoolConfig(n_blocks=n_blocks, block_size=16,
+                                    bytes_per_token=4,
+                                    enable_prefix_cache=True))
+    sched = ChunkedPrefillScheduler(
+        SchedulerConfig(policy="fcfs", token_budget=96, max_seqs=6,
+                        fairness=fairness))
+    res = serve(reqs, sched, eng, kv_pool=pool, robustness=robustness)
+    return res, sched, eng, pool
+
+
+def _assert_all_terminal(reqs):
+    """Exactly-once termination: every request ends FINISHED, and a request
+    that was never served carries a recorded shed reason."""
+    for r in reqs:
+        assert r.state == RequestState.FINISHED, r.req_id
+        if r.finish_time is None:
+            assert r.shed_reason is not None, r.req_id
+
+
+def _assert_fleet_clean(router):
+    """No leaks anywhere: block refcounts, swap staging, handoff bytes."""
+    router.check_invariants()
+    for rs in router.replicas:
+        assert not rs.engine.slot_of, (rs.name, rs.engine.slot_of)
+
+
+def _charge_identity(schedulers):
+    """charged == Σ executed tokens + first-token bonuses, NET of crash /
+    quarantine refunds — the invariant that says failures never double-bill
+    or phantom-bill a tenant."""
+    fair = [s.fairness for s in schedulers if s.fairness is not None]
+    if not fair:
+        return
+    vtc = fair[0].vtc
+    executed = sum(s.stats.scheduled_prefill_tokens
+                   + s.stats.scheduled_decode_tokens for s in schedulers)
+    bonuses = sum(f.first_token_charges for f in fair)
+    charged = sum(vtc.actual_tokens(t) for t in vtc.tenants())
+    assert charged == executed + bonuses, (charged, executed, bonuses)
+
+
+# ---------------------------------------------------------------------------
+# unit: injector determinism and scoping
+# ---------------------------------------------------------------------------
+
+
+def test_injector_nth_scoping():
+    plan = FaultPlan(specs=(
+        FaultSpec(site="replica_step_crash", nth=2, replica="decode0"),
+        FaultSpec(site="handoff_drop", nth=1, req_id=7),
+    ))
+    inj = FaultInjector(plan)
+    # global invocations on other replicas do not advance decode0's count
+    assert inj.fire("replica_step_crash", replica="prefill0") is None
+    assert inj.fire("replica_step_crash", replica="decode0") is None
+    spec = inj.fire("replica_step_crash", replica="decode0")
+    assert spec is not None and spec.nth == 2
+    # consumed: never fires again
+    assert inj.fire("replica_step_crash", replica="decode0") is None
+    # req scoping
+    assert inj.fire("handoff_drop", req_id=3) is None
+    assert inj.fire("handoff_drop", req_id=7) is not None
+    assert inj.count() == 2
+
+
+def test_injector_repeat_and_raise():
+    inj = FaultInjector(FaultPlan(specs=(
+        FaultSpec(site="replica_step_crash", nth=2, repeat=True),)))
+    inj.fire("replica_step_crash")
+    for _ in range(3):
+        with pytest.raises(InjectedFault):
+            inj.maybe_raise("replica_step_crash")
+    assert inj.count("replica_step_crash") == 3
+
+
+def test_fuzz_plan_is_seed_deterministic():
+    a = FaultPlan.fuzz(11, n_faults=5, replicas=("prefill0", "decode0"))
+    b = FaultPlan.fuzz(11, n_faults=5, replicas=("prefill0", "decode0"))
+    c = FaultPlan.fuzz(12, n_faults=5, replicas=("prefill0", "decode0"))
+    assert a == b
+    assert a != c
+    for s in a.specs:
+        assert s.nth >= 1
+
+
+# ---------------------------------------------------------------------------
+# unit: health state machine
+# ---------------------------------------------------------------------------
+
+
+def test_health_suspect_dead_and_probation():
+    h = ReplicaHealth(HealthConfig(suspect_after=1, dead_after=3, probation=2))
+    assert h.observe("round") is HealthState.HEALTHY
+    assert h.observe("error", error=RuntimeError("x")) is HealthState.SUSPECT
+    # probation: two clean productive steps recover
+    assert h.observe("round") is HealthState.SUSPECT
+    assert h.observe("drained") is HealthState.HEALTHY
+    # three consecutive errors kill
+    h.observe("error")
+    h.observe("error")
+    assert h.observe("error") is HealthState.DEAD
+    assert h.is_dead and not h.accepts_work
+    # terminal: nothing revives it
+    assert h.observe("round") is HealthState.DEAD
+    assert h.transitions[-1] == (HealthState.SUSPECT, HealthState.DEAD)
+
+
+def test_health_stall_detection_requires_busy():
+    h = ReplicaHealth(HealthConfig(suspect_after=1, dead_after=2,
+                                   stall_after=3))
+    for _ in range(10):
+        h.observe("starved", busy=False)   # empty replica: not a stall
+    assert h.state is HealthState.HEALTHY
+    for _ in range(3):
+        h.observe("starved", busy=True)
+    assert h.state is HealthState.SUSPECT
+    # "idle" is neutral either way
+    h2 = ReplicaHealth(HealthConfig(stall_after=0))   # disabled
+    for _ in range(20):
+        h2.observe("starved", busy=True)
+    assert h2.state is HealthState.HEALTHY
+
+
+# ---------------------------------------------------------------------------
+# unit: handoff store TTL + byte ledger
+# ---------------------------------------------------------------------------
+
+
+class _Rec:
+    def __init__(self, tokens):
+        self.tokens = tokens
+
+
+def test_handoff_store_ttl_and_byte_ledger():
+    store = KVHandoffStore(ttl_s=1.0)
+    store.put(1, _Rec(10), None, src="p0", bytes_per_token=4, now=0.0)
+    store.put(2, _Rec(20), None, src="p0", bytes_per_token=4, now=0.5)
+    assert store.stats.resident_bytes == 120
+    assert store.expire(0.9) == []
+    assert store.expire(1.2) == [1]          # only the older entry reaps
+    assert store.stats.expired == 1 and store.stats.expired_bytes == 40
+    store.take(2)
+    # ledger balance: put - taken - dropped - expired == resident (== 0 now)
+    store.check_invariants()
+    # no TTL configured -> expire is a no-op
+    s2 = KVHandoffStore()
+    s2.put(3, _Rec(5), None, now=0.0)
+    assert s2.expire(1e9) == []
+    s2.drop(3)
+    s2.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# sim router: bounded retries shed terminally
+# ---------------------------------------------------------------------------
+
+
+def test_sim_router_max_retries_sheds():
+    from repro.engine.router import Router, RouterConfig
+
+    cfg = RouterConfig(scheduler=SchedulerConfig(policy="fcfs",
+                                                 token_budget=64),
+                       max_retries=1)
+    router = Router(cfg, n_replicas=3)
+    reqs = [Request(req_id=i, prompt_len=64, max_new_tokens=16,
+                    arrival_time=0.0) for i in range(6)]
+
+    # kill two replicas in sequence: every request replays once (allowed),
+    # then anything still unfinished on the second dead replica sheds
+    def kill0(r):
+        r.kill_replica(0)
+
+    def kill1(r):
+        r.kill_replica(1)
+
+    router.run(reqs, fault_at={0.05: kill0, 0.3: kill1})
+    assert all(r.state == RequestState.FINISHED
+               for r in router.journal.values())
+    for r in router.shed_failed:
+        assert r.shed_reason == "replica_failure"
+    # the replay bound held: nobody exceeded max_retries + 1 placements
+    assert all(k <= cfg.max_retries + 1 for k in router._replays.values())
+
+
+# ---------------------------------------------------------------------------
+# flags-off / empty-plan bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_empty_plan_is_bit_identical_colocated():
+    """The fault-tolerance wrapper itself (try/except + injector probes with
+    an empty plan) must not perturb a single token."""
+    reqs_a = _two_wave()
+    res_a, *_ = _serve_colocated(reqs_a, robustness=None, nan_guard=False)
+    reqs_b = _two_wave()
+    res_b, *_ = _serve_colocated(
+        reqs_b, robustness=RobustnessConfig(injector=FaultInjector()),
+        nan_guard=False)
+    for a, b in zip(reqs_a, reqs_b):
+        assert res_a.outputs[a.req_id] == res_b.outputs[b.req_id]
+    assert res_b.robustness.crash_unwinds == 0
+    assert res_b.robustness.faults_fired == 0
+
+
+def test_empty_plan_is_bit_identical_disagg():
+    reqs_a = _two_wave()
+    res_a = serve_disagg(reqs_a, _build_fleet())
+    reqs_b = _two_wave()
+    router = _build_fleet(robustness=RobustnessConfig(
+        injector=FaultInjector()))
+    res_b = serve_disagg(reqs_b, router)
+    for a, b in zip(reqs_a, reqs_b):
+        assert res_a.outputs[a.req_id] == res_b.outputs[b.req_id]
+    assert res_b.robustness.replicas_died == 0
+    _assert_fleet_clean(router)
+
+
+# ---------------------------------------------------------------------------
+# tentpole: replica death -> failover
+# ---------------------------------------------------------------------------
+
+
+def test_kill_decode_mid_handoff_zero_reprefill():
+    """Deterministic kill of 1-of-2 decode replicas while handoff records
+    are still host-staged: the staged requests re-place decode-resumable
+    (zero re-prefilled tokens anywhere in the decode pool), everything else
+    retries through the preempt fold, nothing is lost, and survivors'
+    outputs are bit-identical to the fault-free fleet."""
+    reqs_base = _two_wave()
+    base = serve_disagg(reqs_base, _build_fleet())
+    base_out = [list(base.outputs[r.req_id]) for r in reqs_base]
+
+    plan = FaultPlan(specs=(FaultSpec(site="replica_step_crash", nth=3,
+                                      replica="decode0", repeat=True),))
+    rcfg = RobustnessConfig(health=HealthConfig(dead_after=1),
+                            injector=FaultInjector(plan))
+    reqs = _two_wave()
+    router = _build_fleet(robustness=rcfg)
+    res = serve_disagg(reqs, router)
+
+    rb = res.robustness
+    assert rb.replicas_died == 1
+    assert rb.recovered_resumable > 0          # host-staged KV survived
+    assert rb.shed_replica_failure == 0        # nobody was lost
+    _assert_all_terminal(reqs)
+    # the headline invariant: decode replicas NEVER prefilled a token — all
+    # recoveries placed on the decode pool resumed from staged KV
+    assert sum(rs.sched.stats.scheduled_prefill_tokens
+               for rs in router.decode) == 0
+    # full-output identity, shed-free run: failover is invisible in tokens
+    for i, r in enumerate(reqs):
+        assert res.outputs[r.req_id] == base_out[i]
+    _assert_fleet_clean(router)
+
+
+def test_kill_prefill_replica_degrades_to_colocated():
+    """The only prefill replica dies: the fleet degrades — waiting work
+    re-places onto the decode pool (colocated prefill) and later arrivals
+    route straight there.  Every request still terminates."""
+    plan = FaultPlan(specs=(FaultSpec(site="replica_step_crash", nth=2,
+                                      replica="prefill0", repeat=True),))
+    rcfg = RobustnessConfig(health=HealthConfig(dead_after=1),
+                            injector=FaultInjector(plan))
+    reqs = _two_wave()
+    router = _build_fleet(robustness=rcfg)
+    res = serve_disagg(reqs, router)
+    assert res.robustness.replicas_died == 1
+    assert res.robustness.colocated_fallbacks > 0
+    _assert_all_terminal(reqs)
+    assert sum(1 for r in reqs if r.finish_time is not None) > 0
+    _assert_fleet_clean(router)
+
+
+def test_handoff_drop_retries_then_sheds():
+    """A persistently failing transfer for one request: each attempt drops,
+    the request re-prefills, and past max_retries it sheds terminally with
+    shed_reason='replica_failure' — while every other request is served
+    bit-identically to the fault-free run."""
+    reqs_base = _two_wave()
+    base = serve_disagg(reqs_base, _build_fleet())
+    base_out = [list(base.outputs[r.req_id]) for r in reqs_base]
+
+    reqs = _two_wave()
+    victim = reqs[2].req_id
+    plan = FaultPlan(specs=(FaultSpec(site="handoff_drop", nth=1,
+                                      req_id=victim, repeat=True),))
+    rcfg = RobustnessConfig(max_retries=1, injector=FaultInjector(plan))
+    router = _build_fleet(robustness=rcfg)
+    res = serve_disagg(reqs, router)
+
+    assert reqs[2].shed_reason == "replica_failure"
+    assert res.robustness.shed_replica_failure == 1
+    assert res.robustness.retries == 2          # allowed retry + the fatal one
+    _assert_all_terminal(reqs)
+    for i, r in enumerate(reqs):
+        if r.req_id != victim:
+            assert res.outputs[r.req_id] == base_out[i]
+    _assert_fleet_clean(router)
+
+
+def test_handoff_stall_reaped_by_ttl():
+    """A staged record that is never adopted (stall fault) must not wedge
+    the fleet: the TTL reaps it, bytes are accounted as expired, and the
+    request recovers through the re-prefill path."""
+    reqs = _two_wave()
+    victim = reqs[0].req_id
+    plan = FaultPlan(specs=(FaultSpec(site="handoff_stall", nth=1,
+                                      req_id=victim),))
+    rcfg = RobustnessConfig(handoff_ttl_s=0.05, injector=FaultInjector(plan))
+    router = _build_fleet(robustness=rcfg)
+    res = serve_disagg(reqs, router)
+    assert res.robustness.expired_handoffs == 1
+    assert router.store.stats.expired == 1
+    assert router.store.stats.expired_bytes > 0
+    _assert_all_terminal(reqs)
+    assert reqs[0].finish_time is not None     # recovered, not lost
+    _assert_fleet_clean(router)
+
+
+def test_handoff_stall_without_ttl_fails_fast():
+    """No TTL configured: the stalled record is dropped immediately instead
+    of parking forever (the quiesce check would otherwise never clear)."""
+    reqs = _two_wave()
+    plan = FaultPlan(specs=(FaultSpec(site="handoff_stall", nth=1),))
+    rcfg = RobustnessConfig(injector=FaultInjector(plan))
+    router = _build_fleet(robustness=rcfg)
+    serve_disagg(reqs, router)
+    _assert_all_terminal(reqs)
+    _assert_fleet_clean(router)
+
+
+# ---------------------------------------------------------------------------
+# satellite: serve-loop exception safety (crash between dispatch and drain)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("crash_call", [2, 5])
+def test_crash_during_drain_unwinds_clean(monkeypatch, crash_call):
+    """Kill the engine INSIDE drain — after the round dispatched, before its
+    tokens were delivered.  The crash cleanup must roll the torn round back
+    (charges refunded, slots/blocks released or requeued), and the recompute
+    retry must regenerate the identical tokens."""
+    reqs_base = _two_wave()
+    base, *_ = _serve_colocated(reqs_base, nan_guard=False)
+
+    reqs = _two_wave()
+    calls = {"n": 0}
+    real_drain = JAXEngine.drain
+
+    def flaky_drain(self, inflight):
+        calls["n"] += 1
+        if calls["n"] == crash_call:
+            raise RuntimeError("injected drain crash")
+        return real_drain(self, inflight)
+
+    monkeypatch.setattr(JAXEngine, "drain", flaky_drain)
+    res, sched, eng, pool = _serve_colocated(
+        reqs, robustness=RobustnessConfig(), nan_guard=False)
+    assert res.robustness.crash_unwinds == 1
+    _assert_all_terminal(reqs)
+    assert all(r.shed_reason is None for r in reqs)
+    for a, b in zip(reqs_base, reqs):
+        assert base.outputs[a.req_id] == res.outputs[b.req_id]
+    pool.check_invariants()
+    assert not eng.slot_of
+
+
+def test_step_crash_colocated_recovers_identically():
+    """The seeded step-crash site (exception before the round body): the
+    round never ran, so cleanup is pure requeue — outputs bit-identical."""
+    reqs_base = _two_wave()
+    base, *_ = _serve_colocated(reqs_base, nan_guard=False)
+    reqs = _two_wave()
+    plan = FaultPlan(specs=(FaultSpec(site="replica_step_crash", nth=4),))
+    res, sched, eng, pool = _serve_colocated(
+        reqs, robustness=RobustnessConfig(injector=FaultInjector(plan)),
+        nan_guard=False)
+    assert res.robustness.faults_fired == 1
+    _assert_all_terminal(reqs)
+    for a, b in zip(reqs_base, reqs):
+        assert base.outputs[a.req_id] == res.outputs[b.req_id]
+    pool.check_invariants()
+    assert not eng.slot_of
+
+
+# ---------------------------------------------------------------------------
+# satellite: NaN/Inf quarantine
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("pipelined", [True, False], ids=["pipelined", "sync"])
+def test_nan_quarantine_sheds_victim_only(pipelined):
+    """Inject non-finite KV into one decoding request: it quarantines
+    (terminal, shed_reason='numerics', clean prefix delivered), its poisoned
+    token's charge refunds, and every OTHER request's outputs stay
+    bit-identical to the fault-free run."""
+    reqs_base = _two_wave(tenants=True)
+    base, *_ = _serve_colocated(reqs_base, pipelined=pipelined,
+                                fairness=FAIRNESS, nan_guard=False)
+
+    reqs = _two_wave(tenants=True)
+    victim = reqs[1].req_id
+    plan = FaultPlan(specs=(FaultSpec(site="nan_logits", nth=2,
+                                      req_id=victim),))
+    res, sched, eng, pool = _serve_colocated(
+        reqs, robustness=RobustnessConfig(injector=FaultInjector(plan)),
+        pipelined=pipelined, fairness=FAIRNESS)
+
+    assert reqs[1].shed_reason == "numerics"
+    assert res.robustness.quarantined == 1
+    # the victim kept its clean prefix — shorter than the full decode
+    assert len(res.outputs[victim]) < len(base.outputs[reqs_base[1].req_id])
+    _assert_all_terminal(reqs)
+    for i, r in enumerate(reqs):
+        if r.req_id != victim:
+            assert res.outputs[r.req_id] == base.outputs[reqs_base[i].req_id]
+    pool.check_invariants()
+    _charge_identity([sched])
+
+
+# ---------------------------------------------------------------------------
+# satellite: chaos property suite
+# ---------------------------------------------------------------------------
+
+CHAOS_SITES = ("replica_step_crash", "slow_round_ms", "handoff_drop",
+               "handoff_stall", "swap_gather_fail", "host_oom")
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+@pytest.mark.parametrize("pipelined", [True, False], ids=["pipelined", "sync"])
+def test_chaos_disagg_invariants(seed, pipelined):
+    """Fuzzed fault plans over the 1P+2D fleet.  Whatever fires, four
+    invariants hold: exactly-once termination, zero leaks, the VTC charge
+    identity, and bit-identical outputs for requests the faults did not
+    touch (non-shed, non-quarantined)."""
+    reqs_base = _two_wave(tenants=True)
+    base = serve_disagg(reqs_base, _build_fleet(pipelined=pipelined,
+                                                fairness=FAIRNESS))
+    base_out = [list(base.outputs[r.req_id]) for r in reqs_base]
+
+    plan = FaultPlan.fuzz(seed, n_faults=4, sites=CHAOS_SITES, max_nth=20,
+                          replicas=("prefill0", "decode0", "decode1"))
+    rcfg = RobustnessConfig(health=HealthConfig(dead_after=2),
+                            max_retries=3, handoff_ttl_s=0.05,
+                            injector=FaultInjector(plan))
+    reqs = _two_wave(tenants=True)
+    router = _build_fleet(robustness=rcfg, pipelined=pipelined,
+                          fairness=FAIRNESS)
+    res = serve_disagg(reqs, router)
+
+    _assert_all_terminal(reqs)                            # 1: exactly once
+    _assert_fleet_clean(router)                           # 2: no leaks
+    _charge_identity([rs.sched for rs in router.replicas])  # 3: VTC identity
+    affected = {r.req_id for r in reqs if r.shed_reason is not None}
+    for i, r in enumerate(reqs):                          # 4: survivor identity
+        if r.req_id not in affected and r.handoffs <= 1 and not r.folded_tokens:
+            assert res.outputs[r.req_id] == base_out[i], r.req_id
+
+
+@pytest.mark.parametrize("seed", [4, 5])
+def test_chaos_colocated_invariants(seed):
+    """The same fuzz harness against the single fault-tolerant replica:
+    crashes and numerics quarantine in place, no fleet to fail over to."""
+    plan = FaultPlan.fuzz(seed, n_faults=3,
+                          sites=("replica_step_crash", "nan_logits",
+                                 "slow_round_ms"),
+                          max_nth=15)
+    reqs = _two_wave(tenants=True)
+    res, sched, eng, pool = _serve_colocated(
+        reqs, robustness=RobustnessConfig(injector=FaultInjector(plan)),
+        fairness=FAIRNESS)
+    _assert_all_terminal(reqs)
+    pool.check_invariants()
+    assert not eng.slot_of
+    _charge_identity([sched])
