@@ -54,6 +54,17 @@ class SchedulerConfig:
     # recomputes by pure arrival-order aging.  Key units per token (the same
     # scale as |beta|); 0.0 disables (legacy ordering, bit-identical).
     cache_credit: float = 0.0
+    # tiered KV hierarchy: up to this many swap-ready victims are restored
+    # EARLY at the end of each round, with genuinely leftover capacity only
+    # (free blocks, free slots, no preemption) — the victim decodes from the
+    # next round instead of waiting for a queue pop that congestion may
+    # never reach.  0 disables (restores only through the pop path).
+    swap_prefetch_depth: int = 0
+    # partial swap-in: after this many CONSECUTIVE restore deferrals of a
+    # host-resident record, shrink it to its decode-hot tail — the prefix
+    # is folded for recompute (chunk-by-chunk, block-clipped) and only the
+    # tail's blocks need to be free at once.  None disables.
+    partial_restore_after: Optional[int] = None
 
 
 @dataclass
@@ -114,6 +125,15 @@ class SchedulerStats:
     quarantined: int = 0                # non-finite requests terminated
     rolled_back_decode_tokens: int = 0  # undrained tokens discarded by crash
     #                                     or quarantine unwinds (VTC refunded)
+    # tiered KV hierarchy (host staging as a managed tier):
+    prefetched_restores: int = 0        # restores run early by the prefetcher
+    restore_wait_rounds: int = 0        # Σ rounds spent host-staged before restore
+    host_demotions: int = 0             # staged records host-evicted under the
+    #                                     byte budget (victim folded to recompute)
+    partial_restores: int = 0           # tail-only swap-ins (prefix recomputed)
+    tail_restored_tokens: int = 0       # tokens restored by partial swap-ins
+    tail_aborts: int = 0                # tail records dropped because restore
+    #                                     preconditions diverged (cache jump)
     apc: APCStats = field(default_factory=APCStats)
 
     @property
@@ -201,6 +221,13 @@ class ChunkedPrefillScheduler:
         self._swapper = None             # engine hook: gather + slot release
         self._swap_restorer = None       # engine hook: scatter staged KV back
         self._swap_cost = None           # CostModel-like (swap bytes vs FLOPs)
+        self._swap_restorer_tail = None  # engine hook: scatter a staged tail
+        self._payload_slicer = None      # engine hook: trim payload on shrink
+        # per-victim restore telemetry: the round each swap-preemption was
+        # stamped (restore_wait_rounds accumulates the diff at restore time)
+        # and consecutive restore deferrals (the partial swap-in trigger)
+        self._swap_round: Dict[int, int] = {}
+        self._restore_defers: Dict[int, int] = {}
         if self._books():
             self._apply_tenant_quotas()
 
@@ -247,7 +274,8 @@ class ChunkedPrefillScheduler:
         self._slot_releaser = releaser
 
     def attach_swap(self, swapper=None, restorer=None, *, cost_model=None,
-                    mode: str = "swap") -> None:
+                    mode: str = "swap", restorer_tail=None,
+                    payload_slicer=None) -> None:
         """Enable swap-out preemption (``mode="swap"``): preemption victims'
         KV is staged host-side and they re-enter the fair queue
         decode-resumable instead of prefill-restart.
@@ -258,13 +286,22 @@ class ChunkedPrefillScheduler:
         pool's accounting directly with ``ready=True``.  ``restorer(req)``
         scatters the staged payload into freshly allocated pages at swap-in.
         ``cost_model`` decides swap-vs-recompute per victim (swap bytes vs
-        recompute FLOPs); with no model attached, swap always wins."""
+        recompute FLOPs); with no model attached, swap always wins.
+
+        Partial swap-in hooks (``cfg.partial_restore_after``):
+        ``restorer_tail(req, payload, tail_start_blocks)`` scatters a
+        tail-shrunk payload behind the re-prefilled prefix;
+        ``payload_slicer(payload, tail_start_blocks, n_blocks)`` trims the
+        staged arrays when a record is shrunk.  Accounting-only callers
+        (the simulator) leave both None."""
         if mode not in ("swap", "recompute"):
             raise ValueError(f"unknown preemption mode {mode!r}")
         self.preemption_mode = mode
         self._swapper = swapper
         self._swap_restorer = restorer
         self._swap_cost = cost_model
+        self._swap_restorer_tail = restorer_tail
+        self._payload_slicer = payload_slicer
 
     # -- intake ------------------------------------------------------------
     def submit(self, req: Request) -> bool:
@@ -325,6 +362,8 @@ class ChunkedPrefillScheduler:
         KV).  The inverse of ``submit_handoff`` on the source side."""
         self._decoding.pop(req.req_id, None)
         self._bound_slots.discard(req.req_id)
+        self._swap_round.pop(req.req_id, None)
+        self._restore_defers.pop(req.req_id, None)
         if req in self.queue:
             self.queue.remove(req)
         if self.fairness is not None:
@@ -341,6 +380,8 @@ class ChunkedPrefillScheduler:
         evacuation (failover re-placement)."""
         self._decoding.pop(req.req_id, None)
         self._bound_slots.discard(req.req_id)
+        self._swap_round.pop(req.req_id, None)
+        self._restore_defers.pop(req.req_id, None)
         if req in self.queue:
             self.queue.remove(req)
         if batch is not None:
@@ -534,14 +575,33 @@ class ChunkedPrefillScheduler:
                 self.shed_request(req, reason="deadline")
                 continue
 
+            # host-tier demotion fold: the victim's staging record was
+            # evicted under the host byte budget after it was swap-preempted
+            # — its KV exists on NEITHER tier, so the decode-resumable
+            # promise is void.  Fold it (generated tokens into the prompt,
+            # vLLM recompute semantics) and let it continue below as an
+            # ordinary prefill candidate: a recompute, never a leak.
+            if (
+                self.kv_pool is not None
+                and req.swapped
+                and self.kv_pool.swap_state(req.req_id) is None
+            ):
+                req.preempt()
+                self.stats.host_demotions += 1
+                self._swap_round.pop(req.req_id, None)
+                self._restore_defers.pop(req.req_id, None)
+
             # swap-out victims come back through the SAME fair queue, but a
             # restore (swap-in) replaces the recompute prefill: one round, not
             # ceil(context/budget).  A mid-flight victim (SWAPPING: its
             # device→host gather has not drained) is deferred WITHOUT
             # touching the slot binder — it must never re-bind a slot in the
             # round (or pipeline window) that is still copying its pages out.
+            # (Tail-shrunk records skip this branch: their owner re-prefills
+            # the prefix below and restores at the block-exact split.)
             if self.kv_pool is not None and \
-                    self.kv_pool.swap_state(req.req_id) is not None:
+                    self.kv_pool.swap_state(req.req_id) is not None and \
+                    self.kv_pool.swap_tail_start(req.req_id) == 0:
                 if self._try_restore(req, batch, scheduled_ids):
                     if req.remaining_prefill <= 0:
                         # decode-resumable: rejoins the decode set and decodes
@@ -553,6 +613,7 @@ class ChunkedPrefillScheduler:
                     # restored KV (binder already consulted by the restore)
                 else:
                     self.stats.swap_deferrals += 1
+                    self._note_restore_defer(req)
                     deferred.append(req)
                     blocks += 1
                     continue
@@ -572,7 +633,42 @@ class ChunkedPrefillScheduler:
                 else:
                     self._bound_slots.add(req.req_id)
 
+            # partial swap-in: a tail-shrunk record keeps the decode-hot
+            # tail staged while the owner re-prefills the evicted prefix.
+            # Chunks are clipped to the block-exact split point; the moment
+            # the prefix lands the staged tail is appended in one restore
+            # (prefill_done jumps over it — those positions' KV just
+            # scattered in, nothing is recomputed or double-written).
+            tail_cap = None
+            if self.kv_pool is not None and not req.swapped:
+                pool = self.kv_pool
+                tail_d = pool.swap_tail_start(req.req_id)
+                if tail_d > 0:
+                    s = tail_d * pool.cfg.block_size
+                    if req.prefill_done > s or \
+                            pool.swap_tokens(req.req_id) >= req.prompt_len:
+                        # preconditions diverged (a prefix-cache hit at slot
+                        # bind jumped past the split): the tail can no longer
+                        # land behind a block-exact prefix — drop it and
+                        # prefill the remainder normally
+                        pool.drop_swap(req.req_id)
+                        self.stats.tail_aborts += 1
+                        self._swap_round.pop(req.req_id, None)
+                    elif req.prefill_done == s:
+                        if not self._restore_tail(req, tail_d, batch,
+                                                  scheduled_ids):
+                            self.stats.swap_deferrals += 1
+                            deferred.append(req)
+                            blocks += 1
+                            continue
+                        # tail restored: chunk the (>= 1) remaining prompt
+                        # tokens over the rebuilt context
+                    else:
+                        tail_cap = s - req.prefill_done
+
             h_i = min(req.remaining_prefill, cfg.token_budget - committed)
+            if tail_cap is not None:
+                h_i = min(h_i, tail_cap)
             if h_i <= 0:
                 deferred.append(req)
                 break
@@ -611,6 +707,12 @@ class ChunkedPrefillScheduler:
                     cap=cap,
                     urgent=urgent,
                 )
+
+            if tail_cap is not None:
+                # never prefill past the split: the chunk that would cross
+                # it instead stops exactly on the block boundary the staged
+                # tail restores onto
+                c = min(int(c), tail_cap)
 
             # KV gate: shrink the chunk to what the pool (and the tenant's
             # quota) can actually back RIGHT NOW — chunk-granular allocation.
@@ -659,6 +761,11 @@ class ChunkedPrefillScheduler:
         for r in deferred:
             self.queue.add(r)
         self._deferred_this_round = []
+
+        # swap-in prefetch: restore up to ``swap_prefetch_depth`` host-ready
+        # victims with whatever capacity this round left over — the cold
+        # "restore round" (queue pop under congestion) disappears for them
+        self._prefetch_restores(batch, scheduled_ids)
 
         batch.state = st
         self.stats.scheduled_prefill_seqs += len(batch.prefill_chunks)
@@ -748,12 +855,23 @@ class ChunkedPrefillScheduler:
                 self._slot_releaser(req)
                 self._bound_slots.discard(req.req_id)
             return False
+        if pool.swap_state(req.req_id) is None:
+            # making room swap-staged younger victims, and THEIR staging
+            # charged the host tier past its budget — the stage-time-LRU
+            # eviction landed on the very record being restored.  Nothing
+            # left to scatter: defer untouched; next round's demotion fold
+            # recomputes this request.
+            if bound_here and self._slot_releaser is not None:
+                self._slot_releaser(req)
+                self._bound_slots.discard(req.req_id)
+            return False
         _ids, payload = pool.swap_in(req.req_id, tenant=req.tenant)
         if self._swap_restorer is not None:
             self._swap_restorer(req, payload)
         req.resume()
         scheduled_ids.add(req.req_id)   # restore-immune for this round
         self.stats.swap_restores += 1
+        self._note_restored(req.req_id)
         batch.restored.append(req)
         batch.swap_in_mb += tokens * pool.cfg.bytes_per_token / 2**20
         if self.fairness is not None and req.state == RequestState.DECODING:
@@ -761,6 +879,137 @@ class ChunkedPrefillScheduler:
             # ownership and mark it decode-active again
             self.fairness.on_resume(req)
         return True
+
+    def _note_restored(self, req_id: int) -> None:
+        """A restore (full, prefetched, or tail) completed: accumulate the
+        rounds this victim spent host-staged and clear its telemetry."""
+        stamp = self._swap_round.pop(req_id, None)
+        if stamp is not None:
+            self.stats.restore_wait_rounds += max(0, self._round - stamp)
+        self._restore_defers.pop(req_id, None)
+
+    def _note_restore_defer(self, req: Request) -> None:
+        """Count a consecutive restore deferral; past
+        ``cfg.partial_restore_after`` of them — with the payload
+        host-resident and the block shortfall (not slots) the binding limit
+        — shrink the record to the largest tail the pool could back right
+        now.  The owner is folded (``preempt()``) and re-prefills the
+        evicted prefix chunk-by-chunk; only ``n - d`` blocks ever need to
+        be free at once, so fragmentation can't pin the victim host-side
+        forever."""
+        after = self.cfg.partial_restore_after
+        if after is None:
+            return
+        rid = req.req_id
+        n = self._restore_defers.get(rid, 0) + 1
+        self._restore_defers[rid] = n
+        pool = self.kv_pool
+        if n < after or not req.swapped or not pool.swap_ready(rid):
+            return
+        if pool.can_swap_in(rid, tenant=req.tenant):
+            return        # blocked on slots, not memory: shrinking can't help
+        bs = pool.cfg.block_size
+        tokens = pool.swap_tokens(rid)
+        nb = (tokens + bs - 1) // bs
+        if nb < 2 or tokens >= req.prompt_len + (req.generated - req.folded_tokens):
+            return        # nothing to split / stored length would not fit
+        d = nb - max(1, min(pool.allocatable_blocks(), nb - 1))
+        pool.shrink_swap_to_tail(rid, d, self._payload_slicer)
+        req.preempt()     # fold: the prefix re-prefills from scratch
+        self._restore_defers.pop(rid, None)
+
+    def _restore_tail(
+        self, req: Request, tail_d: int, batch: ScheduledBatch,
+        scheduled_ids: set,
+    ) -> bool:
+        """Complete a partial swap-in: the owner's re-prefill sits exactly on
+        the block split, so append fresh blocks for the staged tail, scatter
+        it via the engine hook, and jump ``prefill_done`` over the restored
+        positions (>= 1 prompt token always remains — its chunk writes
+        genuinely new KV and the completing round samples normally)."""
+        pool = self.kv_pool
+        tokens = pool.swap_tokens(req.req_id)
+        tail_tokens = tokens - tail_d * pool.cfg.block_size
+        if not pool.can_swap_in(req.req_id, tenant=req.tenant) and \
+                not self._make_room(req, batch, scheduled_ids,
+                                    tokens=tail_tokens):
+            return False
+        if pool.swap_state(req.req_id) is None:
+            # room-making swap-outs evicted this tail record off the host
+            # tier: the staged tail is gone, so fall back to prefilling the
+            # remainder (next round sees tail_start == 0 and chunks on)
+            self.stats.tail_aborts += 1
+            self._swap_round.pop(req.req_id, None)
+            return False
+        _ids, payload = pool.swap_in_tail(req.req_id, tenant=req.tenant)
+        if self._swap_restorer_tail is not None:
+            self._swap_restorer_tail(req, payload, tail_d)
+        req.prefill_done = tokens
+        scheduled_ids.add(req.req_id)   # restore-immune for this round
+        self.stats.swap_restores += 1
+        self.stats.partial_restores += 1
+        self.stats.tail_restored_tokens += tail_tokens
+        self._note_restored(req.req_id)
+        batch.restored.append(req)
+        batch.swap_in_mb += tail_tokens * pool.cfg.bytes_per_token / 2**20
+        return True
+
+    def _prefetch_restores(self, batch: ScheduledBatch,
+                           scheduled_ids: set) -> None:
+        """End-of-round swap-in prefetch: restore up to
+        ``cfg.swap_prefetch_depth`` host-ready victims using strictly
+        leftover capacity — free blocks (``can_swap_in``, no ``_make_room``)
+        and free slots (a binder miss ends the pass).  A decode-resumable
+        victim enters the decode set and decodes from the NEXT round's
+        decode-first pass, skipping the cold restore round a congested pop
+        path may never have reached; a mid-prefill victim re-queues and
+        chunks over its restored KV.  Oldest swap-preemption first."""
+        depth = self.cfg.swap_prefetch_depth
+        if depth <= 0 or self.kv_pool is None or \
+                self.preemption_mode != "swap":
+            return
+        pool = self.kv_pool
+        cands = [
+            r for r in self.queue.requests()
+            if r.swapped
+            and r.req_id not in scheduled_ids
+            and pool.swap_ready(r.req_id)
+            and pool.swap_tail_start(r.req_id) == 0
+        ]
+        cands.sort(key=lambda r: (
+            self._swap_round.get(r.req_id, self._round),
+            r.arrival_time, r.req_id,
+        ))
+        done = 0
+        for r in cands:
+            if done >= depth:
+                break
+            if not pool.can_swap_in(r.req_id, tenant=r.tenant):
+                continue               # leftover blocks only: no preemption
+            if self._slot_binder is not None and \
+                    r.req_id not in self._bound_slots:
+                if not self._slot_binder(r):
+                    break              # no free slot — none will appear now
+                self._bound_slots.add(r.req_id)
+            self.queue.remove(r)
+            tokens = pool.swap_tokens(r.req_id)
+            _ids, payload = pool.swap_in(r.req_id, tenant=r.tenant)
+            if self._swap_restorer is not None:
+                self._swap_restorer(r, payload)
+            r.resume()
+            scheduled_ids.add(r.req_id)
+            self.stats.swap_restores += 1
+            self.stats.prefetched_restores += 1
+            self._note_restored(r.req_id)
+            batch.restored.append(r)
+            batch.swap_in_mb += tokens * pool.cfg.bytes_per_token / 2**20
+            if r.remaining_prefill <= 0:
+                self._decoding[r.req_id] = r
+                if self.fairness is not None:
+                    self.fairness.on_resume(r)
+            else:
+                self.queue.add(r)      # chunk over the restored KV next round
+            done += 1
 
     def _should_swap(self, victim: Request) -> bool:
         """Swap-vs-recompute, per victim: compare the swap transfer cost
@@ -773,6 +1022,11 @@ class ChunkedPrefillScheduler:
         pool = self.kv_pool
         tokens = pool.lens.get(victim.req_id, 0)
         if tokens <= 0 or pool.swap_state(victim.req_id) is not None:
+            return False
+        if not pool.host_can_stage(tokens):
+            # host tier pinned full by bytes this pool cannot evict (other
+            # pools / the handoff store on a shared tier): recompute instead
+            # of asserting inside the stage-time reservation
             return False
         if self._swap_cost is None:
             return True
@@ -842,6 +1096,9 @@ class ChunkedPrefillScheduler:
                 self.kv_pool.swap_out(victim.req_id, ready=True)
             victim.swap_preempt()
             self.stats.swap_preemptions += 1
+            # restore-wait stamp: every restore path (pop, prefetch, tail)
+            # accumulates rounds-host-staged against this round index
+            self._swap_round[victim.req_id] = self._round
             batch.swapped_out.append(victim)
             batch.swap_out_mb += tokens * self.kv_pool.cfg.bytes_per_token / 2**20
         else:

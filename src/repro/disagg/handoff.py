@@ -63,10 +63,19 @@ class KVHandoffStore:
     host bytes forever; ``ttl_s`` bounds that: ``expire(now)`` reaps records
     older than the TTL and the byte ledger keeps ``put - take - drop -
     expire == resident`` exact at every step.
+
+    With a ``host_tier`` attached (the managed host byte budget the KV pools
+    stage against), every entry charges the SAME tier the pools do — a
+    record in flight between replicas occupies host memory exactly once:
+    ``export_swap`` releases the source pool's charge, ``put`` re-charges it
+    here (net zero on a shared tier), ``take`` releases it for the
+    destination's ``import_swap`` reservation.  Callers gate oversized puts
+    with ``can_stage`` (colocate instead); ``charge`` itself asserts fit.
     """
 
-    def __init__(self, ttl_s: Optional[float] = None):
+    def __init__(self, ttl_s: Optional[float] = None, host_tier=None):
         self.ttl_s = ttl_s
+        self.host = host_tier
         self._entries: Dict[int, _Entry] = {}
         self.stats = HandoffStats()
 
@@ -83,10 +92,25 @@ class KVHandoffStore:
         e = self._entries.get(req_id)
         return e.src if e is not None else None
 
+    @staticmethod
+    def record_bytes(rec, bytes_per_token: int = 0) -> int:
+        """Host bytes a record occupies: the pool's exact stage-time charge
+        when present (INT8 staging halves it), else the caller's full-width
+        estimate (accounting-only records carry ``nbytes == 0``)."""
+        nb = getattr(rec, "nbytes", 0)
+        return nb if nb else rec.tokens * max(bytes_per_token, 0)
+
+    def can_stage(self, nbytes: int) -> bool:
+        """True when the host tier (if any) can take ``nbytes`` more — the
+        router's colocate-fallback gate for oversized handoffs."""
+        return self.host is None or self.host.can_fit(nbytes)
+
     def put(self, req_id: int, rec, reg, *, src: str = "?",
             bytes_per_token: int = 0, now: float = 0.0) -> None:
         assert req_id not in self._entries, f"req {req_id} already staged"
-        nbytes = rec.tokens * max(bytes_per_token, 0)
+        nbytes = self.record_bytes(rec, bytes_per_token)
+        if self.host is not None:
+            self.host.charge(nbytes)   # asserts fit: callers gate can_stage
         self._entries[req_id] = _Entry(rec, reg, src, nbytes, now)
         self.stats.staged += 1
         self.stats.bytes_moved += nbytes
@@ -96,6 +120,8 @@ class KVHandoffStore:
     def take(self, req_id: int) -> Tuple[object, object]:
         """Hand the staged record to a destination pool (delivery)."""
         e = self._entries.pop(req_id)
+        if self.host is not None:
+            self.host.release(e.nbytes)
         self.stats.delivered += 1
         self.stats.taken_bytes += e.nbytes
         self.stats.resident_bytes -= e.nbytes
@@ -105,6 +131,8 @@ class KVHandoffStore:
         """Discard a staged record whose request died mid-handoff."""
         e = self._entries.pop(req_id, None)
         if e is not None:
+            if self.host is not None:
+                self.host.release(e.nbytes)
             self.stats.dropped += 1
             self.stats.dropped_bytes += e.nbytes
             self.stats.resident_bytes -= e.nbytes
@@ -119,6 +147,8 @@ class KVHandoffStore:
                   if now - e.t_put > ttl]
         for rid in reaped:
             e = self._entries.pop(rid)
+            if self.host is not None:
+                self.host.release(e.nbytes)
             self.stats.expired += 1
             self.stats.expired_bytes += e.nbytes
             self.stats.resident_bytes -= e.nbytes

@@ -210,6 +210,15 @@ class DisaggregatedRouter:
             self.rstats.colocated_fallbacks += 1
             self.rstats.note(f"swap_gather_fail req {req.req_id}: colocated")
             return
+        if (server.kv_pool.swap_state(req.req_id) is not None
+                or not server.kv_pool.host_can_stage(kv_tokens)
+                or not self._store_can_stage(server, kv_tokens)):
+            # no host budget for the transfer (the tier is pinned by bytes
+            # this pool cannot evict) or a stale staging record: decode
+            # colocated — no tier reservation may ever assert
+            self.store.stats.colocated += 1
+            self.rstats.colocated_fallbacks += 1
+            return
         # gather + async device→host copy + slot release + SWAPPING record —
         # the engine still holds the slot here, so swap_out must precede the
         # scheduler export (which only drops bookkeeping, never pool state)
@@ -217,6 +226,15 @@ class DisaggregatedRouter:
         server.sched.export_request(req)
         req.handoff()
         self._pending.append((req, server))
+
+    def _store_can_stage(self, src: ReplicaServer, kv_tokens: int) -> bool:
+        """True when the handoff store can charge this record's bytes.  On a
+        tier SHARED with the source pool the move is net zero (``export``
+        releases exactly what ``put`` charges), so only a store with its own
+        budget needs the headroom check."""
+        if self.store.host is None or self.store.host is src.kv_pool.host:
+            return True
+        return self.store.can_stage(src.kv_pool.host_bytes_for(kv_tokens))
 
     # -- handoff: delivery -----------------------------------------------------
     def pump(self, now: float = 0.0) -> int:
@@ -273,6 +291,15 @@ class DisaggregatedRouter:
                 src.kv_pool.release(req.req_id)
                 self.store.stats.dropped += 1
                 continue
+            if src.kv_pool.swap_state(req.req_id) is None:
+                # the host tier demoted the record while the handoff was
+                # pending: its KV is gone from every tier — re-prefill on a
+                # survivor (a recompute, never a leak)
+                self.store.stats.dropped += 1
+                self.rstats.note(
+                    f"handoff req {req.req_id} host-demoted: re-prefill")
+                self._requeue(req, now)
+                continue
             ready = src.kv_pool.swap_ready(req.req_id)
             if not ready and not self.cfg.prefetch:
                 still.append((req, src))      # gather still in flight
@@ -299,6 +326,16 @@ class DisaggregatedRouter:
                 self.store.stats.colocated += 1
                 self.rstats.colocated_fallbacks += 1
                 self.rstats.note(f"host_oom req {req.req_id}: colocated")
+                continue
+            if not self._store_can_stage(
+                    src, src.kv_pool.swap_tokens(req.req_id)):
+                # the store's private budget filled while the gather drained:
+                # keep the decode colocated — still decode-resumable from
+                # the source pool's record
+                req.handoffs -= 1
+                src.sched.submit_handoff(req)
+                self.store.stats.colocated += 1
+                self.rstats.colocated_fallbacks += 1
                 continue
             rec, reg = src.kv_pool.export_swap(
                 req.req_id, allow_inflight=not ready)
@@ -575,11 +612,19 @@ def build_disagg(
     block_size: int = 16,
     prefix_cache: bool = True,
     warmup: bool = False,
+    host_max_bytes: Optional[int] = None,
+    host_kv_dtype: str = "auto",
 ) -> DisaggregatedRouter:
     """Construct a whole fleet: per-replica engines (sharing ONE set of
     parameters — every replica must hold identical weights for a handoff to
     be exact), pools, and schedulers.  With fairness configured, one shared
-    VirtualTokenCounter spans all schedulers (VTC anti-laundering)."""
+    VirtualTokenCounter spans all schedulers (VTC anti-laundering).
+
+    ``host_max_bytes`` caps ONE host tier shared by every replica pool AND
+    the handoff store — in-flight records charge the same budget staged
+    ones do, so the fleet's host footprint is bounded end to end.
+    ``host_kv_dtype="int8"`` stages quantized pages everywhere (handoffs
+    ride the fused quantizing gather / dequantizing scatter)."""
     cfg = cfg or DisaggConfig()
     engine_cfg = engine_cfg or EngineConfig()
     sched_cfg = sched_cfg or SchedulerConfig()
@@ -588,6 +633,11 @@ def build_disagg(
         from repro.tenancy import make_shared_vtc
 
         shared_vtc = make_shared_vtc(sched_cfg.fairness)
+    tier = None
+    if host_max_bytes is not None:
+        from repro.engine.kv_cache import HostTier
+
+        tier = HostTier(host_max_bytes)
     params = None
     replicas: List[ReplicaServer] = []
     for i in range(cfg.n_prefill + cfg.n_decode):
@@ -596,8 +646,10 @@ def build_disagg(
         params = engine.params             # replicas share one weight set
         pool = pool_for_model(
             model_cfg, n_blocks=n_blocks, block_size=block_size,
-            enable_prefix_cache=prefix_cache,
+            enable_prefix_cache=prefix_cache, host_kv_dtype=host_kv_dtype,
         )
+        if tier is not None:
+            pool.attach_host_tier(tier)
         sched = ChunkedPrefillScheduler(sched_cfg, kv_pool=pool,
                                         shared_vtc=shared_vtc)
         rs = ReplicaServer(sched, engine, kv_pool=pool,
@@ -609,6 +661,7 @@ def build_disagg(
         replicas.append(rs)
     return DisaggregatedRouter(
         replicas[: cfg.n_prefill], replicas[cfg.n_prefill:], cfg,
+        store=KVHandoffStore(host_tier=tier) if tier is not None else None,
     )
 
 

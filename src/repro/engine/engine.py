@@ -50,7 +50,10 @@ from repro.engine.metrics import (
     LatencyReport, MemoryReport, RobustnessReport, SLOReport, summarize,
     summarize_memory, summarize_robustness, summarize_slo,
 )
-from repro.kernels.ops import gather_swap_pages, scatter_swap_pages
+from repro.kernels.ops import (
+    gather_swap_pages, gather_swap_pages_q8, scatter_swap_pages,
+    scatter_swap_pages_q8,
+)
 from repro.engine.sampler import SamplerConfig, sample_tokens
 from repro.models.model import Model, build_model
 from repro.robustness import FailoverStats, ReplicaHealth
@@ -160,6 +163,9 @@ class JAXEngine:
         self._pending_swaps: List[Tuple[int, object, Tuple[jax.Array, ...]]] = []
 
         self.kv_pool: Optional[KVBlockPool] = kv_pool
+        # warmup() flips this: binding a shape-changing pool afterwards would
+        # silently invalidate every compiled shape, so bind_kv_pool refuses
+        self.warmed = False
         # the engine books blocks itself only while it owns a private pool;
         # an externally bound pool is booked by the scheduler
         self._owns_pool = False
@@ -267,6 +273,20 @@ class JAXEngine:
         if kv_pool is None or kv_pool is self.kv_pool:
             return
         assert not self.slot_of, "cannot rebind the KV pool mid-flight"
+        if self.warmed and self.cfg.paged_kv:
+            # the paged rebuild resizes the physical page array (page ids ==
+            # block ids), so every shape warmup compiled is stale — the run
+            # would silently re-pay cold compilation inside serving rounds
+            raise RuntimeError(
+                "bind_kv_pool after warmup(): the paged rebuild invalidates "
+                "every prewarmed shape — bind the external pool FIRST, then "
+                "call warmup()"
+            )
+        if kv_pool.cfg.host_kv_dtype == "int8" and not self.cfg.paged_kv:
+            raise RuntimeError(
+                "host_kv_dtype='int8' requires paged_kv: the quantized swap "
+                "kernels are page-shaped"
+            )
         self.kv_pool = kv_pool
         self._owns_pool = False
         if self.cfg.paged_kv:
@@ -324,6 +344,7 @@ class JAXEngine:
             include_swap = self.cfg.preemption_mode == "swap"
         if include_swap:
             self._prewarm_swap_shapes()
+        self.warmed = True
 
     def _prewarm_swap_shapes(self) -> None:
         """Compile the swap gather/scatter for every page-id bucket a swap
@@ -334,14 +355,24 @@ class JAXEngine:
         if self.cfg.paged_kv:
             buckets = sorted({_pow2_bucket(n)
                               for n in range(1, self.max_pages + 1)})
+            q8 = self._host_quantized()
             for k in buckets:
                 ids = jnp.full((k,), self._sink, jnp.int32)   # sink-only: no-op
                 for nm in names:
-                    staged = gather_swap_pages(self.cache[nm], ids,
-                                               use_pallas=self.cfg.use_pallas)
-                    self.cache[nm] = scatter_swap_pages(
-                        self.cache[nm], ids, staged,
-                        use_pallas=self.cfg.use_pallas)
+                    if q8:
+                        q, scales = gather_swap_pages_q8(
+                            self.cache[nm], ids,
+                            use_pallas=self.cfg.use_pallas)
+                        self.cache[nm] = scatter_swap_pages_q8(
+                            self.cache[nm], ids, q, scales,
+                            use_pallas=self.cfg.use_pallas)
+                    else:
+                        staged = gather_swap_pages(
+                            self.cache[nm], ids,
+                            use_pallas=self.cfg.use_pallas)
+                        self.cache[nm] = scatter_swap_pages(
+                            self.cache[nm], ids, staged,
+                            use_pallas=self.cfg.use_pallas)
             jax.block_until_ready(self.cache[names[0]])
         else:
             k_row = np.asarray(self.cache["k"][:, 0])
@@ -398,6 +429,11 @@ class JAXEngine:
         return len(self.free_slots) > 0
 
     # -- swap-out preemption (device<->host KV migration) ----------------------
+    def _host_quantized(self) -> bool:
+        """True when staged host pages are INT8 (pool ``host_kv_dtype``)."""
+        return (self.kv_pool is not None
+                and self.kv_pool.cfg.host_kv_dtype == "int8")
+
     def _swap_page_ids(self, req_id: int) -> Tuple[np.ndarray, int]:
         """The request's physical page ids, right-padded with the sink page
         to a power-of-two bucket so the gather/scatter kernels only ever
@@ -424,16 +460,25 @@ class JAXEngine:
         if self.cfg.paged_kv:
             ids, _n = self._swap_page_ids(req.req_id)
             jids = jnp.asarray(ids)
-            arrays = tuple(
-                gather_swap_pages(self.cache[nm], jids,
-                                  use_pallas=self.cfg.use_pallas)
-                for nm in self._cache_names()
-            )
+            if self._host_quantized():
+                # fused gather+quantize: the host copy moves int8 pages plus
+                # small per-page-per-head scales — about half the bytes
+                arrays = tuple(
+                    gather_swap_pages_q8(self.cache[nm], jids,
+                                         use_pallas=self.cfg.use_pallas)
+                    for nm in self._cache_names()
+                )
+            else:
+                arrays = tuple(
+                    gather_swap_pages(self.cache[nm], jids,
+                                      use_pallas=self.cfg.use_pallas)
+                    for nm in self._cache_names()
+                )
         else:
             # dense layout: the whole slot row (static shape — positions past
             # the stored length are never attended to after restore)
             arrays = (self.cache["k"][:, slot], self.cache["v"][:, slot])
-        for a in arrays:
+        for a in jax.tree_util.tree_leaves(arrays):
             a.copy_to_host_async()
         # keep the RECORD, not just the id: finalize must find it wherever
         # the disagg router's prefetch may have moved it by drain time
@@ -455,7 +500,7 @@ class JAXEngine:
             return
         for _req_id, rec, arrays in self._pending_swaps:
             KVBlockPool.finalize_record(
-                rec, tuple(np.asarray(a) for a in arrays)
+                rec, jax.tree_util.tree_map(np.asarray, arrays)
             )
         self._pending_swaps.clear()
 
@@ -478,15 +523,15 @@ class JAXEngine:
         tokens = self.kv_pool.lens.get(req.req_id, 0)
         if self.cfg.paged_kv:
             ids, n = self._swap_page_ids(req.req_id)
-            assert n and ids.shape[0] == payload[0].shape[1], (
+            staged_pages = (payload[0][0] if isinstance(payload[0], tuple)
+                            else payload[0]).shape[1]
+            assert n and ids.shape[0] == staged_pages, (
                 f"req {req.req_id}: restore bucket {ids.shape[0]} != staged "
-                f"{payload[0].shape[1]}"
+                f"{staged_pages}"
             )
             jids = jnp.asarray(ids)
             for nm, a in zip(names, payload):
-                self.cache[nm] = scatter_swap_pages(
-                    self.cache[nm], jids, jnp.asarray(a),
-                    use_pallas=self.cfg.use_pallas)
+                self._scatter_staged(nm, jids, a)
             # table changed wholesale: force a full device row rewrite
             self._bt_host[slot, :] = self._sink
             self._bt_len[slot] = 0
@@ -494,6 +539,79 @@ class JAXEngine:
         else:
             for nm, a in zip(names, payload):
                 self.cache[nm] = self.cache[nm].at[:, slot].set(jnp.asarray(a))
+        self.lens = self.lens.at[slot].set(tokens)
+
+    def _scatter_staged(self, nm: str, jids, staged) -> None:
+        """Scatter one cache tensor's staged pages — a ``(q, scales)`` pair
+        rides the fused dequantizing scatter, a plain array the fp one."""
+        if isinstance(staged, tuple):
+            q, scales = staged
+            self.cache[nm] = scatter_swap_pages_q8(
+                self.cache[nm], jids, jnp.asarray(q), jnp.asarray(scales),
+                use_pallas=self.cfg.use_pallas)
+        else:
+            self.cache[nm] = scatter_swap_pages(
+                self.cache[nm], jids, jnp.asarray(staged),
+                use_pallas=self.cfg.use_pallas)
+
+    @staticmethod
+    def slice_swap_payload(payload, tail_start_blocks: int, n_blocks: int):
+        """Trim a host-staged payload to its tail pages (partial swap-in):
+        keep pages ``[tail_start_blocks, n_blocks)`` of every staged array
+        — page axis 1, real pages only; the pow2 padding is rebuilt for the
+        tail's own scatter bucket (padded entries target the sink page, so
+        their content is never read).  Returns real copies: the prefix pages'
+        memory is actually released once the original payload drops."""
+        k = n_blocks - tail_start_blocks
+        kpad = _pow2_bucket(max(k, 1))
+
+        def trim(a):
+            a = np.asarray(a)
+            out = np.zeros(a.shape[:1] + (kpad,) + a.shape[2:], a.dtype)
+            out[:, :k] = a[:, tail_start_blocks:n_blocks]
+            return out
+
+        return tuple(
+            tuple(trim(x) for x in a) if isinstance(a, tuple) else trim(a)
+            for a in payload
+        )
+
+    def swap_in_tail(self, req: Request, payload,
+                     tail_start_blocks: int) -> None:
+        """Scheduler tail-restorer hook, called right after
+        ``pool.swap_in_tail`` appended fresh blocks for the staged tail: the
+        request re-prefilled blocks ``[0, tail_start_blocks)`` normally, so
+        only the tail pages are scattered and the device length jumps to the
+        record's full stored length."""
+        slot = self.slot_of.get(req.req_id)
+        assert slot is not None, f"swap_in_tail of unbound req {req.req_id}"
+        assert payload is not None, (
+            f"swap_in_tail of req {req.req_id} without payload"
+        )
+        assert self.cfg.paged_kv, "partial swap-in requires the paged layout"
+        names = self._cache_names()
+        assert len(payload) == len(names), (
+            f"req {req.req_id}: payload arity {len(payload)} != cache layout "
+            f"{names} — swapped under a different kv_layout?"
+        )
+        table = self.kv_pool.tables.get(req.req_id, [])
+        tail = table[tail_start_blocks:]
+        assert tail, f"req {req.req_id}: empty tail restore"
+        kpad = _pow2_bucket(len(tail))
+        ids = np.full((kpad,), self._sink, np.int32)
+        ids[: len(tail)] = tail
+        staged_pages = (payload[0][0] if isinstance(payload[0], tuple)
+                        else payload[0]).shape[1]
+        assert kpad == staged_pages, (
+            f"req {req.req_id}: tail bucket {kpad} != staged {staged_pages}"
+        )
+        jids = jnp.asarray(ids)
+        for nm, a in zip(names, payload):
+            self._scatter_staged(nm, jids, a)
+        tokens = self.kv_pool.lens.get(req.req_id, 0)
+        self._bt_host[slot, :] = self._sink
+        self._bt_len[slot] = 0
+        self._bt_dirty.add(slot)
         self.lens = self.lens.at[slot].set(tokens)
 
     def poison_kv(self, req: Request) -> None:
@@ -867,6 +985,8 @@ class ReplicaServer:
                 engine.swap_out, engine.swap_in,
                 cost_model=CostModel(CostModelConfig(noise_std=0.0)),
                 mode=engine.cfg.preemption_mode,
+                restorer_tail=engine.swap_in_tail,
+                payload_slicer=engine.slice_swap_payload,
             )
         # bubble accounting is per-serve: drop any history (and the
         # ready-stamp of a previous serve, which would read as one giant

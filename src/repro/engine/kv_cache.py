@@ -36,6 +36,21 @@ Beyond flat accounting, the pool implements the full KV lifecycle:
   — or even re-bind — the victim yet), ``SWAPPED_OUT`` once the payload is
   host-resident.  Blocks referenced by live tables are implicitly
   ``RESIDENT``.
+* **Managed host tier** — the staging store is a real second cache level,
+  not an unbounded spill area: a ``HostTier`` byte budget
+  (``host_max_bytes``) is charged at swap-out and released at
+  restore/drop/export.  When a reservation does not fit, the pool evicts
+  its oldest staged records (stage-time LRU) — the evicted victim is
+  *demoted to recompute*: the scheduler notices the record vanished and
+  folds the request via ``Request.preempt()``, so nothing ever leaks, it
+  just re-prefills.  Opt-in ``host_kv_dtype="int8"`` stores host pages
+  quantized (per-page-per-head absmax scales, fused into the swap
+  kernels), roughly halving the bytes a staged token charges.  Records can
+  also be *shrunk to their decode-hot tail* (``shrink_swap_to_tail``) so a
+  fragmented pool restores the last ``k`` blocks decode-resumable and only
+  re-prefills the evicted prefix (``swap_in_tail``).  One ``HostTier`` may
+  be shared by several pools and the cross-replica handoff store, closing
+  one byte ledger over the whole host footprint.
 
 Invariant (``check_invariants``):  ``free + evictable + referenced ==
 n_blocks``; refcounts are never negative; every table entry references a
@@ -92,6 +107,86 @@ class _SwapRecord:
     # content-addressed on THIS pool at swap-in, so later placement probes
     # (``probe_prefix``) see the prefix as resident here
     seal_on_restore: bool = False
+    # host-tier accounting: bytes this record charges against the HostTier
+    # budget (0 for accounting-only pools with bytes_per_token == 0)
+    nbytes: int = 0
+    # payload stored as INT8 pages + per-page-per-head scales (host_kv_dtype)
+    quantized: bool = False
+    # partial swap-in: > 0 marks a record shrunk to its decode-hot tail —
+    # only blocks [tail_start_blocks, n_blocks) remain staged; the prefix
+    # must be re-prefilled before ``swap_in_tail`` appends the tail
+    tail_start_blocks: int = 0
+
+
+@dataclass
+class HostTierStats:
+    """Byte ledger of the host staging tier.  Closes every step:
+    ``put_bytes - freed_bytes == resident_bytes`` and, with a budget set,
+    ``resident_bytes <= max_bytes`` always."""
+
+    put_bytes: int = 0                # Σ bytes ever charged
+    freed_bytes: int = 0              # Σ bytes ever released
+    resident_bytes: int = 0           # currently charged
+    peak_bytes: int = 0               # high-water mark of resident_bytes
+    evictions: int = 0                # staged records evicted, all causes
+    swap_evictions: int = 0           # ... evicted to fit a new swap-out
+    handoff_evictions: int = 0        # ... evicted to fit a handoff import
+
+
+class HostTier:
+    """Byte-budgeted host staging tier shared by swap records and (optionally)
+    the cross-replica handoff store.  The tier itself only keeps the ledger;
+    *what* to evict is the owning pool's call (stage-time LRU over its own
+    records) — reservations must therefore be gated by the caller
+    (``host_can_stage``) so ``charge`` never has to fail halfway through a
+    swap-out."""
+
+    def __init__(self, max_bytes: Optional[int] = None):
+        assert max_bytes is None or max_bytes >= 0
+        self.max_bytes = max_bytes
+        self.stats = HostTierStats()
+
+    def can_fit(self, nbytes: int) -> bool:
+        return (self.max_bytes is None
+                or self.stats.resident_bytes + nbytes <= self.max_bytes)
+
+    def charge(self, nbytes: int) -> None:
+        assert nbytes >= 0
+        assert self.can_fit(nbytes), (
+            f"host tier over budget: {self.stats.resident_bytes} + {nbytes} "
+            f"> {self.max_bytes} (caller must gate on host_can_stage)"
+        )
+        st = self.stats
+        st.put_bytes += nbytes
+        st.resident_bytes += nbytes
+        st.peak_bytes = max(st.peak_bytes, st.resident_bytes)
+
+    def release(self, nbytes: int) -> None:
+        st = self.stats
+        assert 0 <= nbytes <= st.resident_bytes, (
+            f"host tier ledger underflow: release {nbytes} of "
+            f"{st.resident_bytes} resident"
+        )
+        st.freed_bytes += nbytes
+        st.resident_bytes -= nbytes
+
+    def note_eviction(self, cause: str) -> None:
+        self.stats.evictions += 1
+        field_name = f"{cause}_evictions"
+        setattr(self.stats, field_name,
+                getattr(self.stats, field_name) + 1)
+
+    def check_invariants(self) -> None:
+        st = self.stats
+        assert st.resident_bytes >= 0, "negative host-tier residency"
+        assert st.put_bytes - st.freed_bytes == st.resident_bytes, (
+            f"host tier ledger drift: put {st.put_bytes} - freed "
+            f"{st.freed_bytes} != resident {st.resident_bytes}"
+        )
+        if self.max_bytes is not None:
+            assert st.resident_bytes <= self.max_bytes, (
+                f"host tier over budget: {st.resident_bytes} > {self.max_bytes}"
+            )
 
 
 @dataclass
@@ -106,6 +201,14 @@ class KVPoolConfig:
     # None = unbounded (cache grows until demand reclaims it)
     cache_max_blocks: Optional[int] = None   # capacity cap on parked blocks
     cache_ttl_s: Optional[float] = None      # evict blocks idle longer than this
+    # host staging tier: byte budget over staged swap records (None =
+    # unbounded, the pre-tier behavior); reservations past the budget evict
+    # the oldest staged records, demoting their victims to recompute
+    host_max_bytes: Optional[int] = None
+    # "auto" stages pages in the device dtype; "int8" quantizes host pages
+    # (per-page-per-head absmax scales) — a staged token charges roughly
+    # half the bytes against host_max_bytes
+    host_kv_dtype: str = "auto"
 
 
 @dataclass
@@ -125,6 +228,8 @@ class KVPoolStats:
     swapped_in_tokens: int = 0        # Σ tokens moved host -> device
     handoff_exports: int = 0          # staged records exported to another pool
     handoff_imports: int = 0          # staged records imported from another pool
+    partial_swap_ins: int = 0         # tail-only restores (partial swap-in)
+    tail_tokens_restored: int = 0     # Σ tokens restored via swap_in_tail
 
     @property
     def hit_rate(self) -> float:
@@ -160,8 +265,14 @@ class KVBlockPool:
         self._evictable: "OrderedDict[int, int]" = OrderedDict()  # block_id -> hash
         self._parked_at: Dict[int, float] = {}     # block_id -> park clock (TTL)
         self._now = 0.0                            # advanced by the scheduler
-        # host-side swap staging: req_id -> _SwapRecord (disjoint from tables)
+        # host-side swap staging: req_id -> _SwapRecord (disjoint from tables).
+        # Insertion order == stage-time order: the dict doubles as the host
+        # tier's eviction LRU (oldest staged record evicts first).
         self._swap: Dict[int, _SwapRecord] = {}
+        # host tier: private by default; attach_host_tier shares one budget
+        # across several pools and the handoff store
+        self.host = HostTier(cfg.host_max_bytes)
+        self._host_charged = 0        # bytes THIS pool holds in the tier
         # per-request registration + per-tenant accounting
         self._reg: Dict[int, _Registration] = {}
         self._tenant_used: Dict[str, int] = {}     # tenant -> charged blocks
@@ -472,6 +583,60 @@ class KVBlockPool:
             else:
                 self._reg.pop(req_id, None)
 
+    # -- host staging tier ------------------------------------------------------
+    def attach_host_tier(self, tier: HostTier) -> None:
+        """Share one ``HostTier`` budget with other pools / the handoff
+        store.  Must happen before anything is staged here (the private
+        tier's charges cannot be migrated)."""
+        assert self._host_charged == 0 and not self._swap, (
+            "attach_host_tier after records were staged"
+        )
+        self.host = tier
+
+    def host_bytes_for(self, tokens: int) -> int:
+        """Bytes a staged record of this many tokens charges the host tier.
+        INT8 staging halves the payload (the per-page scales are small
+        against the page itself and are folded into the estimate)."""
+        nb = tokens * self.cfg.bytes_per_token
+        if self.cfg.host_kv_dtype == "int8":
+            nb //= 2
+        return nb
+
+    def host_can_stage(self, tokens: int) -> bool:
+        """True when a swap-out of this many tokens can be staged after
+        evicting every one of THIS pool's own records if need be.  Bytes
+        charged by co-tenants of a shared tier (other pools, the handoff
+        store) are not evictable from here."""
+        if self.host.max_bytes is None:
+            return True
+        nbytes = self.host_bytes_for(tokens)
+        pinned = self.host.stats.resident_bytes - self._host_charged
+        return nbytes <= self.host.max_bytes - pinned
+
+    def _host_evict_oldest(self, cause: str) -> int:
+        """Evict the oldest staged record (stage-time LRU) to make host
+        room.  The evicted request is DEMOTED: its KV is gone from both
+        tiers, so the scheduler folds it via ``Request.preempt()`` when it
+        notices the record vanished — a recompute, never a leak.  Returns
+        the demoted req_id."""
+        assert self._swap, "host eviction from an empty staging store"
+        req_id = next(iter(self._swap))
+        rec = self._swap.pop(req_id)
+        self.host.release(rec.nbytes)
+        self._host_charged -= rec.nbytes
+        self.host.note_eviction(cause)
+        return req_id
+
+    def _host_reserve(self, nbytes: int, *, cause: str = "swap") -> None:
+        while not self.host.can_fit(nbytes) and self._swap:
+            self._host_evict_oldest(cause)
+        self.host.charge(nbytes)      # asserts fit: callers gate on
+        self._host_charged += nbytes  # host_can_stage first
+
+    def _host_release(self, rec: _SwapRecord) -> None:
+        self.host.release(rec.nbytes)
+        self._host_charged -= rec.nbytes
+
     # -- swap-out preemption (host staging) ------------------------------------
     def swap_out(self, req_id: int, *, ready: bool = False) -> _SwapRecord:
         """Move a request's KV accounting from its block table to a host-side
@@ -492,11 +657,17 @@ class KVBlockPool:
         assert table, f"swap_out of req {req_id} with no blocks"
         assert req_id not in self._swap, f"req {req_id} already swapped"
         tokens = self.lens.get(req_id, 0)
+        nbytes = self.host_bytes_for(tokens)
+        # reserve host bytes FIRST (may demote older staged victims); the
+        # new record is not in _swap yet, so it can never evict itself
+        self._host_reserve(nbytes, cause="swap")
         rec = _SwapRecord(
             tokens=tokens,
             n_blocks=len(table),
             tenant=self.tenant_of(req_id),
             state=BlockState.SWAPPED_OUT if ready else BlockState.SWAPPING,
+            nbytes=nbytes,
+            quantized=self.cfg.host_kv_dtype == "int8",
         )
         reg = self._reg.get(req_id)
         sealed = reg.sealed if reg is not None else 0
@@ -550,9 +721,10 @@ class KVBlockPool:
         rec = self._swap.get(req_id)
         if rec is None or rec.state != BlockState.SWAPPED_OUT:
             return False
-        if rec.n_blocks > self.allocatable_blocks():
+        need = rec.n_blocks - rec.tail_start_blocks
+        if need > self.allocatable_blocks():
             return False
-        return rec.n_blocks <= self.quota_headroom_blocks(
+        return need <= self.quota_headroom_blocks(
             tenant or self.tenant_of(req_id)
         )
 
@@ -568,6 +740,9 @@ class KVBlockPool:
         assert rec is not None, f"swap_in of unswapped req {req_id}"
         assert rec.state == BlockState.SWAPPED_OUT, (
             f"req {req_id} swap still in flight ({rec.state})"
+        )
+        assert rec.tail_start_blocks == 0, (
+            f"req {req_id} shrunk to tail: restore via swap_in_tail"
         )
         t = tenant if tenant is not None else rec.tenant
         if rec.n_blocks > self.allocatable_blocks():
@@ -589,6 +764,7 @@ class KVBlockPool:
         self.lens[req_id] = rec.tokens
         self._tenant_used[t] = self._tenant_used.get(t, 0) + rec.n_blocks
         self._swap.pop(req_id)
+        self._host_release(rec)
         self.stats.swap_ins += 1
         self.stats.swapped_in_tokens += rec.tokens
         if rec.seal_on_restore:
@@ -603,7 +779,95 @@ class KVBlockPool:
     def drop_swap(self, req_id: int) -> None:
         """Discard a staging record without restoring (finished/cancelled
         victim, or a caller falling back to recompute).  Idempotent."""
-        self._swap.pop(req_id, None)
+        rec = self._swap.pop(req_id, None)
+        if rec is not None:
+            self._host_release(rec)
+
+    # -- partial swap-in (decode-hot tail) -------------------------------------
+    def swap_tail_start(self, req_id: int) -> int:
+        """0 for a whole-record stage; otherwise the block index the staged
+        payload starts at (the prefix before it must be re-prefilled)."""
+        rec = self._swap.get(req_id)
+        return rec.tail_start_blocks if rec is not None else 0
+
+    def shrink_swap_to_tail(self, req_id: int, tail_start_blocks: int,
+                            payload_slicer=None) -> None:
+        """Shrink a staged record to its decode-hot tail: blocks
+        ``[tail_start_blocks, n_blocks)`` stay staged, the prefix bytes are
+        released from the host tier, and the owning request — which the
+        caller has folded via ``Request.preempt()`` — re-prefills the
+        prefix chunk-by-chunk before ``swap_in_tail`` appends the tail.
+        ``payload_slicer(payload, tail_start_blocks, n_blocks)`` trims the
+        engine arrays (accounting-only users pass None)."""
+        rec = self._swap.get(req_id)
+        assert rec is not None, f"shrink of unswapped req {req_id}"
+        assert rec.state == BlockState.SWAPPED_OUT, (
+            f"req {req_id} shrink while swap in flight ({rec.state})"
+        )
+        assert rec.tail_start_blocks == 0, f"req {req_id} already shrunk"
+        assert 0 < tail_start_blocks < rec.n_blocks, (
+            f"tail split {tail_start_blocks} outside (0, {rec.n_blocks})"
+        )
+        freed = min(
+            rec.nbytes,
+            self.host_bytes_for(tail_start_blocks * self.cfg.block_size),
+        )
+        self.host.release(freed)
+        self._host_charged -= freed
+        rec.nbytes -= freed
+        rec.tail_start_blocks = tail_start_blocks
+        if payload_slicer is not None and rec.payload is not None:
+            rec.payload = payload_slicer(
+                rec.payload, tail_start_blocks, rec.n_blocks)
+
+    def swap_in_tail(self, req_id: int,
+                     tenant: Optional[str] = None) -> Tuple[List[int], object]:
+        """Complete a partial restore: the request has re-prefilled exactly
+        the evicted prefix (``tail_start_blocks`` full blocks), so append
+        fresh device blocks for the staged tail and hand back the trimmed
+        payload for the engine scatter.  The request's stored length jumps
+        to the record's full length — positions align because the prefix
+        re-prefill was clipped to the block-exact split point."""
+        rec = self._swap.get(req_id)
+        assert rec is not None, f"swap_in_tail of unswapped req {req_id}"
+        assert rec.state == BlockState.SWAPPED_OUT, (
+            f"req {req_id} swap still in flight ({rec.state})"
+        )
+        d = rec.tail_start_blocks
+        assert d > 0, f"req {req_id} not shrunk: restore via swap_in"
+        bs = self.cfg.block_size
+        table = self.tables.get(req_id, [])
+        assert len(table) == d and self.lens.get(req_id, 0) == d * bs, (
+            f"req {req_id} tail restore off the split: holds {len(table)} "
+            f"blocks / {self.lens.get(req_id, 0)} tokens, split at {d} blocks"
+        )
+        need = rec.n_blocks - d
+        t = tenant if tenant is not None else rec.tenant
+        if need > self.allocatable_blocks():
+            raise MemoryError(
+                f"KV pool exhausted on tail swap-in: need {need} blocks, "
+                f"have {self.allocatable_blocks()}"
+            )
+        if need > self.quota_headroom_blocks(t):
+            raise KVQuotaExceeded(
+                f"tenant {t!r} KV quota exhausted on tail swap-in: need "
+                f"{need} blocks, quota {self._tenant_quota.get(t)}, "
+                f"used {self._tenant_used.get(t, 0)}"
+            )
+        got = [self._pop_block() for _ in range(need)]
+        for bid in got:
+            self._ref[bid] = 1
+        self.tables[req_id].extend(got)
+        self.lens[req_id] = rec.tokens
+        self._tenant_used[t] = self._tenant_used.get(t, 0) + need
+        self._swap.pop(req_id)
+        self._host_release(rec)
+        tail_tokens = rec.tokens - d * bs
+        self.stats.swap_ins += 1
+        self.stats.partial_swap_ins += 1
+        self.stats.swapped_in_tokens += tail_tokens
+        self.stats.tail_tokens_restored += tail_tokens
+        return got, rec.payload
 
     # -- cross-replica KV handoff (disaggregated prefill/decode pools) ---------
     def export_swap(self, req_id: int, *, allow_inflight: bool = False
@@ -626,9 +890,10 @@ class KVBlockPool:
             f"req {req_id} exported while holding a live table"
         )
         del self._swap[req_id]           # validate first: a rejected export
-        reg = self._reg.pop(req_id, None)       # must leave the pool intact
-        self.stats.handoff_exports += 1
-        return rec, reg
+        self._host_release(rec)          # the handoff store re-charges the
+        reg = self._reg.pop(req_id, None)       # (shared) tier on put; a
+        self.stats.handoff_exports += 1         # rejected export leaves the
+        return rec, reg                         # pool intact
 
     def import_swap(self, req_id: int, rec: _SwapRecord,
                     reg: Optional["_Registration"] = None) -> None:
@@ -651,6 +916,10 @@ class KVBlockPool:
                 block_hashes=list(reg.block_hashes),
             )
             self._reg[req_id] = fresh
+        # the adopted record charges THIS pool's host tier (with a shared
+        # tier the store's take() released the same bytes, so it fits by
+        # construction; a private tier may demote older local records)
+        self._host_reserve(rec.nbytes, cause="handoff")
         rec.seal_on_restore = self.cfg.enable_prefix_cache
         self._swap[req_id] = rec
         self.stats.handoff_imports += 1
@@ -677,11 +946,18 @@ class KVBlockPool:
         indexed prompt prefix.  The scheduler's cache-aware aging credit
         scores queue candidates with this."""
         held = self.lens.get(req_id, 0)
-        if held:
-            return held
         rec = self._swap.get(req_id)
         if rec is not None:
+            # quantized-resident counts in full: an int8 page restores a
+            # usable token exactly like an fp one, so the cache-aware aging
+            # credit (and SLO victim ranking through it) prices both tiers
+            # the same.  A tail-shrunk record contributes its staged tail on
+            # top of the re-prefilled prefix the request already holds.
+            if rec.tail_start_blocks > 0:
+                return held + rec.tokens - rec.tail_start_blocks * self.cfg.block_size
             return rec.tokens
+        if held:
+            return held
         reg = self._reg.get(req_id)
         if reg is None or not reg.block_hashes:
             return 0
@@ -707,8 +983,10 @@ class KVBlockPool:
     @property
     def swapped_out_blocks(self) -> int:
         """Device blocks the currently-swapped requests will re-allocate on
-        restore (their data is host-side; no device blocks are pinned now)."""
-        return sum(rec.n_blocks for rec in self._swap.values())
+        restore (their data is host-side; no device blocks are pinned now).
+        Tail-shrunk records only re-allocate their staged tail."""
+        return sum(rec.n_blocks - rec.tail_start_blocks
+                   for rec in self._swap.values())
 
     @property
     def used_mb(self) -> float:
@@ -769,15 +1047,32 @@ class KVBlockPool:
                     f"block {bid} shared by {self._ref[bid]} tables but not sealed"
                 )
         # swap-staging invariants: a request's tokens live in exactly one of
-        # {block table, staging entry} — never both; a staged entry always
-        # carries real tokens and a positive restore size
+        # {block table, staging entry} — never both (a tail-shrunk record
+        # splits block-exactly: the table holds the re-prefilled prefix, the
+        # record the staged tail, disjoint by position); a staged entry
+        # always carries real tokens and a positive restore size
         for req_id, rec in self._swap.items():
-            assert not self.tables.get(req_id), (
-                f"req {req_id} swapped AND holding a live table"
-            )
-            assert req_id not in self.lens, (
-                f"req {req_id} swapped AND holding a device length"
-            )
+            if rec.tail_start_blocks > 0:
+                assert 0 < rec.tail_start_blocks < rec.n_blocks, (
+                    f"req {req_id} tail split {rec.tail_start_blocks} outside "
+                    f"(0, {rec.n_blocks})"
+                )
+                assert len(self.tables.get(req_id, ())) <= rec.tail_start_blocks, (
+                    f"req {req_id} re-prefilled past the tail split: "
+                    f"{len(self.tables.get(req_id, ()))} blocks held, "
+                    f"split at {rec.tail_start_blocks}"
+                )
+                assert self.lens.get(req_id, 0) <= rec.tail_start_blocks * bs, (
+                    f"req {req_id} prefix length {self.lens.get(req_id, 0)} "
+                    f"past the tail split token {rec.tail_start_blocks * bs}"
+                )
+            else:
+                assert not self.tables.get(req_id), (
+                    f"req {req_id} swapped AND holding a live table"
+                )
+                assert req_id not in self.lens, (
+                    f"req {req_id} swapped AND holding a device length"
+                )
             assert rec.tokens > 0 and rec.n_blocks > 0, (
                 f"req {req_id} empty swap record {rec}"
             )
@@ -785,6 +1080,19 @@ class KVBlockPool:
                 f"req {req_id} swap record overfull: {rec.tokens} tokens in "
                 f"{rec.n_blocks} blocks of {bs}"
             )
+            assert rec.nbytes >= 0, f"req {req_id} negative staged bytes"
+        # host-tier ledger: this pool's records account exactly for its
+        # charges; the tier's own ledger closes (and respects the budget)
+        assert self._host_charged == sum(
+            rec.nbytes for rec in self._swap.values()
+        ), (
+            f"host charge drift: pool holds {self._host_charged} bytes, "
+            f"records sum to {sum(r.nbytes for r in self._swap.values())}"
+        )
+        self.host.check_invariants()
+        assert self._host_charged <= self.host.stats.resident_bytes, (
+            "pool charged more than the tier holds"
+        )
         # cache-bound invariants: parked set == evictable set; capacity holds
         assert set(self._parked_at) == set(self._evictable), "stamp/LRU drift"
         if self.cfg.cache_max_blocks is not None:
@@ -803,7 +1111,9 @@ def pool_for_model(cfg_model, *, n_blocks: int = 8192, block_size: int = 16,
                    hbm_mb: float = 16 * 1024.0,
                    enable_prefix_cache: bool = False,
                    cache_max_blocks: Optional[int] = None,
-                   cache_ttl_s: Optional[float] = None) -> KVBlockPool:
+                   cache_ttl_s: Optional[float] = None,
+                   host_max_bytes: Optional[int] = None,
+                   host_kv_dtype: str = "auto") -> KVBlockPool:
     """Size bytes_per_token from a ModelConfig (attention layers only)."""
     hd = cfg_model.resolved_head_dim
     if cfg_model.attn_every:
@@ -824,5 +1134,7 @@ def pool_for_model(cfg_model, *, n_blocks: int = 8192, block_size: int = 16,
             enable_prefix_cache=enable_prefix_cache,
             cache_max_blocks=cache_max_blocks,
             cache_ttl_s=cache_ttl_s,
+            host_max_bytes=host_max_bytes,
+            host_kv_dtype=host_kv_dtype,
         )
     )

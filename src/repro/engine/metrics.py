@@ -113,6 +113,15 @@ class MemoryReport:
     swap_restores: int = 0           # staged victims swapped back in
     swapped_out_tokens: int = 0      # Σ tokens moved device -> host
     swapped_in_tokens: int = 0       # Σ tokens moved host -> device
+    # tiered KV hierarchy (0 everywhere without the host tier knobs)
+    prefetched_restores: int = 0     # restores run early with leftover capacity
+    restore_wait_rounds: int = 0     # Σ rounds victims spent host-staged
+    host_demotions: int = 0          # staged records evicted under the budget
+    partial_restores: int = 0        # tail-only swap-ins (prefix recomputed)
+    tail_restored_tokens: int = 0
+    host_resident_bytes: int = 0     # host-tier occupancy at end of run
+    host_peak_bytes: int = 0
+    host_evictions: int = 0          # tier-side eviction count (all causes)
 
     def row(self) -> Dict[str, float]:
         return {
@@ -124,6 +133,11 @@ class MemoryReport:
             "kv_utilization": self.utilization,
             "swap_preemptions": float(self.swap_preemptions),
             "swap_restores": float(self.swap_restores),
+            "prefetched_restores": float(self.prefetched_restores),
+            "restore_wait_rounds": float(self.restore_wait_rounds),
+            "host_demotions": float(self.host_demotions),
+            "partial_restores": float(self.partial_restores),
+            "host_peak_bytes": float(self.host_peak_bytes),
         }
 
 
@@ -149,6 +163,14 @@ def summarize_memory(pool, scheduler_stats=None) -> MemoryReport:
         swap_restores=getattr(scheduler_stats, "swap_restores", 0),
         swapped_out_tokens=s.swapped_out_tokens,
         swapped_in_tokens=s.swapped_in_tokens,
+        prefetched_restores=getattr(scheduler_stats, "prefetched_restores", 0),
+        restore_wait_rounds=getattr(scheduler_stats, "restore_wait_rounds", 0),
+        host_demotions=getattr(scheduler_stats, "host_demotions", 0),
+        partial_restores=getattr(scheduler_stats, "partial_restores", 0),
+        tail_restored_tokens=getattr(scheduler_stats, "tail_restored_tokens", 0),
+        host_resident_bytes=pool.host.stats.resident_bytes,
+        host_peak_bytes=pool.host.stats.peak_bytes,
+        host_evictions=pool.host.stats.evictions,
     )
 
 

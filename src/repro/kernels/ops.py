@@ -20,7 +20,10 @@ from repro.kernels.paged_prefill_attention import (
     paged_prefill_attention,
     paged_prefill_attention_fused,
 )
-from repro.kernels.swap import swap_gather_pages, swap_scatter_pages
+from repro.kernels.swap import (
+    swap_gather_pages, swap_gather_pages_q8, swap_scatter_pages,
+    swap_scatter_pages_q8,
+)
 
 _ON_TPU = None
 
@@ -145,4 +148,22 @@ def scatter_swap_pages(pages, ids, staged, *, use_pallas: bool = True):
     (swap-in restore; ``pages`` is donated and updated in place)."""
     return swap_scatter_pages(
         pages, ids, staged, use_pallas=use_pallas, interpret=not on_tpu()
+    )
+
+
+def gather_swap_pages_q8(pages, ids, *, use_pallas: bool = True):
+    """Gather + INT8-quantize staging pages in one fused pass (host tier
+    with ``host_kv_dtype="int8"``): returns ``(q, scales)``."""
+    return swap_gather_pages_q8(
+        pages, ids, use_pallas=use_pallas, interpret=not on_tpu()
+    )
+
+
+def scatter_swap_pages_q8(pages, ids, q_staged, scales, *,
+                          use_pallas: bool = True):
+    """Dequantize + scatter INT8 staging pages back into physical pages
+    (``pages`` donated and updated in place)."""
+    return swap_scatter_pages_q8(
+        pages, ids, q_staged, scales, use_pallas=use_pallas,
+        interpret=not on_tpu()
     )

@@ -140,6 +140,33 @@ def paged_decode_attention_fused_ref(q, kv_pages, block_tables, kv_lens):
     return paged_decode_attention_ref(q, k_pages, v_pages, block_tables, kv_lens)
 
 
+def quantize_pages(pages):
+    """INT8-quantize staged KV pages with per-page-per-head absmax scales.
+
+    ``pages``: ``(L, n_pages, page_size, H, hd)`` (H is ``Hkv`` for the
+    split layout, ``2*Hkv`` for the fused head-interleaved one — per-head
+    scales keep K and V independently scaled either way).  Returns
+    ``(q, scales)`` with ``q`` int8 of the same shape and ``scales`` f32
+    ``(L, n_pages, 1, H, 1)`` sized so ``q * scales`` broadcasts back.
+
+    The scale is ``absmax / 127`` per (layer, page, head): symmetric, no
+    zero point — KV activations are roughly zero-centered, and symmetry
+    keeps the dequant a single multiply in the scatter kernel.  An all-zero
+    page quantizes to zeros with scale 0 (guarded against 0/0).
+    """
+    x = pages.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=(2, 4), keepdims=True)
+    scales = amax / 127.0
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    return q, scales
+
+
+def dequantize_pages(q, scales, dtype):
+    """Inverse of ``quantize_pages``: ``q * scales`` cast to the pool dtype."""
+    return (q.astype(jnp.float32) * scales).astype(dtype)
+
+
 def fused_swiglu_ref(x, w_gate, w_up, w_down):
     """x: (M, D); w_gate/w_up: (D, F); w_down: (F, D) -> (M, D), f32 math."""
     xf = x.astype(jnp.float32)

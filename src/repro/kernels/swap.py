@@ -27,14 +27,24 @@ The pure-jnp oracles (``use_pallas=False``) are the A/B reference: fancy
 indexing for the gather, ``.at[].set`` for the scatter.  On CPU the kernels
 run in interpret mode (correctness, not speed); on TPU the same calls
 compile to Mosaic.
+
+The INT8 host-tier variants (``*_q8``) fuse the quantization into the same
+data movement: the gather DMAs each page into VMEM scratch, computes a
+per-(layer, page, head) absmax scale on the fly, and writes an int8 page
+plus its scales; the scatter dequantizes in VMEM before the async copy into
+the (donated) physical pool.  The host round-trip then moves ~half the
+bytes, and the device pool never sees a quantized value.
 """
 from __future__ import annotations
 
 import functools
 
 import jax
+import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
+
+from repro.kernels.ref import dequantize_pages, quantize_pages
 
 
 def _gather_kernel(ids_ref, pages_ref, out_ref, sem):
@@ -118,3 +128,115 @@ def swap_scatter_pages(pages, ids, staged, *, use_pallas: bool = False,
         input_output_aliases={2: 0},
         interpret=interpret,
     )(ids, staged.astype(pages.dtype), pages)
+
+
+def _gather_q8_kernel(ids_ref, pages_ref, q_ref, scale_ref, scratch, sem):
+    l = pl.program_id(0)
+    i = pl.program_id(1)
+    pid = ids_ref[i]
+    cp = pltpu.make_async_copy(pages_ref.at[l, pid], scratch, sem)
+    cp.start()
+    cp.wait()
+    x = scratch[...].astype(jnp.float32)          # (page_size, H, hd)
+    amax = jnp.max(jnp.abs(x), axis=(0, 2), keepdims=True)   # (1, H, 1)
+    scale = amax / 127.0
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q_ref[0, 0] = jnp.clip(jnp.round(x / safe), -127, 127).astype(jnp.int8)
+    scale_ref[0, 0] = scale
+
+
+def _scatter_q8_kernel(ids_ref, q_ref, scale_ref, pages_in_ref,
+                       pages_out_ref, scratch, sem):
+    del pages_in_ref                   # aliased with pages_out_ref (in-place)
+    l = pl.program_id(0)
+    i = pl.program_id(1)
+    pid = ids_ref[i]
+    x = q_ref[0, 0].astype(jnp.float32) * scale_ref[0, 0]
+    scratch[...] = x.astype(scratch.dtype)
+    cp = pltpu.make_async_copy(scratch, pages_out_ref.at[l, pid], sem)
+    cp.start()
+    cp.wait()
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def swap_gather_pages_q8(pages, ids, *, use_pallas: bool = False,
+                         interpret: bool = True):
+    """Gather ``pages[:, ids]`` and quantize to INT8 in one pass.
+
+    Same indirection and padding contract as ``swap_gather_pages``; returns
+    ``(q, scales)``: int8 ``(L, n, page_size, H, hd)`` staging pages plus
+    f32 per-(layer, page, head) absmax scales ``(L, n, 1, H, 1)``.  The
+    quantization happens in VMEM right after each page's DMA lands, so the
+    host copy moves int8 pages, never the full-width staging tensor.
+    """
+    if not use_pallas:
+        return quantize_pages(pages[:, ids])
+    L = pages.shape[0]
+    n = ids.shape[0]
+    ps, H, hd = pages.shape[2:]
+    qblk = (1, 1, ps, H, hd)
+    sblk = (1, 1, 1, H, 1)
+    return pl.pallas_call(
+        _gather_q8_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(L, n),
+            in_specs=[pl.BlockSpec(memory_space=pltpu.ANY)],
+            out_specs=[
+                pl.BlockSpec(qblk, lambda l, i, ids: (l, i, 0, 0, 0)),
+                pl.BlockSpec(sblk, lambda l, i, ids: (l, i, 0, 0, 0)),
+            ],
+            scratch_shapes=[
+                pltpu.VMEM((ps, H, hd), pages.dtype),
+                pltpu.SemaphoreType.DMA,
+            ],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((L, n, ps, H, hd), jnp.int8),
+            jax.ShapeDtypeStruct((L, n, 1, H, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(ids, pages)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"),
+                   donate_argnums=(0,))
+def swap_scatter_pages_q8(pages, ids, q_staged, scales, *,
+                          use_pallas: bool = False, interpret: bool = True):
+    """Dequantize INT8 staging pages and scatter them into physical pages:
+    ``pages[:, ids] = q_staged * scales``, in place (``pages`` donated).
+
+    Inverse of ``swap_gather_pages_q8`` — the dequant multiply runs in VMEM
+    on each page before its async copy, so the device pool only ever holds
+    full-width values.  Padding contract as ``swap_scatter_pages``.
+    """
+    if not use_pallas:
+        return pages.at[:, ids].set(
+            dequantize_pages(q_staged, scales, pages.dtype))
+    L = pages.shape[0]
+    n = ids.shape[0]
+    ps, H, hd = pages.shape[2:]
+    qblk = (1, 1, ps, H, hd)
+    sblk = (1, 1, 1, H, 1)
+    return pl.pallas_call(
+        _scatter_q8_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(L, n),
+            in_specs=[
+                pl.BlockSpec(qblk, lambda l, i, ids: (l, i, 0, 0, 0)),
+                pl.BlockSpec(sblk, lambda l, i, ids: (l, i, 0, 0, 0)),
+                pl.BlockSpec(memory_space=pltpu.ANY),
+            ],
+            out_specs=pl.BlockSpec(memory_space=pltpu.ANY),
+            scratch_shapes=[
+                pltpu.VMEM((ps, H, hd), pages.dtype),
+                pltpu.SemaphoreType.DMA,
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct(pages.shape, pages.dtype),
+        # alias indices count the scalar-prefetch operand: 0=ids, 1=q,
+        # 2=scales, 3=pages -> output 0
+        input_output_aliases={3: 0},
+        interpret=interpret,
+    )(ids, q_staged, scales, pages)

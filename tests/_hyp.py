@@ -10,7 +10,7 @@ marks the test skipped and ``st``/``settings`` become inert decoration-time
 stand-ins, so module import — and every non-property test — succeeds.
 """
 try:
-    from hypothesis import given, settings
+    from hypothesis import HealthCheck, given, settings
     from hypothesis import strategies as st
 
     HAVE_HYPOTHESIS = True
@@ -35,3 +35,4 @@ except ImportError:  # pragma: no cover - exercised only without hypothesis
             return lambda *a, **kw: None
 
     st = _StrategyStub()
+    HealthCheck = ()          # list(HealthCheck) -> no checks to suppress
